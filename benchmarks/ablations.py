@@ -1,0 +1,101 @@
+"""Beyond-paper ablations of the scheduler (the paper leaves these open).
+
+    PYTHONPATH=src python -m benchmarks.ablations
+
+* λ sensitivity — the Eq. (2) normalization scale (DESIGN.md fidelity
+  note): λ→0 recovers the paper's literal greedy collapse, λ→∞ decays
+  nothing (probabilities stay uniform -> policies degrade toward RR).
+* window-size sensitivity — §3.2's time-window length: bigger windows
+  give MLML better pairing context but stale loads within the window.
+* threshold sensitivity — §3.4.1's redirect guard on the Fig. 18
+  straggler workload: too high re-admits stragglers.
+* multi-client contention — private logs (no gossip) vs one shared log:
+  quantifies the client-side blind spot.
+"""
+
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+from repro.core import analysis, simulate
+from repro.core.policies import PolicyConfig
+from repro.core.simulate import SimConfig
+from repro.core.statlog import LogConfig
+
+BASE = SimConfig(n_servers=40, n_requests=600, n_trials=8,
+                 straggler_frac=0.10, straggler_factor=5.0)
+KEY = jax.random.key(0)
+
+
+def lam_sensitivity():
+    print("\n== λ (Eq. 2 normalization) sensitivity — TRH, stragglers ==")
+    print(f"{'lam':>12s} {'cv':>8s} {'strag_hit%':>11s}")
+    ref = simulate.default_log_cfg(BASE).lam
+    for lam in (ref / 100, ref / 10, ref, ref * 10, ref * 100):
+        log = LogConfig(n_servers=BASE.n_servers, lam=float(lam))
+        res = simulate.run_trials(KEY, BASE,
+                                  PolicyConfig(name="trh", threshold=5.0),
+                                  log)
+        cv = analysis.load_balance_stats(res.server_loads)["cv"]
+        hit = analysis.straggler_summary(res)["hit_fraction"]
+        tag = " (default)" if lam == ref else ""
+        print(f"{lam:12.1f} {cv:8.4f} {100*hit:11.2f}{tag}")
+
+
+def window_sensitivity():
+    print("\n== time-window size sensitivity — MLML (pairing context) ==")
+    print(f"{'window':>8s} {'cv_mlml':>9s} {'cv_trh':>8s}")
+    for w in (10, 50, 100, 300):
+        cfg = SimConfig(n_servers=BASE.n_servers,
+                        n_requests=BASE.n_requests, n_trials=BASE.n_trials,
+                        window_size=w)
+        log = simulate.default_log_cfg(cfg)
+        cvs = {}
+        for pol in ("mlml", "trh"):
+            res = simulate.run_trials(
+                KEY, cfg, PolicyConfig(name=pol, threshold=5.0), log)
+            cvs[pol] = analysis.load_balance_stats(res.server_loads)["cv"]
+        print(f"{w:8d} {cvs['mlml']:9.4f} {cvs['trh']:8.4f}")
+
+
+def threshold_sensitivity():
+    print("\n== redirect-threshold sensitivity — TRH, Fig. 18 workload ==")
+    print(f"{'threshold':>10s} {'strag_hit%':>11s} {'redirected':>10s}")
+    log = simulate.default_log_cfg(BASE)
+    mean_load = simulate.expected_server_load_mb(BASE)
+    for thr in (0.0, 5.0, mean_load / 4, mean_load, 4 * mean_load):
+        res = simulate.run_trials(KEY, BASE,
+                                  PolicyConfig(name="trh",
+                                               threshold=float(thr)), log)
+        hit = analysis.straggler_summary(res)["hit_fraction"]
+        red = float(np.asarray(res.redirected).mean())
+        print(f"{thr:10.1f} {100*hit:11.2f} {red:10.1f}")
+
+
+def contention():
+    print("\n== shared log vs private per-client logs (no gossip) ==")
+    print(f"{'model':>12s} {'clients':>8s} {'cv':>8s} {'strag_hit%':>11s}")
+    for model, nc in (("shared_log", 1), ("per_client", 10),
+                      ("per_client", 50)):
+        cfg = SimConfig(n_servers=20, n_clients=nc, n_requests=400,
+                        n_trials=6, client_model=model,
+                        straggler_frac=0.10, straggler_factor=5.0)
+        log = simulate.default_log_cfg(cfg)
+        res = simulate.run_trials(KEY, cfg,
+                                  PolicyConfig(name="trh", threshold=5.0),
+                                  log)
+        cv = analysis.load_balance_stats(res.server_loads)["cv"]
+        hit = analysis.straggler_summary(res)["hit_fraction"]
+        print(f"{model:>12s} {nc:8d} {cv:8.4f} {100*hit:11.2f}")
+
+
+def run_all():
+    lam_sensitivity()
+    window_sensitivity()
+    threshold_sensitivity()
+    contention()
+
+
+if __name__ == "__main__":
+    run_all()

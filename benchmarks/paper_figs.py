@@ -1,0 +1,171 @@
+"""Paper §4 evaluation benchmarks — one function per table/figure.
+
+Reproduces, at the paper's full scale (100 OSSs, 200 clients, 2,000
+requests, 100 trials):
+
+* Figs. 12-17 — per-OSS load distribution under RR / MLML / TRH / 1LTR /
+  2LTR (CSV + ascii plot + balance stats table);
+* Fig. 18     — straggler-injection experiment (10% of servers at 5x
+  average load): max requests landed per load bucket, per policy;
+* probe-message table — log-assisted policies vs the SC'14 two-choice
+  baseline (§1/§5 claim: zero probes);
+* nLTR n-sensitivity (n = 1, 2, 3) — §3.4.3 claim: n=2 suffices;
+* I/O completion-time simulation on the queueing cluster (phase time with
+  and without stragglers) — the end-metric the paper's balance serves.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Dict
+
+import jax
+import numpy as np
+
+from repro.core import analysis, simulate
+from repro.core.policies import PolicyConfig
+from repro.core.simulate import SimConfig
+from repro.io import IOClient, IOClientConfig, SimulatedCluster
+
+FULL = SimConfig()          # the paper's numbers: 100 OSS, 2000 reqs, 100 trials
+QUICK = SimConfig(n_servers=50, n_requests=800, n_trials=12)
+
+
+def _policies(threshold=5.0):
+    return {
+        "rr": PolicyConfig(name="rr"),
+        "mlml": PolicyConfig(name="mlml", threshold=threshold),
+        "trh": PolicyConfig(name="trh", threshold=threshold),
+        "1ltr": PolicyConfig(name="nltr", threshold=threshold, nltr_n=1),
+        "2ltr": PolicyConfig(name="nltr", threshold=threshold, nltr_n=2),
+        "two_choice": PolicyConfig(name="two_choice", threshold=threshold),
+    }
+
+
+def figs_12_17(cfg: SimConfig = QUICK, plot: bool = True) -> Dict[str, dict]:
+    """Load distribution per policy (Figs. 12-17)."""
+    log = simulate.default_log_cfg(cfg)
+    key = jax.random.key(0)
+    out = {}
+    print("\n== Figs 12-17: per-OSS load distribution "
+          f"(M={cfg.n_servers}, R={cfg.n_requests}, T={cfg.n_trials}) ==")
+    print(f"{'policy':>10s} {'mean':>9s} {'std':>9s} {'cv':>7s} "
+          f"{'max':>10s} {'spread':>10s} {'jain':>6s} {'time_s':>7s}")
+    for name, pol in _policies().items():
+        t0 = time.time()
+        res = simulate.run_trials(key, cfg, pol, log)
+        jax.block_until_ready(res.server_loads)
+        dt = time.time() - t0
+        st = analysis.load_balance_stats(res.server_loads)
+        out[name] = {"stats": st,
+                     "loads": analysis.mean_server_loads(res.server_loads)}
+        print(f"{name:>10s} {st['mean']:9.1f} {st['std']:9.1f} "
+              f"{st['cv']:7.3f} {st['max']:10.1f} {st['spread']:10.1f} "
+              f"{st['jain']:6.3f} {dt:7.2f}")
+    if plot:
+        for name in ("rr", "mlml", "trh"):
+            print(analysis.ascii_plot(np.sort(out[name]["loads"]),
+                                      label=f"Fig. sorted loads — {name}"))
+    return out
+
+
+def fig_18(cfg: SimConfig = None, plot: bool = True) -> Dict[str, dict]:
+    """Straggler injection: 10% of OSSs at 5x average load (Fig. 18)."""
+    cfg = cfg or SimConfig(n_servers=QUICK.n_servers,
+                           n_requests=QUICK.n_requests,
+                           n_trials=QUICK.n_trials,
+                           straggler_frac=0.10, straggler_factor=5.0)
+    log = simulate.default_log_cfg(cfg)
+    key = jax.random.key(0)
+    out = {}
+    print("\n== Fig 18: straggler avoidance (10% stragglers @5x) ==")
+    print(f"{'policy':>10s} {'strag_hit%':>10s} {'bytes->strag':>13s} "
+          f"{'max_load':>10s} {'probes/req':>10s}")
+    for name, pol in _policies().items():
+        res = simulate.run_trials(key, cfg, pol, log)
+        ss = analysis.straggler_summary(res)
+        probes = float(np.asarray(res.probe_msgs).mean()) / cfg.n_requests
+        out[name] = ss
+        print(f"{name:>10s} {100*ss['hit_fraction']:10.2f} "
+              f"{ss['mean_bytes_added_to_stragglers_mb']:13.1f} "
+              f"{ss['max_load']:10.1f} {probes:10.2f}")
+        xs, ys = analysis.fig18_curve(res.server_loads, res.n_assigned, 24)
+        out[name]["curve"] = (xs, ys)
+    if plot:
+        for name in ("rr", "trh"):
+            xs, ys = out[name]["curve"]
+            print(analysis.ascii_plot(ys,
+                                      label=f"Fig18 max-reqs vs load — {name}"))
+    return out
+
+
+def table_probe_overhead(cfg: SimConfig = QUICK) -> Dict[str, float]:
+    """Probe messages per request (the cost the client-side log removes)."""
+    log = simulate.default_log_cfg(cfg)
+    out = simulate.run_paper_eval(
+        seed=0, cfg=cfg,
+        policy_names=("rr", "mlml", "trh", "nltr", "two_choice"))
+    probes = analysis.probe_overhead(out, cfg.n_requests)
+    print("\n== Probe-message overhead (per request) ==")
+    for k, v in probes.items():
+        print(f"{k:>10s} {v:8.3f}")
+    return probes
+
+
+def nltr_sensitivity(cfg: SimConfig = QUICK) -> Dict[int, float]:
+    """nLTR n = 1, 2, 3 (§3.4.3: n=2 suffices; n=3 adds only overhead)."""
+    log = simulate.default_log_cfg(cfg)
+    key = jax.random.key(0)
+    print("\n== nLTR n-sensitivity ==")
+    out = {}
+    for n in (1, 2, 3):
+        t0 = time.time()
+        res = simulate.run_trials(
+            key, cfg, PolicyConfig(name="nltr", threshold=5.0, nltr_n=n),
+            log)
+        jax.block_until_ready(res.server_loads)
+        cv = analysis.load_balance_stats(res.server_loads)["cv"]
+        out[n] = cv
+        print(f"  n={n} (K={2**n:2d}): cv={cv:.4f}  "
+              f"wall={time.time()-t0:.2f}s")
+    return out
+
+
+def completion_time(n_servers: int = 24, n_files: int = 120,
+                    file_mb: float = 16.0) -> Dict[str, float]:
+    """End metric: synchronous I/O phase time on the queueing cluster with
+    one slow-rate straggler + one pre-loaded server."""
+    print("\n== Simulated I/O phase completion time (s) ==")
+    out = {}
+    for name in ("rr", "mlml", "trh", "nltr", "ect", "two_choice"):
+        sim = SimulatedCluster(n_servers, base_rate_mb_s=200.0, seed=3)
+        sim.make_straggler(1, 8.0)
+        sim.add_external_load(1, 800.0)
+        sim.add_external_load(5, 400.0)
+        cli = IOClient(sim, IOClientConfig(
+            policy=PolicyConfig(name=name, threshold=4.0)))
+        for s in range(n_servers):  # client knows current queue depths
+            cli.log.loads[s] = sim.queued_mb(s)
+        for f in range(n_files):
+            cli.write_file(f, size_mb=file_mb)
+        phase = cli.flush()
+        out[name] = phase
+        print(f"{name:>10s} {phase:8.2f}s  straggler_hits="
+              f"{sim.servers[1].n_requests:3d} probes={cli.probe_messages}")
+    return out
+
+
+def run_all(full: bool = False):
+    cfg = FULL if full else QUICK
+    figs_12_17(cfg)
+    fig_18(SimConfig(n_servers=cfg.n_servers, n_requests=cfg.n_requests,
+                     n_trials=cfg.n_trials, straggler_frac=0.10,
+                     straggler_factor=5.0))
+    table_probe_overhead(cfg)
+    nltr_sensitivity(cfg)
+    completion_time()
+
+
+if __name__ == "__main__":
+    import sys
+    run_all(full="--full" in sys.argv)

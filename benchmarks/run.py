@@ -1,0 +1,48 @@
+"""Benchmark driver: one section per paper table/figure + kernels + roofline.
+
+    PYTHONPATH=src python -m benchmarks.run [--full]
+
+``--full`` runs the paper's exact scale (100 OSS / 2,000 requests / 100
+trials); the default is a faster configuration with identical structure.
+The roofline section formats whatever ``dryrun_results.json`` the dry-run
+has produced so far.
+"""
+
+from __future__ import annotations
+
+import sys
+import time
+
+
+def main() -> None:
+    full = "--full" in sys.argv
+    t0 = time.time()
+    print("=" * 72)
+    print("repro benchmarks — log-assisted straggler-aware I/O scheduling")
+    print("=" * 72)
+
+    from benchmarks import paper_figs
+    paper_figs.run_all(full=full)
+
+    from benchmarks import sched_perf
+    sched_perf.run_all()
+
+    from benchmarks import kernels_bench
+    kernels_bench.run_all()
+
+    from benchmarks import roofline
+    import os
+    path = "dryrun_results.json"
+    if os.path.exists(path):
+        roofline.summary(path)
+        roofline.table(path, "16x16")
+        roofline.hillclimb_candidates(path)
+    else:
+        print("\n[roofline] dryrun_results.json not found — skip "
+              "(run python -m repro.launch.dryrun)")
+
+    print(f"\n[benchmarks] total wall time {time.time()-t0:.1f}s")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,98 @@
+"""§Perf hillclimb C — the paper's own technique: I/O phase completion time.
+
+The metric is the *synchronous I/O phase time* on the queueing cluster
+(the quantity the paper's load balance ultimately serves, Fig. 1): 24
+servers at 200 MB/s, one slow-rate straggler (8x) with 800 MB of foreign
+queue, one half-loaded server; 120 files x 16 MB written through the
+client.  Each iteration follows hypothesis -> change -> measure; results
+are recorded in EXPERIMENTS.md §Perf.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional
+
+from repro.core.policies import PolicyConfig
+from repro.io import IOClient, IOClientConfig, SimulatedCluster
+from repro.io.striping import MB
+
+
+def phase_time(policy: str, threshold: float = 4.0,
+               stripe_mb: float = 4.0, n_files: int = 120,
+               file_mb: float = 16.0, lam: float = 32.0,
+               know_loads: bool = True, warm_probs: bool = False,
+               refresh: bool = False, seed: int = 3) -> Dict[str, float]:
+    sim = SimulatedCluster(24, base_rate_mb_s=200.0, seed=seed)
+    sim.make_straggler(1, 8.0)
+    sim.add_external_load(1, 800.0)
+    sim.add_external_load(5, 400.0)
+    cli = IOClient(sim, IOClientConfig(
+        policy=PolicyConfig(name=policy, threshold=threshold),
+        stripe_size=int(stripe_mb * MB), lam_mb=lam,
+        refresh_probs=refresh))
+    if know_loads:
+        for s in range(sim.n_servers):
+            cli.log.loads[s] = sim.queued_mb(s)
+        if warm_probs:
+            cli.log.absorb_loads()  # p_i ∝ e^{-l_i/λ}: sorts become load-aware
+    for f in range(n_files):
+        cli.write_file(f, size_mb=file_mb)
+    t = cli.flush()
+    return {"phase_s": t,
+            "straggler_hits": sim.servers[1].n_requests,
+            "probes": cli.probe_messages,
+            "redirect_entries": sum(len(r) for r in sim.redirects)}
+
+
+def ideal_phase_time() -> float:
+    """Roofline for this workload: total bytes spread over the 22 clean
+    servers (a perfect scheduler avoids both the straggler's 32 s foreign
+    queue and server 5's 2 s queue)."""
+    total_mb = 120 * 16.0
+    return total_mb / (22 * 200.0)
+
+
+def run_all() -> None:
+    print("\n== §Perf C: scheduler hillclimb (phase completion time) ==")
+    print(f"  ideal (napkin) phase time ~ {ideal_phase_time():.2f}s "
+          f"(bytes / healthy aggregate, floored by srv5 queue)")
+    print(f"{'iter':>28s} {'phase_s':>8s} {'strag_hits':>10s} "
+          f"{'probes':>7s} {'redirects':>9s}")
+
+    def row(tag, **kw):
+        r = phase_time(**kw)
+        print(f"{tag:>28s} {r['phase_s']:8.2f} "
+              f"{r['straggler_hits']:10d} {r['probes']:7d} "
+              f"{r['redirect_entries']:9d}")
+        return r
+
+    row("baseline rr", policy="rr")
+    row("two_choice (SC'14, probes)", policy="two_choice")
+    row("trh thr=64 (too shy)", policy="trh", threshold=64.0)
+    row("trh thr=16", policy="trh", threshold=16.0)
+    row("trh thr=4", policy="trh", threshold=4.0)
+    row("trh thr=0.5 (eager)", policy="trh", threshold=0.5)
+    row("mlml thr=4", policy="mlml", threshold=4.0)
+    row("nltr thr=4", policy="nltr", threshold=4.0)
+    row("trh stripe=16MB (coarse)", policy="trh", stripe_mb=16.0)
+    row("trh stripe=1MB (fine)", policy="trh", stripe_mb=1.0)
+    row("trh thr=4 + warm probs", policy="trh", threshold=4.0,
+        warm_probs=True)
+    row("mlml thr=4 + warm probs", policy="mlml", threshold=4.0,
+        warm_probs=True)
+    row("nltr thr=4 + warm probs", policy="nltr", threshold=4.0,
+        warm_probs=True)
+    row("trh + prob refresh/window", policy="trh", threshold=4.0,
+        warm_probs=True, refresh=True)
+    row("mlml + prob refresh/window", policy="mlml", threshold=4.0,
+        warm_probs=True, refresh=True)
+    row("nltr + prob refresh/window", policy="nltr", threshold=4.0,
+        warm_probs=True, refresh=True)
+    row("ect thr=0.05s (rate-aware)", policy="ect", threshold=0.05)
+    row("ect + fine stripes", policy="ect", threshold=0.05, stripe_mb=1.0)
+    row("ect cold log (no snapshot)", policy="ect", threshold=0.05,
+        know_loads=False)
+
+
+if __name__ == "__main__":
+    run_all()

@@ -1,0 +1,18 @@
+"""Reproduce the paper's §4 evaluation (Figs. 12-18 + probe table).
+
+    PYTHONPATH=src python examples/paper_simulation.py [--full]
+
+``--full`` uses the paper's exact scale (100 OSSs, 200 clients, 2,000
+requests, 100 trials); default is a faster configuration with the same
+structure.  See benchmarks/paper_figs.py for the underlying harness.
+"""
+
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from benchmarks import paper_figs  # noqa: E402
+
+if __name__ == "__main__":
+    paper_figs.run_all(full="--full" in sys.argv)

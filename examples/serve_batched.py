@@ -1,0 +1,28 @@
+"""Batched serving example: prefill + greedy decode with ring KV caches.
+
+    PYTHONPATH=src python examples/serve_batched.py [--arch mixtral-8x22b]
+
+Runs the reduced config of an assigned architecture through the serving
+path: batch of prompts -> decode loop -> tokens/s.  The production-mesh
+version of the same step function is what ``decode_32k`` / ``long_500k``
+dry-run cells lower (see repro/launch/dryrun.py).
+"""
+
+import argparse
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.launch import serve  # noqa: E402
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="mixtral-8x22b")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=24)
+    ap.add_argument("--gen", type=int, default=12)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+    args.reduced = True
+    serve.serve(args)

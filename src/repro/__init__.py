@@ -1,0 +1,19 @@
+"""repro — log-assisted straggler-aware I/O scheduling (Tavakoli, Dai &
+Chen, 2018) built out as a multi-pod JAX training/inference framework.
+
+Subpackages:
+    core        the paper's contribution (statistic log, Eqs. 1-3,
+                RR/MLML/TRH/nLTR policies, window/step engine, simulator)
+    io          object-storage substrate (striping, redirect tables,
+                simulated + local-FS stores, scheduler client)
+    checkpoint  sharded atomic checkpoints through the scheduler
+    data        deterministic step-indexed pipelines
+    models      10-architecture model substrate (GQA/MoE/SSM/xLSTM/enc-dec)
+    parallel    logical-axis sharding rules
+    train       optimizer, step functions, gradient compression
+    kernels     Pallas TPU kernels (flash attention, scheduler select)
+    configs     assigned architecture x shape registry
+    launch      mesh, dry-run, train, serve drivers
+"""
+
+__version__ = "1.0.0"

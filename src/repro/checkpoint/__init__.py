@@ -1,0 +1,10 @@
+"""repro.checkpoint — sharded atomic checkpoints written through the
+paper's straggler-aware I/O scheduler."""
+
+from repro.checkpoint.manifest import (  # noqa: F401
+    LeafEntry, Manifest, ShardEntry, committed_steps, flatten_with_paths,
+    load_manifest, unflatten_like,
+)
+from repro.checkpoint.checkpointer import (  # noqa: F401
+    CheckpointConfig, Checkpointer,
+)

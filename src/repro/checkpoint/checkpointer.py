@@ -1,0 +1,198 @@
+"""Sharded, atomic, async checkpointing through the paper's I/O scheduler.
+
+Every checkpoint shard is a "file" handed to :class:`repro.io.IOClient`:
+it gets striped into objects, and each object is *scheduled* onto an object
+storage server by the log-assisted straggler-aware policy — checkpointing
+is exactly the HPC synchronous-write workload the paper targets (thousands
+of hosts flushing state behind a barrier, gated by the slowest OSS).
+
+Scale/fault-tolerance features (DESIGN.md §7):
+
+* **atomic commit** — shards, then manifest, then COMMIT marker; a save
+  killed anywhere leaves the previous checkpoint authoritative;
+* **async save** — leaves are snapshotted to host memory synchronously,
+  bytes written on a background thread; ``wait_until_finished()`` is the
+  barrier (overlaps checkpoint I/O with compute);
+* **failure retry** — a write landing on a failed server is masked +
+  re-scheduled by the client (next-best server per the log);
+* **elastic restore** — leaves are reassembled on host and re-``device_put``
+  with *any* target sharding, so a job can restart on a different mesh;
+* **GC** — ``keep_n`` newest committed steps are retained.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import os
+import threading
+from typing import Any, Callable, Dict, List, Optional
+
+import numpy as np
+
+from repro.checkpoint import manifest as M
+from repro.io.client import IOClient, IOClientConfig
+from repro.io.objectstore import MB, LocalFSStore
+
+
+@dataclasses.dataclass(frozen=True)
+class CheckpointConfig:
+    shard_size_mb: float = 8.0     # split big leaves into this many MB
+    keep_n: int = 3
+    async_save: bool = False
+    io: IOClientConfig = IOClientConfig()
+
+
+class Checkpointer:
+    """Save/restore pytrees against an object store via the scheduler."""
+
+    def __init__(self, root: str, n_servers: int = 16,
+                 cfg: CheckpointConfig = CheckpointConfig(),
+                 store=None, seed: int = 0):
+        self.root = root
+        self.manifest_dir = os.path.join(root, "manifests")
+        self.store = store if store is not None else LocalFSStore(
+            os.path.join(root, "objects"), n_servers)
+        self.cfg = cfg
+        self.client = IOClient(self.store, cfg.io, seed=seed)
+        self._thread: Optional[threading.Thread] = None
+        self._error: Optional[BaseException] = None
+
+    # ------------------------------------------------------------------ save
+    def _shard_bytes(self, buf: bytes) -> List[bytes]:
+        step_len = max(int(self.cfg.shard_size_mb * MB), 1 * MB)
+        return [buf[i:i + step_len] for i in range(0, max(len(buf), 1), step_len)]
+
+    def _write_tree(self, step: int, named_leaves, meta: Dict[str, Any]) -> None:
+        leaves_meta: List[M.LeafEntry] = []
+        for li, (path, arr) in enumerate(named_leaves):
+            buf = arr.tobytes()
+            shards: List[M.ShardEntry] = []
+            pos = 0
+            for si, chunk in enumerate(self._shard_bytes(buf)):
+                fid = M.file_id_for(step, li, si)
+                self.client.write_file(fid, chunk if chunk else b"\x00")
+                shards.append(M.ShardEntry(
+                    file_id=fid, byte_start=pos, byte_len=len(chunk),
+                    checksum=M.checksum(chunk)))
+                pos += len(chunk)
+            leaves_meta.append(M.LeafEntry(
+                path=path, shape=tuple(arr.shape), dtype=str(arr.dtype),
+                nbytes=len(buf), shards=shards))
+        self.client.flush()
+        man = M.Manifest(step=step, leaves=leaves_meta, meta=meta)
+        M.write_manifest(self.manifest_dir, man)
+        M.commit(self.manifest_dir, step)
+        self._gc()
+
+    def save(self, step: int, tree, meta: Optional[Dict[str, Any]] = None,
+             block: Optional[bool] = None) -> None:
+        """Checkpoint ``tree`` at ``step``.  ``block=False`` (or
+        ``cfg.async_save``) returns after the host snapshot; the bytes are
+        written on a background thread."""
+        import jax
+        self.wait_until_finished()
+        meta = dict(meta or {})
+        meta.setdefault("step", step)
+        # snapshot to host memory synchronously (consistency point)
+        named = [(p, np.asarray(jax.device_get(a)))
+                 for p, a in M.flatten_with_paths(tree)]
+        asynchronous = self.cfg.async_save if block is None else not block
+        if not asynchronous:
+            self._write_tree(step, named, meta)
+            return
+
+        def run():
+            try:
+                self._write_tree(step, named, meta)
+            except BaseException as e:  # surfaced at the next barrier
+                self._error = e
+
+        self._thread = threading.Thread(target=run, daemon=True)
+        self._thread.start()
+
+    def wait_until_finished(self) -> None:
+        """Async-save barrier; re-raises any background failure."""
+        t, self._thread = self._thread, None
+        if t is not None:
+            t.join()
+        if self._error is not None:
+            err, self._error = self._error, None
+            raise err
+
+    def _gc(self) -> None:
+        steps = M.committed_steps(self.manifest_dir)
+        for s in steps[:-self.cfg.keep_n] if self.cfg.keep_n > 0 else []:
+            man = M.load_manifest(self.manifest_dir, s)
+            M.remove_step(self.manifest_dir, s)
+            for leaf in man.leaves:
+                for sh in leaf.shards:
+                    for req in self._stripe(sh):
+                        try:
+                            self.store.delete_object(req.object_id)
+                        except Exception:
+                            pass
+
+    def _stripe(self, sh: M.ShardEntry):
+        from repro.io import striping
+        return striping.stripe_file(self.client.striping, sh.file_id,
+                                    max(sh.byte_len, 1))
+
+    # --------------------------------------------------------------- restore
+    def latest_step(self) -> Optional[int]:
+        steps = M.committed_steps(self.manifest_dir)
+        return steps[-1] if steps else None
+
+    def restore(self, step: Optional[int] = None, target=None,
+                shardings=None, strict_checksum: bool = True):
+        """Restore a checkpoint.
+
+        * ``target``     — pytree giving the structure (and, if
+          ``shardings`` is None, the shardings) to restore onto.  With no
+          target, returns ``{path: np.ndarray}``.
+        * ``shardings``  — optional pytree of ``jax.sharding.Sharding`` (or
+          a callable ``path -> sharding``) for elastic restore onto a new
+          mesh.
+        """
+        import jax
+        self.wait_until_finished()
+        if step is None:
+            step = self.latest_step()
+            if step is None:
+                raise FileNotFoundError(f"no committed checkpoint in {self.root}")
+        man = M.load_manifest(self.manifest_dir, step)
+        named: Dict[str, np.ndarray] = {}
+        for leaf in man.leaves:
+            buf = bytearray(leaf.nbytes)
+            for sh in leaf.shards:
+                data = self.client.read_file(sh.file_id, max(sh.byte_len, 1))
+                data = data[:sh.byte_len]
+                if strict_checksum and M.checksum(bytes(data)) != sh.checksum:
+                    raise IOError(f"checksum mismatch for {leaf.path} "
+                                  f"shard {sh.file_id:#x}")
+                buf[sh.byte_start:sh.byte_start + sh.byte_len] = data
+            arr = np.frombuffer(bytes(buf), dtype=leaf.dtype).reshape(leaf.shape)
+            named[leaf.path] = arr
+        if target is None:
+            return named
+        restored = M.unflatten_like(target, named)
+        if shardings is not None:
+            if callable(shardings):
+                flat = M.flatten_with_paths(target)
+                shardings = M.unflatten_like(
+                    target, {p: shardings(p) for p, _ in flat})
+            restored = jax.tree.map(jax.device_put, restored, shardings)
+        else:
+            # adopt target leaves' shardings when they are concrete arrays
+            def put(new, old):
+                if isinstance(old, jax.Array) and hasattr(old, "sharding"):
+                    return jax.device_put(new, old.sharding)
+                return new
+            restored = jax.tree.map(put, restored, target)
+        return restored
+
+    def manifest(self, step: int) -> M.Manifest:
+        return M.load_manifest(self.manifest_dir, step)
+
+    def close(self) -> None:
+        self.wait_until_finished()
+        self.client.close()

@@ -1,0 +1,164 @@
+"""Checkpoint manifests: the metadata side of sharded, atomic checkpoints.
+
+A checkpoint at step ``s`` is a set of *shards* (each shard = one "file"
+written through the straggler-aware I/O client, i.e. striped into objects
+and scheduled via the statistic log) plus one JSON manifest describing how
+to reassemble every pytree leaf.  Commit protocol (crash safety):
+
+    1. write all shards;
+    2. write ``manifest-<step>.json``;
+    3. write the empty ``COMMIT-<step>`` marker  (atomic rename).
+
+A restore only ever considers steps whose COMMIT marker exists, so a save
+killed at any point is simply invisible (tests kill a save mid-flight).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import json
+import os
+from typing import Any, Dict, List, Optional, Tuple
+
+import numpy as np
+
+
+def file_id_for(step: int, leaf_index: int, shard_index: int) -> int:
+    """Stable 63-bit file id for a checkpoint shard."""
+    h = hashlib.blake2b(f"ckpt/{step}/{leaf_index}/{shard_index}".encode(),
+                        digest_size=8).digest()
+    return int.from_bytes(h, "big") & 0x7FFFFFFFFFFFFFFF
+
+
+@dataclasses.dataclass
+class ShardEntry:
+    """One contiguous byte-range of one leaf's flattened buffer."""
+
+    file_id: int
+    byte_start: int
+    byte_len: int
+    checksum: str  # blake2b-64 hex of the shard bytes
+
+
+@dataclasses.dataclass
+class LeafEntry:
+    path: str                  # '/'-joined pytree key path
+    shape: Tuple[int, ...]
+    dtype: str
+    nbytes: int
+    shards: List[ShardEntry]
+
+
+@dataclasses.dataclass
+class Manifest:
+    step: int
+    leaves: List[LeafEntry]
+    meta: Dict[str, Any]       # free-form (mesh shape, config digest, ...)
+    format_version: int = 1
+
+    def to_json(self) -> str:
+        return json.dumps({
+            "format_version": self.format_version,
+            "step": self.step,
+            "meta": self.meta,
+            "leaves": [{
+                "path": l.path, "shape": list(l.shape), "dtype": l.dtype,
+                "nbytes": l.nbytes,
+                "shards": [dataclasses.asdict(s) for s in l.shards],
+            } for l in self.leaves],
+        }, indent=1)
+
+    @staticmethod
+    def from_json(text: str) -> "Manifest":
+        d = json.loads(text)
+        return Manifest(
+            step=d["step"], meta=d.get("meta", {}),
+            format_version=d.get("format_version", 1),
+            leaves=[LeafEntry(
+                path=l["path"], shape=tuple(l["shape"]), dtype=l["dtype"],
+                nbytes=l["nbytes"],
+                shards=[ShardEntry(**s) for s in l["shards"]],
+            ) for l in d["leaves"]])
+
+
+def checksum(data: bytes) -> str:
+    return hashlib.blake2b(data, digest_size=8).hexdigest()
+
+
+# --- manifest directory protocol (plain local dir next to the store) -------
+
+def manifest_path(root: str, step: int) -> str:
+    return os.path.join(root, f"manifest-{step:010d}.json")
+
+
+def commit_path(root: str, step: int) -> str:
+    return os.path.join(root, f"COMMIT-{step:010d}")
+
+
+def write_manifest(root: str, m: Manifest) -> None:
+    os.makedirs(root, exist_ok=True)
+    tmp = manifest_path(root, m.step) + ".tmp"
+    with open(tmp, "w") as f:
+        f.write(m.to_json())
+    os.replace(tmp, manifest_path(root, m.step))
+
+
+def commit(root: str, step: int) -> None:
+    tmp = commit_path(root, step) + ".tmp"
+    with open(tmp, "w"):
+        pass
+    os.replace(tmp, commit_path(root, step))
+
+
+def committed_steps(root: str) -> List[int]:
+    if not os.path.isdir(root):
+        return []
+    steps = []
+    for name in os.listdir(root):
+        if name.startswith("COMMIT-"):
+            try:
+                s = int(name.split("-", 1)[1])
+            except ValueError:
+                continue
+            if os.path.exists(manifest_path(root, s)):
+                steps.append(s)
+    return sorted(steps)
+
+
+def load_manifest(root: str, step: int) -> Manifest:
+    with open(manifest_path(root, step)) as f:
+        return Manifest.from_json(f.read())
+
+
+def remove_step(root: str, step: int) -> None:
+    for p in (commit_path(root, step), manifest_path(root, step)):
+        try:
+            os.remove(p)
+        except FileNotFoundError:
+            pass
+
+
+# --- pytree <-> flat path helpers ------------------------------------------
+
+def flatten_with_paths(tree) -> List[Tuple[str, np.ndarray]]:
+    """Flatten a pytree to [(path_str, leaf)] with stable, readable paths."""
+    import jax
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    out = []
+    for kp, leaf in flat:
+        out.append((jax.tree_util.keystr(kp, simple=True, separator="/"), leaf))
+    return out
+
+
+def unflatten_like(target, named: Dict[str, np.ndarray]):
+    """Map {path: array} back onto the structure of ``target``."""
+    import jax
+    flat, treedef = jax.tree_util.tree_flatten_with_path(target)
+    leaves = []
+    for kp, old in flat:
+        path = jax.tree_util.keystr(kp, simple=True, separator="/")
+        if path not in named:
+            raise KeyError(f"checkpoint missing leaf {path!r}")
+        leaves.append(named[path])
+    return jax.tree_util.tree_unflatten(treedef, leaves)

@@ -1,0 +1,7 @@
+"""repro.configs — assigned architectures x input shapes."""
+
+from repro.configs.registry import ARCH_IDS, all_configs, get_config  # noqa: F401
+from repro.configs.shapes import (  # noqa: F401
+    SHAPES, SMOKE_SHAPES, ShapeSpec, input_specs, is_subquadratic,
+    shape_applies,
+)

@@ -1,0 +1,34 @@
+"""Architecture registry: ``--arch <id>`` -> ModelConfig (+ reduced twin)."""
+
+from __future__ import annotations
+
+import importlib
+from typing import Dict, List, Tuple
+
+from repro.models.config import ModelConfig
+
+_MODULES: Dict[str, str] = {
+    "whisper-tiny": "repro.configs.whisper_tiny",
+    "qwen2-72b": "repro.configs.qwen2_72b",
+    "h2o-danube-3-4b": "repro.configs.h2o_danube3_4b",
+    "stablelm-1.6b": "repro.configs.stablelm_1_6b",
+    "gemma-2b": "repro.configs.gemma_2b",
+    "qwen2-vl-72b": "repro.configs.qwen2_vl_72b",
+    "xlstm-1.3b": "repro.configs.xlstm_1_3b",
+    "jamba-v0.1-52b": "repro.configs.jamba_v01_52b",
+    "mixtral-8x22b": "repro.configs.mixtral_8x22b",
+    "llama4-scout-17b-a16e": "repro.configs.llama4_scout_17b_a16e",
+}
+
+ARCH_IDS: List[str] = list(_MODULES)
+
+
+def get_config(arch: str, reduced: bool = False) -> ModelConfig:
+    if arch not in _MODULES:
+        raise KeyError(f"unknown arch {arch!r}; choose from {ARCH_IDS}")
+    mod = importlib.import_module(_MODULES[arch])
+    return mod.REDUCED if reduced else mod.CONFIG
+
+
+def all_configs(reduced: bool = False) -> Dict[str, ModelConfig]:
+    return {a: get_config(a, reduced) for a in ARCH_IDS}

@@ -1,0 +1,157 @@
+"""Assigned input shapes and ShapeDtypeStruct builders for the dry-run.
+
+Four shapes per LM architecture (seq_len x global_batch):
+
+    train_4k     4,096 x 256    training       -> lowers train_step
+    prefill_32k  32,768 x 32    inference      -> lowers prefill_step
+    decode_32k   32,768 x 128   decode         -> lowers decode_step
+                                                   (1 token, 32k KV cache)
+    long_500k    524,288 x 1    long-context   -> decode_step; only for
+                                                   sub-quadratic archs
+
+``input_specs`` returns (args, in_roles): ``args`` are ShapeDtypeStructs
+(weak-type correct, zero allocation); ``in_roles`` mirror them with logical
+sharding roles that ``repro.launch.dryrun`` resolves against the active
+mesh (tokens -> batch, cache seq -> "model" axis, etc.).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import transformer as T
+from repro.models import encdec as E
+from repro.models.config import ModelConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    kind: str            # train | prefill | decode
+    seq_len: int
+    global_batch: int
+
+
+SHAPES: Dict[str, ShapeSpec] = {
+    "train_4k": ShapeSpec("train_4k", "train", 4_096, 256),
+    "prefill_32k": ShapeSpec("prefill_32k", "prefill", 32_768, 32),
+    "decode_32k": ShapeSpec("decode_32k", "decode", 32_768, 128),
+    "long_500k": ShapeSpec("long_500k", "decode", 524_288, 1),
+}
+
+# smoke-scale twins of the four shapes (same code paths, CPU-runnable)
+SMOKE_SHAPES: Dict[str, ShapeSpec] = {
+    "train_4k": ShapeSpec("train_4k", "train", 64, 4),
+    "prefill_32k": ShapeSpec("prefill_32k", "prefill", 128, 2),
+    "decode_32k": ShapeSpec("decode_32k", "decode", 128, 4),
+    "long_500k": ShapeSpec("long_500k", "decode", 256, 1),
+}
+
+
+def is_subquadratic(cfg: ModelConfig) -> bool:
+    """long_500k applicability: any non-full-attention mechanism counts
+    (SWA, chunked-local, SSM/recurrent blocks)."""
+    if cfg.sliding_window is not None or cfg.chunk_attn is not None:
+        return True
+    return any(k != "attn" for k in cfg.group_pattern)
+
+
+def shape_applies(cfg: ModelConfig, shape: ShapeSpec) -> Tuple[bool, str]:
+    if shape.name == "long_500k" and not is_subquadratic(cfg):
+        return False, ("pure full-attention arch: 500k decode needs "
+                       "sub-quadratic attention (skip noted in DESIGN.md)")
+    return True, ""
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def _token_batch(cfg: ModelConfig, b: int, s: int, with_targets: bool
+                 ) -> Tuple[Dict[str, Any], Dict[str, Any]]:
+    args = {"tokens": _sds((b, s), jnp.int32)}
+    roles = {"tokens": ["batch", None]}
+    if with_targets:
+        args["targets"] = _sds((b, s), jnp.int32)
+        roles["targets"] = ["batch", None]
+    if cfg.enc_dec:
+        args["frames"] = _sds((b, cfg.enc_seq, cfg.d_model), jnp.float32)
+        roles["frames"] = ["batch", None, None]
+    if cfg.mrope:
+        args["positions"] = _sds((3, b, s), jnp.int32)
+        roles["positions"] = [None, "batch", None]
+        n_patch = min(1024, s // 2)
+        args["patch_embeds"] = _sds((b, n_patch, cfg.d_model), jnp.float32)
+        roles["patch_embeds"] = ["batch", None, None]
+    return args, roles
+
+
+def _cache_roles(cfg: ModelConfig, caches_abs, batch: int):
+    """Logical roles for decode-cache leaves: batch on DP axes, the big
+    sequence dim of KV rings on the "model" axis (sequence-sharded cache),
+    wide state dims on "model"."""
+    import jax.tree_util as jtu
+
+    def role_for(kp, leaf):
+        path = jtu.keystr(kp, simple=True, separator="/")
+        name = path.rsplit("/", 1)[-1]
+        nd = len(leaf.shape)
+        if name in ("k", "v", "k_scale", "v_scale"):  # (G, B, S, KV, *)
+            return [None, "batch", "seq_model", None, None]
+        if name == "slot_pos":            # (G, S)
+            return [None, "seq_model"]
+        if name in ("ck", "cv"):          # whisper cross kv (G,B,Se,KV,hd)
+            return [None, "batch", None, None, None]
+        if name == "conv":                # (G, B, dc-1, inner)
+            return [None, "batch", None, "model"]
+        if name == "ssm":                 # (G, B, inner, N)
+            return [None, "batch", "model", None]
+        if name == "c" and nd == 5:       # mlstm (G, B, H, hd, hd)
+            return [None, "batch", None, "model", None]
+        if name == "n" and nd == 4:       # mlstm (G, B, H, hd)
+            return [None, "batch", None, "model"]
+        if nd >= 2:                       # slstm (G, B, d) & friends
+            return [None, "batch"] + ["model" if i == 2 and nd == 3 else None
+                                      for i in range(2, nd)]
+        return [None] * nd
+
+    flat, treedef = jtu.tree_flatten_with_path(caches_abs)
+    return jtu.tree_unflatten(treedef,
+                              [role_for(kp, leaf) for kp, leaf in flat])
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeSpec
+                ) -> Tuple[Tuple[Any, ...], Tuple[Any, ...]]:
+    """(args, roles) for the step function of ``shape.kind``.
+
+    * train:   (batch,)                      for train_step(state, batch)
+    * prefill: (batch,)                      for prefill_step(params, batch)
+    * decode:  (caches, tokens, pos)         for decode_step(params, ...)
+    """
+    b, s = shape.global_batch, shape.seq_len
+    if shape.kind == "train":
+        args, roles = _token_batch(cfg, b, s, with_targets=True)
+        return (args,), (roles,)
+    if shape.kind == "prefill":
+        args, roles = _token_batch(cfg, b, s, with_targets=False)
+        return (args,), (roles,)
+    if shape.kind == "decode":
+        if cfg.enc_dec:
+            enc_abs = _sds((b, cfg.enc_seq, cfg.d_model), jnp.float32)
+            params_abs = jax.eval_shape(lambda k: E.init_encdec(k, cfg),
+                                        jax.random.key(0))
+            caches_abs = jax.eval_shape(
+                lambda p, e: E.init_caches(p, e, cfg, b, s),
+                params_abs, enc_abs)
+        else:
+            caches_abs = jax.eval_shape(lambda: T.init_caches(cfg, b, s))
+        tokens = _sds((b, 1), jnp.int32)
+        pos = _sds((), jnp.int32)
+        c_roles = _cache_roles(cfg, caches_abs, b)
+        return ((caches_abs, tokens, pos),
+                (c_roles, ["batch", None], None))
+    raise ValueError(shape.kind)

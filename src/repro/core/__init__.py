@@ -1,0 +1,15 @@
+"""repro.core — the paper's contribution: log-assisted straggler-aware
+I/O scheduling (client-side statistic log, Eqs. 1-3, RR/MLML/TRH/nLTR)."""
+
+from repro.core.statlog import (  # noqa: F401
+    LogConfig, SchedState, HostStatLog, init_state, apply_assignment,
+    observe_completion, renormalize,
+)
+from repro.core.policies import (  # noqa: F401
+    POLICIES, PolicyConfig, HostScheduler, plan_window, select_target,
+    apply_threshold,
+)
+from repro.core.engine import (  # noqa: F401
+    Workload, ScheduleResult, group_by_object, run_window, run_stream,
+    run_stream_jit,
+)

@@ -1,0 +1,118 @@
+"""Balance / straggler metrics over scheduling outcomes (paper §4 figures).
+
+All functions take numpy-or-jnp arrays with an optional leading trial axis
+and return plain floats / numpy arrays, so benchmarks can print CSV without
+touching device buffers.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import numpy as np
+
+
+def _np(a) -> np.ndarray:
+    return np.asarray(a)
+
+
+def load_balance_stats(server_loads) -> Dict[str, float]:
+    """max / min / mean / std / CV / Jain fairness of per-server loads.
+
+    ``server_loads``: (T, M) or (M,).  Trial axis is averaged the way the
+    paper does (average load of each OSS over 100 runs, then statistics).
+    """
+    loads = _np(server_loads).astype(np.float64)
+    if loads.ndim == 2:
+        loads = loads.mean(axis=0)
+    mean = float(loads.mean())
+    std = float(loads.std())
+    jain = float(loads.sum() ** 2 / (len(loads) * (loads ** 2).sum()))
+    return {
+        "max": float(loads.max()),
+        "min": float(loads.min()),
+        "mean": mean,
+        "std": std,
+        "cv": std / mean if mean else float("inf"),
+        "jain": jain,
+        "spread": float(loads.max() - loads.min()),
+    }
+
+
+def mean_server_loads(server_loads) -> np.ndarray:
+    """(M,) per-OSS load averaged over trials (Figs. 12-17 y-axis)."""
+    loads = _np(server_loads).astype(np.float64)
+    return loads.mean(axis=0) if loads.ndim == 2 else loads
+
+
+def fig18_curve(server_loads, n_assigned, n_bins: int = 30,
+                lo: Optional[float] = None,
+                hi: Optional[float] = None) -> Tuple[np.ndarray, np.ndarray]:
+    """Paper Fig. 18: x = possible post-scheduling load; y = the MAX number
+    of requests landed on any server having that load.
+
+    Accepts (T, M) arrays; buckets are shared across trials so policies can
+    be overlaid on one axis.
+    """
+    loads = _np(server_loads).astype(np.float64).reshape(-1)
+    reqs = _np(n_assigned).astype(np.float64).reshape(-1)
+    lo = float(loads.min()) if lo is None else lo
+    hi = float(loads.max()) if hi is None else hi
+    if hi <= lo:
+        hi = lo + 1.0
+    edges = np.linspace(lo, hi, n_bins + 1)
+    centers = 0.5 * (edges[:-1] + edges[1:])
+    which = np.clip(np.digitize(loads, edges) - 1, 0, n_bins - 1)
+    ymax = np.zeros(n_bins)
+    np.maximum.at(ymax, which, reqs)
+    return centers, ymax
+
+
+def straggler_summary(result) -> Dict[str, float]:
+    """Straggler-avoidance metrics from a :class:`TrialResult`."""
+    hits = _np(result.straggler_hits).astype(np.float64)
+    loads = _np(result.server_loads).astype(np.float64)
+    mask = _np(result.straggler_mask).astype(bool)
+    n_req = _np(result.chosen).shape[-1]
+    if loads.ndim == 1:
+        loads, mask = loads[None], mask[None]
+    strag_growth = []
+    for t in range(loads.shape[0]):
+        init = _np(result.init_loads)[t] if _np(result.init_loads).ndim == 2 \
+            else _np(result.init_loads)
+        if mask[t].any():
+            strag_growth.append(float((loads[t] - init)[mask[t]].mean()))
+    return {
+        "mean_straggler_hits": float(hits.mean()),
+        "hit_fraction": float(hits.mean()) / n_req,
+        "mean_bytes_added_to_stragglers_mb":
+            float(np.mean(strag_growth)) if strag_growth else 0.0,
+        "max_load": float(loads.max(axis=1).mean()),
+    }
+
+
+def probe_overhead(results: Dict[str, object], n_requests: int) -> Dict[str, float]:
+    """Probe messages per request per policy (the cost the log removes)."""
+    return {name: float(_np(r.probe_msgs).mean()) / n_requests
+            for name, r in results.items()}
+
+
+def ascii_plot(ys: np.ndarray, width: int = 72, height: int = 12,
+               label: str = "") -> str:
+    """Tiny dependency-free line plot for benchmark stdout."""
+    ys = _np(ys).astype(np.float64)
+    if len(ys) > width:
+        idx = np.linspace(0, len(ys) - 1, width).astype(int)
+        ys = ys[idx]
+    lo, hi = float(ys.min()), float(ys.max())
+    span = (hi - lo) or 1.0
+    rows = []
+    q = np.clip(((ys - lo) / span * (height - 1)).round().astype(int), 0,
+                height - 1)
+    for r in range(height - 1, -1, -1):
+        line = "".join("█" if q[c] >= r else " " for c in range(len(ys)))
+        rows.append(f"{(lo + span * r / (height - 1)):10.1f} |{line}")
+    rows.append(" " * 11 + "+" + "-" * len(ys))
+    if label:
+        rows.insert(0, f"  {label}  [min={lo:.2f} max={hi:.2f}]")
+    return "\n".join(rows)

@@ -1,0 +1,394 @@
+"""Scheduling policies of the log-assisted straggler-aware I/O scheduler.
+
+Implements the paper's §3.4 algorithms plus two baselines:
+
+* ``rr``         — round-robin (paper baseline): ``server = object_id mod M``.
+* ``mlml``       — Max Length - Min Load (Alg. 1): length-sorted requests are
+                   paired circularly with probability-sorted servers.
+* ``trh``        — Two Random from Top Half (Alg. 2): power-of-two-choices
+                   restricted to the lightest M/2 servers of the log.
+* ``nltr``       — n-Level Two Random (Alg. 3): servers split into K = 2^n
+                   equal sections (by middle), requests split into K sections
+                   (by recursive average); two random choices inside the
+                   matching section.
+* ``two_choice`` — the authors' prior SC'14 probing scheduler [18]: probe the
+                   default server + one random server, take the lighter.
+                   Costs 2 probe messages per request (counted by the engine)
+                   — the overhead this paper's log removes.
+* ``ect``        — beyond-paper extension: pick argmin of expected completion
+                   time ``(load_i + len) / rate_i`` using the EWMA service
+                   rate observed from completions.  Sees *slow* servers, not
+                   just *loaded* ones.  Documented in DESIGN.md.
+
+Each policy exists in two forms that are cross-validated in tests:
+
+* a pure-JAX form — ``plan_window`` (per-window sorting / sectioning) +
+  ``select_target`` (per-request decision inside a ``lax.scan``), and
+* ``HostScheduler`` — a numpy twin used on the real I/O request hot path.
+
+All policies except ``rr`` are guarded by the paper's user threshold: the
+redirect only happens when ``load(default) - load(target) > threshold``
+(prose of §3.4.1; the printed pseudocode has the branch inverted by an OCR
+artifact — we follow the prose).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import statlog
+from repro.core.statlog import LogConfig, SchedState
+
+POLICIES = ("rr", "mlml", "trh", "nltr", "two_choice", "ect")
+
+# Number of probe RPCs each policy issues per scheduled request.  This is
+# the quantity the paper's log design eliminates (§1, §5).
+PROBES_PER_REQUEST = {
+    "rr": 0,
+    "mlml": 0,
+    "trh": 0,
+    "nltr": 0,
+    "ect": 0,
+    "two_choice": 2,
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class PolicyConfig:
+    """Static configuration of a scheduling policy."""
+
+    name: str = "trh"
+    threshold: float = 0.0      # MB of load benefit required to redirect
+    nltr_n: int = 2             # n of nLTR; K = 2**n sections
+    # two_choice only: number of candidate servers probed (paper uses 2).
+    probe_choices: int = 2
+
+    def __post_init__(self):
+        if self.name not in POLICIES:
+            raise ValueError(f"unknown policy {self.name!r}; choose from {POLICIES}")
+        if self.name == "nltr" and not (1 <= self.nltr_n <= 6):
+            raise ValueError("nltr_n must be in [1, 6]")
+
+    @property
+    def k_sections(self) -> int:
+        return 2 ** self.nltr_n
+
+    @property
+    def probes_per_request(self) -> int:
+        return PROBES_PER_REQUEST[self.name]
+
+
+class WindowPlan(NamedTuple):
+    """Window-start snapshot used by the per-request selection.
+
+    The paper sorts servers (and, for MLML/nLTR, requests) once per time
+    window (Algs. 1-3 all hoist ``sort`` out of the scheduling loop); loads
+    consulted *inside* the loop are live.
+    """
+
+    order: jax.Array           # (R,) request processing order (perm of arange)
+    sorted_servers: jax.Array  # (M,) server ids, lightest (highest prob) first
+    req_section: jax.Array     # (R,) int32 nLTR section id per request, in
+    #                            processing order (zeros for other policies)
+    sec_size: int              # static servers-per-section (M // K)
+
+
+def _recursive_average_boundaries(sorted_len: jax.Array, valid: jax.Array,
+                                  n_levels: int) -> jax.Array:
+    """Split a desc-sorted length list into 2^n sections by recursive average.
+
+    Returns (K-1,) boundary *indices* into the sorted list: section ``s`` of
+    request position ``k`` is ``sum(boundaries <= k)``.  The paper (§3.4.3)
+    uses the *average* element to divide requests ("to better utilize the
+    size factor") versus the *middle* element for servers.
+    """
+    r = sorted_len.shape[0]
+    pos = jnp.arange(r)
+    nvalid = jnp.sum(valid)
+    # Section boundaries as (start, end) index pairs, grown level by level.
+    # Static shapes: at level l there are 2^l sections.
+    starts = [jnp.asarray(0, jnp.int32)]
+    ends = [nvalid.astype(jnp.int32)]
+    boundaries = []
+    for _ in range(n_levels):
+        new_starts, new_ends = [], []
+        for s, e in zip(starts, ends):
+            inside = (pos >= s) & (pos < e)
+            cnt = jnp.maximum(jnp.sum(inside), 1)
+            mean = jnp.sum(jnp.where(inside, sorted_len, 0.0)) / cnt
+            # desc order: elements > mean come first; boundary = first index
+            # with value <= mean inside [s, e).
+            gt = inside & (sorted_len > mean)
+            b = s + jnp.sum(gt).astype(jnp.int32)
+            # keep the boundary strictly inside (s, e) so no section is empty
+            b = jnp.clip(b, s + (e > s + 1), jnp.maximum(e - 1, s + 1))
+            boundaries.append(b)
+            new_starts.extend([s, b])
+            new_ends.extend([b, e])
+        starts, ends = new_starts, new_ends
+    return jnp.sort(jnp.stack(boundaries))
+
+
+def plan_window(cfg: PolicyConfig, state: SchedState, object_ids: jax.Array,
+                lengths: jax.Array, valid: jax.Array) -> WindowPlan:
+    """Build the window-start plan (sorts + sections) for a policy."""
+    r = object_ids.shape[0]
+    m = state.n_servers
+    # Servers sorted by probability desc == lightest first (paper Fig. 9/10).
+    sorted_servers = jnp.argsort(-state.probs).astype(jnp.int32)
+
+    if cfg.name in ("mlml", "nltr"):
+        # Requests processed in length-desc order; invalid (padding) rows sink
+        # to the end via -inf keys.
+        key_len = jnp.where(valid, lengths, -jnp.inf)
+        order = jnp.argsort(-key_len).astype(jnp.int32)
+    else:
+        order = jnp.arange(r, dtype=jnp.int32)
+
+    if cfg.name == "nltr":
+        k = cfg.k_sections
+        sorted_len = lengths[order]
+        sorted_valid = valid[order]
+        bounds = _recursive_average_boundaries(sorted_len, sorted_valid, cfg.nltr_n)
+        pos = jnp.arange(r, dtype=jnp.int32)
+        req_section = jnp.sum(pos[:, None] >= bounds[None, :], axis=1).astype(jnp.int32)
+        req_section = jnp.clip(req_section, 0, k - 1)
+        sec_size = max(m // k, 1)
+    else:
+        req_section = jnp.zeros((r,), jnp.int32)
+        sec_size = m
+
+    return WindowPlan(order=order, sorted_servers=sorted_servers,
+                      req_section=req_section, sec_size=sec_size)
+
+
+def _two_random_min_load(state: SchedState, sorted_servers: jax.Array,
+                         lo: jax.Array, size, key: jax.Array) -> jax.Array:
+    """Pick 2 uniform positions in [lo, lo+size) of the sorted list, return
+    the id with the smaller *live* load (Algs. 2-3 inner step)."""
+    k1, k2 = jax.random.split(key)
+    i1 = jax.random.randint(k1, (), 0, size) + lo
+    i2 = jax.random.randint(k2, (), 0, size) + lo
+    s1 = sorted_servers[i1]
+    s2 = sorted_servers[i2]
+    return jnp.where(state.loads[s1] <= state.loads[s2], s1, s2).astype(jnp.int32)
+
+
+def select_target(cfg: PolicyConfig, plan: WindowPlan, state: SchedState,
+                  pos: jax.Array, object_id: jax.Array, length: jax.Array,
+                  key: jax.Array) -> jax.Array:
+    """Per-request target server (before the threshold guard).
+
+    ``pos`` is the request's position in the window processing order (used
+    by MLML's circular pairing).  Live ``state.loads`` break two-random ties.
+    """
+    m = state.n_servers
+    default = (object_id % m).astype(jnp.int32)
+
+    if cfg.name == "rr":
+        return default
+    if cfg.name == "mlml":
+        # k-th longest request -> k-th lightest server, circularly (Alg. 1).
+        return plan.sorted_servers[pos % m]
+    if cfg.name == "trh":
+        half = max(m // 2, 1)
+        return _two_random_min_load(state, plan.sorted_servers,
+                                    jnp.asarray(0, jnp.int32), half, key)
+    if cfg.name == "nltr":
+        sec = plan.req_section[pos]
+        lo = sec * plan.sec_size
+        return _two_random_min_load(state, plan.sorted_servers, lo,
+                                    plan.sec_size, key)
+    if cfg.name == "two_choice":
+        # SC'14 baseline: probe default + (probe_choices-1) random others,
+        # take the lightest by live load.  Probes counted by the engine.
+        keys = jax.random.split(key, cfg.probe_choices - 1)
+        cand = [default]
+        for i in range(cfg.probe_choices - 1):
+            cand.append(jax.random.randint(keys[i], (), 0, m).astype(jnp.int32))
+        cand = jnp.stack(cand)
+        return cand[jnp.argmin(state.loads[cand])].astype(jnp.int32)
+    if cfg.name == "ect":
+        rate = _ect_rates(state.ewma_lat)
+        ect = (state.loads + length) / rate
+        return jnp.argmin(ect).astype(jnp.int32)
+    raise AssertionError(cfg.name)
+
+
+def _ect_rates(ewma: jax.Array) -> jax.Array:
+    """Observed MB/s; unobserved servers get the best seen rate (optimistic
+    initialization -> exploration, beyond-paper ECT extension)."""
+    default = jnp.maximum(jnp.max(ewma), 1.0)
+    return jnp.where(ewma > 0, ewma, default)
+
+
+def apply_threshold(cfg: PolicyConfig, state: SchedState, default: jax.Array,
+                    target: jax.Array, length: jax.Array) -> jax.Array:
+    """Paper's redirect guard: only redirect when the benefit exceeds the
+    user threshold (§3.4.1 prose).  For the rate-aware ECT extension the
+    benefit is in expected seconds, not bytes."""
+    if cfg.name == "rr":
+        return default
+    if cfg.name == "ect":
+        rate = _ect_rates(state.ewma_lat)
+        benefit = ((state.loads[default] + length) / rate[default]
+                   - (state.loads[target] + length) / rate[target])
+    else:
+        benefit = state.loads[default] - state.loads[target]
+    return jnp.where(benefit > cfg.threshold, target, default).astype(jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# Host-side (numpy) twin — the real I/O client hot path (repro.io.client).
+# ---------------------------------------------------------------------------
+
+
+class HostScheduler:
+    """Numpy mirror of (plan_window, select_target, apply_threshold).
+
+    Operates on a :class:`~repro.core.statlog.HostStatLog`.  A *window* is
+    opened explicitly (:meth:`begin_window`) which snapshots the sorts, then
+    :meth:`schedule` is called per request.  Cross-validated against the JAX
+    engine in ``tests/test_policies.py``.
+    """
+
+    def __init__(self, cfg: PolicyConfig, log: statlog.HostStatLog,
+                 seed: int = 0):
+        self.cfg = cfg
+        self.log = log
+        self.rng = np.random.default_rng(seed)
+        self.probe_messages = 0
+        self._sorted_servers: Optional[np.ndarray] = None
+        self._masked: set[int] = set()
+
+    # -- failure handling (used by repro.checkpoint retry logic) -----------
+    def mask_server(self, server: int) -> None:
+        """Exclude a failed server from future targets (until unmasked)."""
+        self._masked.add(int(server))
+
+    def unmask_server(self, server: int) -> None:
+        self._masked.discard(int(server))
+
+    @property
+    def masked_servers(self) -> frozenset:
+        return frozenset(self._masked)
+
+    # -- window machinery ---------------------------------------------------
+    def begin_window(self, lengths: Optional[Sequence[float]] = None) -> None:
+        """Snapshot the window-start sorts.  ``lengths`` (all requests queued
+        in this window) is needed by nLTR's request sectioning."""
+        order = np.argsort(-self.log.probs, kind="stable")
+        self._sorted_servers = order.astype(np.int64)
+        self._pos = 0
+        if self.cfg.name == "nltr" and lengths is not None and len(lengths):
+            self._req_bounds = self._recursive_average_bounds(
+                np.sort(np.asarray(lengths, np.float64))[::-1], self.cfg.nltr_n)
+        else:
+            self._req_bounds = None
+
+    @staticmethod
+    def _recursive_average_bounds(sorted_len: np.ndarray, n: int) -> np.ndarray:
+        bounds = []
+        sections = [(0, len(sorted_len))]
+        for _ in range(n):
+            nxt = []
+            for s, e in sections:
+                seg = sorted_len[s:e]
+                mean = seg.mean() if len(seg) else 0.0
+                b = s + int((seg > mean).sum())
+                b = min(max(b, s + (1 if e > s + 1 else 0)), max(e - 1, s + 1))
+                bounds.append(b)
+                nxt.extend([(s, b), (b, e)])
+            sections = nxt
+        return np.sort(np.asarray(bounds))
+
+    def _live_load(self, server: int) -> float:
+        return self.log.loads[server]
+
+    def _ect_rates(self) -> np.ndarray:
+        """Optimistic-default observed service rates (see _ect_rates)."""
+        ewma = self.log.ewma_lat
+        default = max(float(ewma.max()), 1.0)
+        return np.where(ewma > 0, ewma, default)
+
+    def _two_random(self, lo: int, size: int) -> int:
+        size = max(size, 1)
+        ss = self._sorted_servers
+        m = len(ss)
+        cands = []
+        for _ in range(8):  # rejection-sample around masked servers
+            i1 = lo + int(self.rng.integers(0, size))
+            i2 = lo + int(self.rng.integers(0, size))
+            c1, c2 = int(ss[i1 % m]), int(ss[i2 % m])
+            cands = [c for c in (c1, c2) if c not in self._masked]
+            if cands:
+                break
+        if not cands:  # whole section masked: fall back to global lightest
+            alive = [s for s in range(m) if s not in self._masked]
+            return min(alive, key=self._live_load)
+        return min(cands, key=self._live_load)
+
+    def schedule(self, object_id: int, length_mb: float,
+                 offset: int = 0) -> int:
+        """Schedule one request; returns the chosen server and updates the
+        log per Eqs. (1)-(3)."""
+        if self._sorted_servers is None:
+            self.begin_window()
+        cfg, log = self.cfg, self.log
+        m = log.n_servers
+        default = int(object_id) % m
+        pos = self._pos
+        self._pos += 1
+        log.record_request(object_id, offset, length_mb)
+
+        if cfg.name == "rr":
+            target = default
+        elif cfg.name == "mlml":
+            target = int(self._sorted_servers[pos % m])
+        elif cfg.name == "trh":
+            target = self._two_random(0, max(m // 2, 1))
+        elif cfg.name == "nltr":
+            k = cfg.k_sections
+            if self._req_bounds is None:
+                sec = 0
+            else:
+                sec = int((self._req_bounds <= pos).sum())
+            sec = min(sec, k - 1)
+            sec_size = max(m // k, 1)
+            target = self._two_random(sec * sec_size, sec_size)
+        elif cfg.name == "two_choice":
+            cand = [default] + [int(self.rng.integers(0, m))
+                                for _ in range(cfg.probe_choices - 1)]
+            self.probe_messages += cfg.probe_choices
+            cand = [c for c in cand if c not in self._masked] or cand
+            target = min(cand, key=self._live_load)
+        elif cfg.name == "ect":
+            rate = self._ect_rates()
+            ect = (log.loads + length_mb) / rate
+            if self._masked:
+                ect = ect.copy()
+                ect[list(self._masked)] = np.inf
+            target = int(np.argmin(ect))
+        else:  # pragma: no cover
+            raise AssertionError(cfg.name)
+
+        if target in self._masked:
+            alive = [s for s in range(m) if s not in self._masked]
+            target = min(alive, key=self._live_load)
+        if cfg.name != "rr" and default not in self._masked:
+            if cfg.name == "ect":
+                rate = self._ect_rates()
+                benefit = ((log.loads[default] + length_mb) / rate[default]
+                           - (log.loads[target] + length_mb) / rate[target])
+            else:
+                benefit = log.loads[default] - log.loads[target]
+            chosen = target if benefit > cfg.threshold else default
+        else:
+            chosen = target
+        log.apply_assignment(chosen, length_mb)
+        return chosen

@@ -1,0 +1,173 @@
+"""Client-side server statistic log — the paper's core data structure.
+
+Implements the two tables of Fig. 8 and the maintenance equations:
+
+    Eq. (1)  l_i  <- l'_i + Len                      (load bookkeeping)
+    Eq. (2)  p_i  <- p'_i * exp(-l_i / lam)          (probability decay)
+    Eq. (3)  p_j  <- p'_j + (p'_i - p'_i e^{-l_i}) / (M-1),  j != i
+
+``lam`` is the load-normalization scale (see DESIGN.md "numerical
+fidelity"): the paper's literal Eq. (2) uses raw byte counts in the
+exponent, which underflows after a single multi-MB assignment.  ``lam``
+defaults to a scale on the order of the mean request size; ``lam -> 0+``
+recovers the paper's literal greedy behaviour.
+
+Two implementations share these formulas:
+
+* a pure-JAX functional form (``SchedState`` + ``apply_assignment``) used
+  by the jitted scheduling engine / simulator, and
+* ``HostStatLog``, a mutable numpy twin used on the request hot path of
+  the real I/O client (``repro.io.client``), cross-validated in tests.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+class SchedState(NamedTuple):
+    """Server statistic table (jnp arrays, one row per OSS)."""
+
+    loads: jax.Array        # (M,) expected outstanding bytes (MB) per server
+    probs: jax.Array        # (M,) selection probability, sums to 1
+    n_assigned: jax.Array   # (M,) int32 — requests scheduled per server
+    ewma_lat: jax.Array     # (M,) observed MB/s EWMA (ECT extension; 0 = unseen)
+
+    @property
+    def n_servers(self) -> int:
+        return self.loads.shape[-1]
+
+
+@dataclasses.dataclass(frozen=True)
+class LogConfig:
+    """Static knobs of the statistic log."""
+
+    n_servers: int
+    lam: float = 32.0          # Eq.(2) normalization scale, in MB
+    ewma_alpha: float = 0.25   # ECT extension only
+    renorm: bool = True        # re-project probs onto the simplex per window
+
+
+def init_state(cfg: LogConfig, init_loads: Optional[jax.Array] = None) -> SchedState:
+    """Fresh log: round-robin prior p_i = 1/M (paper §3.3.2)."""
+    m = cfg.n_servers
+    loads = jnp.zeros((m,), jnp.float32) if init_loads is None else init_loads.astype(jnp.float32)
+    probs = jnp.full((m,), 1.0 / m, jnp.float32)
+    return SchedState(
+        loads=loads,
+        probs=probs,
+        n_assigned=jnp.zeros((m,), jnp.int32),
+        ewma_lat=jnp.zeros((m,), jnp.float32),
+    )
+
+
+def apply_assignment(state: SchedState, server: jax.Array, length: jax.Array,
+                     cfg: LogConfig) -> SchedState:
+    """Update the log after scheduling ``length`` MB onto ``server``.
+
+    Faithful to Eqs. (1)-(3): the decayed probability mass of the chosen
+    server is redistributed evenly over the other M-1 servers, keeping
+    sum(p) == 1 exactly (up to float error; see ``renormalize``).
+    """
+    m = state.loads.shape[-1]
+    loads = state.loads.at[server].add(length)           # Eq. (1)
+    l_i = loads[server]                                  # updated load of i
+    p_i = state.probs[server]
+    decayed = p_i * jnp.exp(-l_i / cfg.lam)              # Eq. (2)
+    delta = (p_i - decayed) / (m - 1)                    # Eq. (3)
+    probs = state.probs + delta
+    probs = probs.at[server].set(decayed)
+    n_assigned = state.n_assigned.at[server].add(1)
+    return state._replace(loads=loads, probs=probs, n_assigned=n_assigned)
+
+
+def observe_completion(state: SchedState, server: jax.Array, mb_per_s: jax.Array,
+                       cfg: LogConfig) -> SchedState:
+    """ECT extension (beyond paper): fold an observed service rate into the
+    log. A server that is *slow* (not merely loaded) becomes visible here."""
+    old = state.ewma_lat[server]
+    new = jnp.where(old == 0.0, mb_per_s, (1 - cfg.ewma_alpha) * old + cfg.ewma_alpha * mb_per_s)
+    return state._replace(ewma_lat=state.ewma_lat.at[server].set(new))
+
+
+def renormalize(state: SchedState) -> SchedState:
+    """Re-project probs onto the simplex (guards float drift; analytic sum
+    is already 1 — see tests/test_statlog.py property tests)."""
+    p = jnp.clip(state.probs, 0.0)
+    return state._replace(probs=p / jnp.sum(p))
+
+
+# ---------------------------------------------------------------------------
+# Host-side (numpy) twin — used by repro.io.client on the request hot path.
+# ---------------------------------------------------------------------------
+
+
+class HostStatLog:
+    """Mutable numpy mirror of (SchedState, apply_assignment).
+
+    Kept deliberately tiny: the whole point of the paper is that the
+    client's scheduling state is a few KB resident in local memory —
+    no RPC, no probing.
+    """
+
+    def __init__(self, cfg: LogConfig, init_loads: Optional[np.ndarray] = None):
+        self.cfg = cfg
+        m = cfg.n_servers
+        self.loads = np.zeros(m, np.float64) if init_loads is None else np.asarray(init_loads, np.float64).copy()
+        self.probs = np.full(m, 1.0 / m, np.float64)
+        self.n_assigned = np.zeros(m, np.int64)
+        self.ewma_lat = np.zeros(m, np.float64)
+        # I/O request table (Fig. 8, left): (object_id, offset, length) rows.
+        self.request_log: list[tuple[int, int, float]] = []
+
+    @property
+    def n_servers(self) -> int:
+        return self.cfg.n_servers
+
+    def record_request(self, object_id: int, offset: int, length_mb: float) -> None:
+        self.request_log.append((object_id, offset, length_mb))
+
+    def apply_assignment(self, server: int, length_mb: float) -> None:
+        m = self.cfg.n_servers
+        self.loads[server] += length_mb                          # Eq. (1)
+        p_i = self.probs[server]
+        decayed = p_i * np.exp(-self.loads[server] / self.cfg.lam)  # Eq. (2)
+        delta = (p_i - decayed) / (m - 1)                        # Eq. (3)
+        self.probs += delta
+        self.probs[server] = decayed
+        self.n_assigned[server] += 1
+
+    def observe_completion(self, server: int, mb_per_s: float) -> None:
+        a = self.cfg.ewma_alpha
+        old = self.ewma_lat[server]
+        self.ewma_lat[server] = mb_per_s if old == 0.0 else (1 - a) * old + a * mb_per_s
+
+    def complete(self, server: int, length_mb: float) -> None:
+        """Bytes drained from a server's outstanding queue (write finished)."""
+        self.loads[server] = max(0.0, self.loads[server] - length_mb)
+
+    def renormalize(self) -> None:
+        p = np.clip(self.probs, 0.0, None)
+        self.probs = p / p.sum()
+
+    def absorb_loads(self, loads: Optional[np.ndarray] = None) -> None:
+        """Seed probabilities from known loads: p_i ∝ (1/M)·e^{-l_i/λ}
+        (vectorized Eq. (2) fixed point — how a client that has observed
+        the cluster for a while would start; see simulate.absorb_initial_loads)."""
+        if loads is not None:
+            self.loads = np.asarray(loads, np.float64).copy()
+        p = np.exp(-self.loads / self.cfg.lam)
+        self.probs = p / p.sum()
+
+    def snapshot(self) -> SchedState:
+        return SchedState(
+            loads=jnp.asarray(self.loads, jnp.float32),
+            probs=jnp.asarray(self.probs, jnp.float32),
+            n_assigned=jnp.asarray(self.n_assigned, jnp.int32),
+            ewma_lat=jnp.asarray(self.ewma_lat, jnp.float32),
+        )

@@ -1,0 +1,6 @@
+"""repro.data — deterministic step-indexed pipelines (synthetic +
+object-store-backed via the straggler-aware scheduler)."""
+
+from repro.data.pipeline import (  # noqa: F401
+    DataConfig, ObjectStoreTokens, SyntheticTokens,
+)

@@ -1,0 +1,13 @@
+"""repro.io — object-storage substrate: striping, simulated/local stores
+with redirect tables + metadata maintainer, and the client-side scheduler
+client (paper Fig. 5)."""
+
+from repro.io.striping import (  # noqa: F401
+    MB, ObjectRequest, StripingConfig, object_id_for, stripe_file,
+    stripe_request,
+)
+from repro.io.objectstore import (  # noqa: F401
+    LocalFSStore, MaintainerThread, ObjectMissingError, RedirectTable,
+    ServerFailedError, SimulatedCluster, WriteResult,
+)
+from repro.io.client import IOClient, IOClientConfig, WriteRecord  # noqa: F401

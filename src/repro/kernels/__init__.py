@@ -1,0 +1,12 @@
+"""repro.kernels — Pallas TPU kernels for the perf-critical hot spots.
+
+* ``flash_attention`` — VMEM-tiled online-softmax GQA attention
+  (causal / sliding-window / chunked-local), the fused form of
+  ``repro.models.attention.attend_blocked``.
+* ``sched_select``    — the paper's per-request scheduling loop with the
+  server statistic table resident in VMEM (log streaming, zero probes).
+
+Each kernel ships ``kernel.py`` (pl.pallas_call + BlockSpec), ``ops.py``
+(jit'd wrapper, auto-interpret on CPU) and ``ref.py`` (pure-jnp oracle);
+tests sweep shapes/dtypes and assert allclose against the oracle.
+"""

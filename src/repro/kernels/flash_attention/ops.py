@@ -1,0 +1,41 @@
+"""Jit'd public wrapper for the flash attention kernel.
+
+On CPU (this container) the kernel runs in interpret mode automatically;
+on TPU it compiles to Mosaic.  ``repro.models.attention.self_attend``
+routes here when ``cfg.use_pallas_attn`` is set.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+
+from repro.kernels.flash_attention.kernel import flash_attention_fwd
+
+
+def _on_cpu() -> bool:
+    return jax.default_backend() == "cpu"
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "chunk",
+                                             "is_global", "block_q",
+                                             "block_k", "interpret"))
+def flash_attention(q, k, v, *, causal: bool = True,
+                    window: Optional[int] = None,
+                    chunk: Optional[int] = None,
+                    is_global: bool = False,
+                    block_q: int = 128, block_k: int = 128,
+                    interpret: Optional[bool] = None):
+    """Fused GQA attention. q: (B,S,H,hd); k,v: (B,S,KV,hd)."""
+    if is_global:          # llama4 global layers: plain causal
+        window = chunk = None
+    if interpret is None:
+        interpret = _on_cpu()
+    s = q.shape[1]
+    bq = min(block_q, max(8, s))
+    bk = min(block_k, max(8, s))
+    return flash_attention_fwd(q, k, v, causal=causal, window=window,
+                               chunk=chunk, block_q=bq, block_k=bk,
+                               interpret=interpret)

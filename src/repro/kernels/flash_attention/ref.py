@@ -1,0 +1,35 @@
+"""Pure-jnp oracle for the flash attention kernel (no blocking tricks)."""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                  causal: bool = True, window: Optional[int] = None,
+                  chunk: Optional[int] = None) -> jax.Array:
+    """q: (B,S,H,hd); k,v: (B,S,KV,hd) -> (B,S,H,hd), f32 math."""
+    b, s, h, hd = q.shape
+    kvh = k.shape[2]
+    g = h // kvh
+    qf = q.astype(jnp.float32).reshape(b, s, kvh, g, hd)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    scores = jnp.einsum("bqkgh,bskh->bkgqs", qf, kf) / (hd ** 0.5)
+    if causal:
+        rows = jnp.arange(s)[:, None]
+        cols = jnp.arange(s)[None, :]
+        mask = cols <= rows
+        if window is not None:
+            mask &= rows - cols < window
+        if chunk is not None:
+            mask &= rows // chunk == cols // chunk
+        scores = jnp.where(mask[None, None, None], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgqs,bskh->bqkgh", probs, vf)
+    return out.reshape(b, s, h, hd).astype(q.dtype)

@@ -1,0 +1,2 @@
+from repro.kernels.sched_select.ops import sched_select  # noqa: F401
+from repro.kernels.sched_select.ref import sched_select_ref  # noqa: F401

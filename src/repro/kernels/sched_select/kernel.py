@@ -1,0 +1,132 @@
+"""Pallas kernel: stream I/O requests through a VMEM-resident statistic log.
+
+This is the TPU-native adaptation of the paper's core insight (DESIGN.md):
+*replace remote probing with local state*.  Scheduling a request stream
+against an (M,)-server statistic table is a sequential-dependence loop
+whose working set (loads + probs, a few KB) is reused every iteration —
+the kernel pins the table in VMEM scratch for the whole stream and emits
+one assignment per request, instead of bouncing the carry through XLA's
+while-loop machinery (HBM round trips per decision).
+
+Grid = independent clients (each compute node runs its own log; there is
+no cross-client gossip, exactly as in the paper §3.3).
+
+Policies (selected statically):
+
+* ``minload``    — argmin of current load (greedy; ECT with unit rates);
+* ``two_random`` — power-of-two-choices from the log (no probe messages;
+  the in-kernel LCG supplies the randomness).
+
+Both apply the paper's redirect-threshold guard against the round-robin
+default ``object_id mod M`` and the Eq. (1)-(3) log updates with one-hot
+*vector* writes (no scatter — TPU lanes update masked).  MLML/TRH/nLTR
+need per-window sorts and stay in the JAX engine; the kernel covers the
+per-request decision hot path.  ``ref.py`` is the bit-exact jnp oracle.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+import jax.experimental.pallas.tpu as pltpu
+
+
+def _sched_kernel(objs_ref, lens_ref, init_loads_ref, seed_ref,
+                  choices_ref, final_loads_ref, loads_ref, probs_ref, *,
+                  n_requests: int, n_servers: int, m_pad: int,
+                  threshold: float, lam: float, policy: str):
+    # --- init VMEM-resident table -----------------------------------------
+    lane = jax.lax.broadcasted_iota(jnp.int32, (1, m_pad), 1)
+    valid = lane < n_servers
+    big = jnp.float32(3.4e38)
+    loads_ref[...] = jnp.where(valid, init_loads_ref[...], big)
+    probs_ref[...] = jnp.where(valid, 1.0 / n_servers, 0.0)
+
+    def body(i, rng):
+        obj = objs_ref[0, i]
+        ln = lens_ref[0, i]
+        loads = loads_ref[...]                      # (1, m_pad)
+        default = jax.lax.rem(obj, n_servers)
+
+        if policy == "minload":
+            target = jnp.argmin(loads[0, :]).astype(jnp.int32)
+            new_rng = rng
+        elif policy == "two_random":
+            r1 = rng * jnp.uint32(1664525) + jnp.uint32(1013904223)
+            r2 = r1 * jnp.uint32(1664525) + jnp.uint32(1013904223)
+            new_rng = r2
+            c1 = jax.lax.rem((r1 >> jnp.uint32(8)).astype(jnp.int32)
+                             & jnp.int32(0x7FFFFFFF), n_servers)
+            c2 = jax.lax.rem((r2 >> jnp.uint32(8)).astype(jnp.int32)
+                             & jnp.int32(0x7FFFFFFF), n_servers)
+            l1 = jnp.sum(jnp.where(lane == c1, loads, 0.0))
+            l2 = jnp.sum(jnp.where(lane == c2, loads, 0.0))
+            target = jnp.where(l1 <= l2, c1, c2).astype(jnp.int32)
+        else:  # pragma: no cover
+            raise ValueError(policy)
+
+        l_def = jnp.sum(jnp.where(lane == default, loads, 0.0))
+        l_tgt = jnp.sum(jnp.where(lane == target, loads, 0.0))
+        choose = jnp.where(l_def - l_tgt > threshold, target,
+                           default).astype(jnp.int32)
+
+        onehot = lane == choose
+        # Eq. (1): l <- l' + Len
+        new_loads = jnp.where(onehot, loads + ln, loads)
+        loads_ref[...] = new_loads
+        # Eq. (2)-(3): decay chosen prob, spread the mass over the rest
+        probs = probs_ref[...]
+        p_i = jnp.sum(jnp.where(onehot, probs, 0.0))
+        l_i = jnp.sum(jnp.where(onehot, new_loads, 0.0))
+        decayed = p_i * jnp.exp(-l_i / lam)
+        delta = (p_i - decayed) / (n_servers - 1)
+        probs_ref[...] = jnp.where(
+            onehot, decayed, jnp.where(valid, probs + delta, 0.0))
+
+        choices_ref[0, pl.ds(i, 1)] = choose.reshape(1)
+        return new_rng
+
+    seed = seed_ref[0, 0].astype(jnp.uint32)
+    jax.lax.fori_loop(0, n_requests, body, seed, unroll=False)
+    final_loads_ref[...] = jnp.where(valid, loads_ref[...], 0.0)
+
+
+def sched_select_call(object_ids: jax.Array, lengths: jax.Array,
+                      init_loads: jax.Array, seeds: jax.Array, *,
+                      n_servers: int, threshold: float, lam: float,
+                      policy: str, interpret: bool = False):
+    """object_ids/lengths: (C, N); init_loads: (C, M_pad); seeds: (C, 1).
+
+    Returns (choices (C, N) int32, final_loads (C, M_pad) f32).
+    """
+    c, n = object_ids.shape
+    m_pad = init_loads.shape[1]
+    kernel = functools.partial(
+        _sched_kernel, n_requests=n, n_servers=n_servers, m_pad=m_pad,
+        threshold=threshold, lam=lam, policy=policy)
+    return pl.pallas_call(
+        kernel,
+        grid=(c,),
+        in_specs=[
+            pl.BlockSpec((1, n), lambda i: (i, 0)),
+            pl.BlockSpec((1, n), lambda i: (i, 0)),
+            pl.BlockSpec((1, m_pad), lambda i: (i, 0)),
+            pl.BlockSpec((1, 1), lambda i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, n), lambda i: (i, 0)),
+            pl.BlockSpec((1, m_pad), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((c, n), jnp.int32),
+            jax.ShapeDtypeStruct((c, m_pad), jnp.float32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((1, m_pad), jnp.float32),   # loads table
+            pltpu.VMEM((1, m_pad), jnp.float32),   # probs table
+        ],
+        interpret=interpret,
+    )(object_ids, lengths, init_loads, seeds)

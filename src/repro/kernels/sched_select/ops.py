@@ -1,0 +1,48 @@
+"""Jit'd wrapper for the sched_select kernel (auto-interpret on CPU)."""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.sched_select.kernel import sched_select_call
+
+POLICIES = ("minload", "two_random")
+
+
+def _pad_servers(m: int) -> int:
+    return max(-(-m // 128) * 128, 128)
+
+
+@functools.partial(jax.jit, static_argnames=("n_servers", "threshold",
+                                             "lam", "policy", "interpret"))
+def sched_select(object_ids: jax.Array, lengths: jax.Array,
+                 init_loads: jax.Array, seeds: jax.Array, *,
+                 n_servers: int, threshold: float = 0.0, lam: float = 32.0,
+                 policy: str = "minload",
+                 interpret: Optional[bool] = None
+                 ) -> Tuple[jax.Array, jax.Array]:
+    """Schedule request streams for C independent clients.
+
+    object_ids/lengths: (C, N); init_loads: (C, M) true server loads known
+    to each client's log; seeds: (C,) uint32.  Returns (choices (C, N),
+    final_loads (C, M)).
+    """
+    if policy not in POLICIES:
+        raise ValueError(f"kernel policy must be one of {POLICIES}")
+    if interpret is None:
+        interpret = jax.default_backend() == "cpu"
+    c, n = object_ids.shape
+    m = init_loads.shape[1]
+    m_pad = _pad_servers(m)
+    loads_p = jnp.pad(init_loads.astype(jnp.float32),
+                      ((0, 0), (0, m_pad - m)))
+    choices, final_loads = sched_select_call(
+        object_ids.astype(jnp.int32), lengths.astype(jnp.float32),
+        loads_p, seeds.reshape(c, 1).astype(jnp.uint32),
+        n_servers=n_servers, threshold=threshold, lam=lam, policy=policy,
+        interpret=interpret)
+    return choices, final_loads[:, :m]

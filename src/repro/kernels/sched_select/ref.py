@@ -1,0 +1,67 @@
+"""Pure-jnp oracle for the sched_select kernel (bit-identical math).
+
+Replays the same LCG, selection, threshold guard and Eq. (1)-(3) updates
+with a ``lax.scan`` carry — the exact state-passing formulation the kernel
+replaces with VMEM-resident streaming.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def _lcg(rng: jax.Array) -> jax.Array:
+    return rng * jnp.uint32(1664525) + jnp.uint32(1013904223)
+
+
+def _rand_server(rng: jax.Array, m: int) -> jax.Array:
+    return jax.lax.rem((rng >> jnp.uint32(8)).astype(jnp.int32)
+                       & jnp.int32(0x7FFFFFFF), m)
+
+
+def sched_select_ref(object_ids: jax.Array, lengths: jax.Array,
+                     init_loads: jax.Array, seed: jax.Array, *,
+                     n_servers: int, threshold: float, lam: float,
+                     policy: str) -> Tuple[jax.Array, jax.Array]:
+    """Single client. object_ids/lengths: (N,); init_loads: (M_pad,)."""
+    m_pad = init_loads.shape[0]
+    m = n_servers
+    lane = jnp.arange(m_pad)
+    valid = lane < m
+    loads0 = jnp.where(valid, init_loads, 3.4e38).astype(jnp.float32)
+    probs0 = jnp.where(valid, 1.0 / m, 0.0).astype(jnp.float32)
+
+    def step(carry, xs):
+        loads, probs, rng = carry
+        obj, ln = xs
+        default = jax.lax.rem(obj, m)
+        if policy == "minload":
+            target = jnp.argmin(loads).astype(jnp.int32)
+        elif policy == "two_random":
+            r1 = _lcg(rng)
+            r2 = _lcg(r1)
+            rng = r2
+            c1, c2 = _rand_server(r1, m), _rand_server(r2, m)
+            target = jnp.where(loads[c1] <= loads[c2], c1, c2).astype(jnp.int32)
+        else:
+            raise ValueError(policy)
+        choose = jnp.where(loads[default] - loads[target] > threshold,
+                           target, default).astype(jnp.int32)
+        onehot = lane == choose
+        loads = jnp.where(onehot, loads + ln, loads)
+        p_i = probs[choose]
+        l_i = loads[choose]
+        decayed = p_i * jnp.exp(-l_i / lam)
+        delta = (p_i - decayed) / (m - 1)
+        probs = jnp.where(onehot, decayed,
+                          jnp.where(valid, probs + delta, 0.0))
+        return (loads, probs, rng), choose
+
+    (loads, probs, _), choices = jax.lax.scan(
+        step, (loads0, probs0, seed.astype(jnp.uint32)),
+        (object_ids, lengths))
+    return choices, jnp.where(valid, loads, 0.0)

@@ -1,0 +1,9 @@
+"""repro.launch — mesh, dry-run, train and serve drivers.
+
+NOTE: do not import ``repro.launch.dryrun`` from library code — it force-
+sets the XLA host device count at import time (dry-run only).
+"""
+
+from repro.launch.mesh import (  # noqa: F401
+    HBM_BW, ICI_BW, PEAK_FLOPS_BF16, make_production_mesh, n_chips,
+)

@@ -1,0 +1,503 @@
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+MUST set the forced device count before ANY other import (jax locks the
+device count on first init)::
+
+    python -m repro.launch.dryrun --arch all --shape all --mesh both
+
+Per cell this produces (and appends to a resumable JSON):
+
+* ``compiled.memory_analysis()``  — per-device argument/temp/output bytes
+  (proves the cell fits 16 GB HBM);
+* ``compiled.cost_analysis()``    — per-device HLO FLOPs / bytes accessed;
+* collective bytes parsed from the partitioned HLO text (all-gather /
+  all-reduce / reduce-scatter / all-to-all / collective-permute), with
+  ring-wire adjustments per replica-group size;
+* the three roofline terms (seconds) + MODEL_FLOPS bookkeeping for
+  EXPERIMENTS.md §Roofline.
+"""
+
+import os
+os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=512 "
+                           + os.environ.get("XLA_FLAGS", ""))
+
+import argparse
+import json
+import re
+import time
+import traceback
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import (ARCH_IDS, SHAPES, get_config, input_specs,
+                           shape_applies)
+from repro.launch import mesh as M
+from repro.models.config import ModelConfig
+from repro.parallel import sharding as PS
+from repro.train import (OptConfig, abstract_state, make_decode_step,
+                         make_prefill_step, make_train_step)
+
+# ---------------------------------------------------------------------------
+# HLO collective parsing
+# ---------------------------------------------------------------------------
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_COLL_RE = re.compile(
+    r"=\s*(?P<ret>[^=]*?)\s*"
+    r"(?P<op>all-gather|all-reduce|reduce-scatter|all-to-all|"
+    r"collective-permute)(?:-start)?\(")
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{\{([0-9, ]+)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _group_size(line: str) -> int:
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:
+        return int(m.group(2))
+    m = _GROUPS_LIST_RE.search(line)
+    if m:
+        return len(m.group(1).split(","))
+    return 1
+
+
+def parse_collectives(hlo_text: str) -> Dict[str, Any]:
+    """Per-device collective byte totals from partitioned HLO text.
+
+    Returns raw local-output bytes per op kind plus a ring-model 'wire'
+    estimate: all-gather (n-1)/n*out, all-reduce 2*(n-1)/n*bytes,
+    reduce-scatter (n-1)*out, all-to-all (n-1)/n*bytes, permute 1x.
+    """
+    raw = {}
+    wire = 0.0
+    count = 0
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.search(line)
+        if not m:
+            continue
+        op = m.group("op")
+        b = _shape_bytes(m.group("ret"))
+        if b == 0:
+            continue
+        n = max(_group_size(line), 1)
+        count += 1
+        raw[op] = raw.get(op, 0) + b
+        if op == "all-gather":
+            wire += b * (n - 1) / n
+        elif op == "all-reduce":
+            wire += 2 * b * (n - 1) / n
+        elif op == "reduce-scatter":
+            wire += b * (n - 1)
+        elif op == "all-to-all":
+            wire += b * (n - 1) / n
+        else:  # collective-permute
+            wire += b
+    return {"raw_bytes": raw, "wire_bytes": wire, "n_ops": count}
+
+
+# ---------------------------------------------------------------------------
+# sharding resolution (shared with launch/train.py)
+# ---------------------------------------------------------------------------
+
+from repro.launch.shardutil import (  # noqa: E402
+    roles_to_shardings, state_shardings)
+
+
+# ---------------------------------------------------------------------------
+# per-cell lowering
+# ---------------------------------------------------------------------------
+
+def model_flops_for(cfg: ModelConfig, kind: str, batch: int, seq: int,
+                    actual_params: int) -> float:
+    """MODEL_FLOPS: 6·N·D for train, 2·N·D for prefill, 2·N_active·B for
+    one decode token (N = active params for MoE)."""
+    frac_active = cfg.active_param_count() / max(cfg.param_count(), 1)
+    n_active = actual_params * frac_active
+    if kind == "train":
+        return 6.0 * n_active * batch * seq
+    if kind == "prefill":
+        return 2.0 * n_active * batch * seq
+    return 2.0 * n_active * batch  # decode: one token
+
+
+def inner_scan_correction(cfg: ModelConfig, kind: str, batch: int,
+                          seq: int) -> float:
+    """Analytic FLOPs for *inner time-scan* bodies that stay rolled even in
+    the unrolled cost pass (mamba / sLSTM per-step recurrences, mLSTM
+    per-chunk bodies): HloCostAnalysis counts each body once, so we add
+    (trips - 1) x body_flops, TOTAL across devices.  Documented in
+    EXPERIMENTS.md §Roofline; zero for pure-attention archs.
+    """
+    if kind == "decode":
+        return 0.0  # single step: body counted exactly once
+    t = seq
+    mult = 3.0 if kind == "train" else 1.0  # fwd+bwd vs fwd
+    d = cfg.d_model
+    counts = {k: 0 for k in ("mamba", "slstm", "mlstm")}
+    for i in range(cfg.n_layers):
+        k = cfg.group_pattern[i % cfg.group_size]
+        if k in counts:
+            counts[k] += 1
+    total = 0.0
+    if counts["mamba"]:
+        inner = cfg.ssm.expand * d
+        body = 8.0 * batch * inner * cfg.ssm.d_state
+        total += counts["mamba"] * (t - 1) * body
+    if counts["slstm"]:
+        dh = d // cfg.n_heads
+        body = 8.0 * batch * d * dh + 30.0 * batch * d
+        total += counts["slstm"] * (t - 1) * body
+    if counts["mlstm"]:
+        ck = cfg.ssm.chunk
+        if t > 1 and t % ck == 0:
+            hd = 2 * d // cfg.n_heads
+            h = cfg.n_heads
+            body = (4.0 * batch * h * ck * ck * hd      # qk^T + w@v
+                    + 4.0 * batch * h * ck * hd * hd    # inter + state upd
+                    + 8.0 * batch * h * ck * ck)        # decay/mask elemwise
+            total += counts["mlstm"] * (t // ck - 1) * body
+    return mult * total
+
+
+# --- §Perf hillclimb variants (EXPERIMENTS.md records each iteration) -----
+import dataclasses as _dcv
+
+
+def _v_gw(cfg, rules):
+    """ZeRO-3 weight gathering: all-gather bf16 weights over the FSDP axis
+    at use instead of psum-ing fp32 activation partials."""
+    return _dcv.replace(cfg, gather_weights=True), rules
+
+
+def _v_serve(cfg, rules):
+    """Serving sharding: bf16 params, TP-only (no FSDP axis) so decode
+    never all-gathers weights per token; DP replicas hold full TP shards."""
+    return (_dcv.replace(cfg, param_dtype="bfloat16"),
+            _dcv.replace(rules, fsdp_axis=None))
+
+
+def _v_serve_bf16s(cfg, rules):
+    """serve + bf16 attention scores/softmax (halves the decode memory
+    term's score materialization; f32 accumulators live in the Pallas
+    kernel on real TPU)."""
+    cfg, rules = _v_serve(cfg, rules)
+    return _dcv.replace(cfg, attn_score_dtype="bfloat16"), rules
+
+
+def _v_serve_int8kv(cfg, rules):
+    """serve + int8 KV cache (halves cache bytes — the decode floor)."""
+    cfg, rules = _v_serve_bf16s(cfg, rules)
+    return _dcv.replace(cfg, kv_cache_dtype="int8"), rules
+
+
+def _v_gw_dots(cfg, rules):
+    """gather-weights + dots-saveable remat (recompute less in backward)."""
+    return (_dcv.replace(cfg, gather_weights=True, remat="dots"),
+            rules)
+
+
+def _v_cache4(cfg, rules):
+    """llama4: express layers as groups of 4 so only the every-4th global
+    layer gets a full-length KV cache (local layers: chunk-sized ring)."""
+    assert cfg.global_every == 4 and cfg.group_pattern == ("attn",)
+    return _dcv.replace(cfg, group_pattern=("attn",) * 4), rules
+
+
+def _v_gw_qblock(cfg, rules):
+    """gather-weights + smaller attention q-block (512): smaller score
+    temporaries per scan step."""
+    return (_dcv.replace(cfg, gather_weights=True, attn_q_block=512),
+            rules)
+
+
+def _v_moelocal(cfg, rules):
+    """Per-DP-shard MoE dispatch (local capacity pools, gathered bf16
+    expert weights) instead of the global-cumsum GShard dispatch."""
+    assert cfg.moe is not None
+    return (_dcv.replace(cfg, moe=_dcv.replace(cfg.moe, dispatch="local")),
+            rules)
+
+
+def _v_bf16_moelocal(cfg, rules):
+    """local MoE dispatch + bf16 params (training in pure bf16 with fp32
+    optimizer states would need a master-weight copy; here it bounds the
+    memory-term contribution of weight reads)."""
+    cfg, rules = _v_moelocal(cfg, rules)
+    return _dcv.replace(cfg, param_dtype="bfloat16"), rules
+
+
+VARIANTS = {
+    "gw": _v_gw,
+    "serve": _v_serve,
+    "serve+bf16s": _v_serve_bf16s,
+    "serve+int8kv": _v_serve_int8kv,
+    "gw+dots": _v_gw_dots,
+    "cache4": _v_cache4,
+    "gw+cache4": lambda c, r: _v_gw(*_v_cache4(c, r)),
+    "serve+cache4": lambda c, r: _v_serve(*_v_cache4(c, r)),
+    "gw+qb512": _v_gw_qblock,
+    "moelocal": _v_moelocal,
+    "moelocal+bf16": _v_bf16_moelocal,
+}
+
+
+def lower_cell(arch: str, shape_name: str, multi_pod: bool,
+               cfg_override: Optional[ModelConfig] = None,
+               extra_tag: str = "") -> Dict[str, Any]:
+    cfg = cfg_override or get_config(arch)
+    shape = SHAPES[shape_name]
+    rec: Dict[str, Any] = {
+        "arch": arch, "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "tag": extra_tag,
+    }
+    ok, why = shape_applies(cfg, shape)
+    if not ok:
+        rec.update(status="skip", reason=why)
+        return rec
+
+    mesh = M.make_production_mesh(multi_pod=multi_pod)
+    rules = PS.make_rules(mesh)
+    if extra_tag:
+        cfg, rules = VARIANTS[extra_tag](cfg, rules)
+    n_dev = M.n_chips(multi_pod)
+    t0 = time.time()
+
+    def build_lowered(c: ModelConfig):
+        with mesh, PS.use_mesh_rules(rules):
+            if shape.kind == "train":
+                state_abs = abstract_state(c)
+                args_abs, roles = input_specs(c, shape)
+                batch_sh = roles_to_shardings(args_abs[0], roles[0], rules)
+                st_sh = state_shardings(state_abs, rules)
+                step = make_train_step(c, OptConfig())
+                return state_abs, jax.jit(
+                    step, in_shardings=(st_sh, batch_sh),
+                    out_shardings=(st_sh, None),
+                    donate_argnums=(0,)).lower(state_abs, args_abs[0])
+            state_abs = abstract_state(c)
+            params_abs = state_abs.params
+            p_sh = jax.tree.map(lambda s: NamedSharding(rules.mesh, s),
+                                PS.param_specs(params_abs, rules))
+            if shape.kind == "prefill":
+                args_abs, roles = input_specs(c, shape)
+                batch_sh = roles_to_shardings(args_abs[0], roles[0], rules)
+                step = make_prefill_step(c)
+                return state_abs, jax.jit(
+                    step, in_shardings=(p_sh, batch_sh)).lower(
+                    params_abs, args_abs[0])
+            (caches_abs, tok_abs, pos_abs), (c_roles, t_roles, _) = \
+                input_specs(c, shape)
+            c_sh = roles_to_shardings(caches_abs, c_roles, rules)
+            t_sh = roles_to_shardings(tok_abs, t_roles, rules)
+            rep = NamedSharding(rules.mesh, P())
+            step = make_decode_step(c)
+            return state_abs, jax.jit(
+                step, in_shardings=(p_sh, c_sh, t_sh, rep),
+                out_shardings=(None, c_sh),
+                donate_argnums=(1,)).lower(
+                params_abs, caches_abs, tok_abs, pos_abs)
+
+    try:
+        # Pass 1 (deployed artifact, rolled scans): memory analysis.
+        state_abs, lowered = build_lowered(cfg)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+        mem = compiled.memory_analysis()
+
+        # Pass 2: exact FLOPs / bytes / collective counts.  HloCostAnalysis
+        # counts a while body ONCE regardless of trip count, so instead of
+        # compiling the (expensive) fully-unrolled production model we use
+        # the exact linearity of per-group cost: lower unrolled 1-group and
+        # 2-group twins and extrapolate F(G) = F1 + (G-1)(F2 - F1).  Every
+        # per-group quantity (fwd/bwd compute, optimizer, collectives) is
+        # linear in group count; the fixed part (embed/head/loss) cancels.
+        # The §Roofline table is single-pod only, so the multi-pod pass
+        # skips this (compile success + memory are its point).
+        import dataclasses as _dc
+        t1 = time.time()
+        if multi_pod:
+            cost = compiled.cost_analysis()
+            coll = parse_collectives(compiled.as_text())
+            cost_source = "rolled-body-once (roofline uses 16x16 rows)"
+        else:
+            g = cfg.group_size
+            total_g = cfg.n_groups
+            g1, g2 = (2, 4) if total_g >= 4 else (1, 2)
+
+            def scaled(ng):
+                enc = (max(cfg.n_enc_layers * ng // total_g, 1)
+                       if cfg.enc_dec else 0)
+                return _dc.replace(cfg, n_layers=ng * g, n_enc_layers=enc,
+                                   unroll_scans=True)
+
+            _, l1 = build_lowered(scaled(g1))
+            c1 = l1.compile()
+            _, l2 = build_lowered(scaled(g2))
+            c2 = l2.compile()
+            ca1, ca2 = c1.cost_analysis(), c2.cost_analysis()
+            co1 = parse_collectives(c1.as_text())
+            co2 = parse_collectives(c2.as_text())
+            slope = (total_g - g1) / (g2 - g1)
+
+            def lerp(a, b):
+                return a + slope * (b - a)
+
+            cost = {k: lerp(float(ca1.get(k, 0.0)), float(ca2.get(k, 0.0)))
+                    for k in ("flops", "bytes accessed", "transcendentals")}
+            raw = {k: lerp(co1["raw_bytes"].get(k, 0),
+                           co2["raw_bytes"].get(k, 0))
+                   for k in set(co1["raw_bytes"]) | set(co2["raw_bytes"])}
+            coll = {"raw_bytes": raw,
+                    "wire_bytes": lerp(co1["wire_bytes"], co2["wire_bytes"]),
+                    "n_ops": co2["n_ops"],
+                    "extrapolated_from_groups": [g1, g2]}
+            cost_source = f"{g1}g/{g2}g-unrolled-extrapolation"
+        t_compile_u = time.time() - t1
+        actual_params = sum(int(np.prod(l.shape))
+                            for l in jax.tree.leaves(state_abs.params))
+        corr = inner_scan_correction(cfg, shape.kind, shape.global_batch,
+                                     shape.seq_len)
+        hlo_flops = float(cost.get("flops", 0.0)) + corr / n_dev
+        hlo_bytes = float(cost.get("bytes accessed", 0.0))
+        mf = model_flops_for(cfg, shape.kind, shape.global_batch,
+                             shape.seq_len, actual_params)
+        compute_s = hlo_flops / M.PEAK_FLOPS_BF16
+        memory_s = hlo_bytes / M.HBM_BW
+        coll_s = coll["wire_bytes"] / M.ICI_BW
+        terms = {"compute_s": compute_s, "memory_s": memory_s,
+                 "collective_s": coll_s}
+        dominant = max(terms, key=terms.get)
+        per_dev_bytes = (mem.argument_size_in_bytes + mem.temp_size_in_bytes
+                         + mem.output_size_in_bytes - mem.alias_size_in_bytes)
+        rec.update(
+            status="ok",
+            lower_s=round(t_lower, 2), compile_s=round(t_compile, 2),
+            compile_unrolled_s=round(t_compile_u, 2),
+            cost_source=cost_source,
+            inner_scan_corr_flops=corr,
+            n_devices=n_dev,
+            params=actual_params,
+            memory=dict(
+                argument_bytes=mem.argument_size_in_bytes,
+                output_bytes=mem.output_size_in_bytes,
+                temp_bytes=mem.temp_size_in_bytes,
+                alias_bytes=mem.alias_size_in_bytes,
+                peak_per_device_bytes=per_dev_bytes,
+                fits_16gb=bool(per_dev_bytes < 16e9),
+            ),
+            cost=dict(hlo_flops_per_dev=hlo_flops,
+                      hlo_bytes_per_dev=hlo_bytes),
+            collectives=coll,
+            roofline=dict(
+                **{k: float(v) for k, v in terms.items()},
+                dominant=dominant,
+                model_flops=mf,
+                model_flops_per_dev=mf / n_dev,
+                useful_flops_ratio=(mf / n_dev) / hlo_flops if hlo_flops else 0.0,
+                roofline_frac=max(terms.values()) and
+                    (mf / n_dev / M.PEAK_FLOPS_BF16) / max(terms.values()),
+            ),
+        )
+    except Exception as e:  # lowering/compile failure IS a bug — record it
+        rec.update(status="error", error=f"{type(e).__name__}: {e}",
+                   traceback=traceback.format_exc()[-2000:])
+    return rec
+
+
+# ---------------------------------------------------------------------------
+# driver
+# ---------------------------------------------------------------------------
+
+def run(arches, shapes, meshes, out_path: str, force: bool = False,
+        tag: str = ""):
+    results = []
+    if os.path.exists(out_path):
+        with open(out_path) as f:
+            results = json.load(f)
+    if force:  # recompute ONLY the requested cells; keep everything else
+        requested = {(a, s, m, tag) for a in arches for s in shapes
+                     for m in meshes}
+        results = [r for r in results
+                   if (r["arch"], r["shape"], r["mesh"],
+                       r.get("tag", "")) not in requested]
+    done = {(r["arch"], r["shape"], r["mesh"], r.get("tag", ""))
+            for r in results if r["status"] != "error"}  # retry errors
+    results = [r for r in results if r["status"] != "error"]
+    for mesh_name in meshes:
+        multi = mesh_name == "2x16x16"
+        for arch in arches:
+            for shape in shapes:
+                key = (arch, shape, mesh_name, tag)
+                if key in done:
+                    continue
+                print(f"[dryrun] {arch} x {shape} x {mesh_name} "
+                      f"tag={tag or '-'} ...", flush=True)
+                rec = lower_cell(arch, shape, multi, extra_tag=tag)
+                status = rec["status"]
+                extra = ""
+                if status == "ok":
+                    extra = (f" compile={rec['compile_s']}s "
+                             f"dom={rec['roofline']['dominant']} "
+                             f"fits={rec['memory']['fits_16gb']}")
+                elif status == "error":
+                    extra = " " + rec["error"][:160]
+                elif status == "skip":
+                    extra = " " + rec["reason"][:80]
+                print(f"[dryrun]   -> {status}{extra}", flush=True)
+                results.append(rec)
+                with open(out_path, "w") as f:
+                    json.dump(results, f, indent=1)
+    n_ok = sum(r["status"] == "ok" for r in results)
+    n_err = sum(r["status"] == "error" for r in results)
+    n_skip = sum(r["status"] == "skip" for r in results)
+    print(f"[dryrun] done: {n_ok} ok, {n_skip} skip, {n_err} error")
+    return 1 if n_err else 0
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", default="all",
+                    help="arch id or 'all' or comma list")
+    ap.add_argument("--shape", default="all",
+                    help="shape name or 'all' or comma list")
+    ap.add_argument("--mesh", default="both",
+                    choices=["16x16", "2x16x16", "both"])
+    ap.add_argument("--out", default="dryrun_results.json")
+    ap.add_argument("--force", action="store_true",
+                    help="recompute cells already in --out")
+    ap.add_argument("--variant", default="",
+                    help=f"perf variant tag: one of {list(VARIANTS)}")
+    args = ap.parse_args()
+    arches = ARCH_IDS if args.arch == "all" else args.arch.split(",")
+    shapes = list(SHAPES) if args.shape == "all" else args.shape.split(",")
+    meshes = (["16x16", "2x16x16"] if args.mesh == "both" else [args.mesh])
+    raise SystemExit(run(arches, shapes, meshes, args.out, args.force,
+                         tag=args.variant))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,38 @@
+"""Production mesh definitions (TPU v5e target).
+
+``make_production_mesh`` is a FUNCTION (not a module constant) so importing
+this module never touches jax device state — the dry-run sets
+``XLA_FLAGS=--xla_force_host_platform_device_count=512`` before first jax
+init; smoke tests see the real single device.
+
+Hardware constants for the roofline model live here too (per chip):
+197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s per ICI link.
+"""
+
+from __future__ import annotations
+
+import jax
+
+# TPU v5e per-chip roofline constants (used by benchmarks/roofline.py)
+PEAK_FLOPS_BF16 = 197e12      # FLOP/s
+HBM_BW = 819e9                # bytes/s
+ICI_BW = 50e9                 # bytes/s per link
+
+SINGLE_POD = (16, 16)
+MULTI_POD = (2, 16, 16)
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes,
+        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def n_chips(multi_pod: bool = False) -> int:
+    shape = MULTI_POD if multi_pod else SINGLE_POD
+    n = 1
+    for s in shape:
+        n *= s
+    return n

@@ -1,0 +1,84 @@
+"""Batched serving driver: prefill a batch of prompts, then decode.
+
+Demonstrates the serving face of the framework — continuous batched decode
+with ring KV caches — at CPU scale with reduced configs::
+
+    PYTHONPATH=src python -m repro.launch.serve \
+        --arch mixtral-8x22b --reduced --batch 4 --prompt-len 32 --gen 16
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.models import encdec as E
+from repro.models import transformer as T
+from repro.train import make_decode_step
+
+
+def serve(args) -> dict:
+    cfg = get_config(args.arch, reduced=args.reduced)
+    key = jax.random.key(args.seed)
+    b, s = args.batch, args.prompt_len
+    cache_len = s + args.gen
+
+    if cfg.enc_dec:
+        params = E.init_encdec(key, cfg)
+        frames = jax.random.normal(jax.random.key(1), (b, cfg.enc_seq,
+                                                       cfg.d_model))
+        enc_out = E.encode(params, frames, cfg)
+        caches = E.init_caches(params, enc_out, cfg, b, cache_len)
+    else:
+        params = T.init_lm(key, cfg)
+        caches = T.init_caches(cfg, b, cache_len)
+
+    prompts = jax.random.randint(jax.random.key(2), (b, s), 1,
+                                 cfg.vocab_size, dtype=jnp.int32)
+    decode = jax.jit(make_decode_step(cfg), donate_argnums=(1,))
+
+    # prefill by teacher-forcing the prompt through the decode path (the
+    # blocked prefill kernel is exercised by forward_train / dry-run)
+    t0 = time.time()
+    logits = None
+    for t in range(s):
+        logits, caches = decode(params, caches, prompts[:, t:t + 1], t)
+    t_prefill = time.time() - t0
+
+    # greedy decode
+    tok = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
+    out = [tok]
+    t0 = time.time()
+    for i in range(args.gen - 1):
+        logits, caches = decode(params, caches, tok, s + i)
+        tok = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
+        out.append(tok)
+    jax.block_until_ready(tok)
+    t_decode = time.time() - t0
+    gen = np.asarray(jnp.concatenate(out, axis=1))
+    toks_per_s = b * (args.gen - 1) / max(t_decode, 1e-9)
+    print(f"[serve] arch={cfg.name} batch={b} prompt={s} gen={args.gen}")
+    print(f"[serve] prefill {t_prefill:.2f}s, decode {t_decode:.2f}s "
+          f"({toks_per_s:.1f} tok/s)")
+    print(f"[serve] sample row 0: {gen[0][:16].tolist()}")
+    return {"tokens": gen, "tok_per_s": toks_per_s}
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--gen", type=int, default=16)
+    ap.add_argument("--seed", type=int, default=0)
+    serve(ap.parse_args())
+
+
+if __name__ == "__main__":
+    main()

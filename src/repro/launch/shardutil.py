@@ -1,0 +1,61 @@
+"""Shared sharding-resolution helpers for launchers (dryrun / train / serve).
+
+Kept separate from ``dryrun`` so importing these never touches the forced
+XLA device-count flag that dryrun must set at import time.
+"""
+
+from __future__ import annotations
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.parallel import sharding as PS
+
+
+def _resolve_role(role, dim: int, rules: PS.MeshRules):
+    if role is None:
+        return None
+    if role == "batch":
+        ax = rules.batch_axes
+    elif role in ("model", "seq_model"):
+        ax = rules.tp_axis
+    elif role == "fsdp":
+        ax = rules.fsdp_axis
+    else:
+        raise ValueError(role)
+    if ax is None or dim % rules.axis_size(ax) != 0:
+        return None
+    return ax
+
+
+def roles_to_shardings(args_abs, roles, rules: PS.MeshRules):
+    """Map role pytrees (lists per leaf) -> NamedSharding pytrees."""
+    def one(leaf, role_list):
+        if role_list is None:
+            return NamedSharding(rules.mesh, P())
+        parts = [_resolve_role(r, leaf.shape[i], rules)
+                 for i, r in enumerate(role_list)]
+        return NamedSharding(rules.mesh, P(*parts))
+
+    return jax.tree.map(one, args_abs, roles,
+                        is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
+
+
+def state_shardings(state_abs, rules: PS.MeshRules):
+    """TrainState shardings: params by rule table, m/v like params,
+    scalars replicated (ZeRO-1 falls out of matching specs)."""
+    from repro.train.optimizer import OptState
+    from repro.train.steps import TrainState
+    pspecs = PS.param_specs(state_abs.params, rules)
+    to_ns = lambda tree: jax.tree.map(
+        lambda s: NamedSharding(rules.mesh, s), tree)
+    rep = NamedSharding(rules.mesh, P())
+    return TrainState(
+        params=to_ns(pspecs),
+        opt=OptState(m=to_ns(pspecs), v=to_ns(pspecs), count=rep),
+        step=rep)
+
+
+def param_shardings(params_abs, rules: PS.MeshRules):
+    return jax.tree.map(lambda s: NamedSharding(rules.mesh, s),
+                        PS.param_specs(params_abs, rules))

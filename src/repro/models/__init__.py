@@ -1,0 +1,7 @@
+"""repro.models — composable model substrate: GQA transformers, MoE,
+Mamba/mLSTM/sLSTM blocks, hybrid interleaves, encoder-decoder."""
+
+from repro.models.config import ModelConfig, MoEConfig, SSMConfig  # noqa: F401
+from repro.models import (  # noqa: F401
+    attention, encdec, layers, moe, ssm, transformer,
+)

@@ -1,0 +1,301 @@
+"""GQA attention: blocked full/prefill path + single-token decode path.
+
+Design notes (TPU adaptation, see DESIGN.md):
+
+* The train/prefill path is *blocked*: queries are processed in chunks of
+  ``q_block`` via ``lax.scan``, so the (S x S) score matrix is never
+  materialized — at 32k context the full matrix would be ~4 TB global.
+  The per-iteration working set is (B, KV, G, q_block, S) fp32 scores.
+  (The Pallas flash kernel in ``repro.kernels.flash_attention`` is the
+  fused VMEM-tiled form of the same loop; ``use_pallas_attn`` swaps it in.)
+* Locality masks: causal, sliding-window (danube/mixtral), chunked-local
+  (llama4), or none (whisper cross-attention).  ``is_global`` may be a
+  *traced* per-layer boolean (llama4 interleaves local/global inside one
+  scanned stack) — both masks are formed and selected elementwise.
+* Decode uses a ring KV cache sized to the layer's actual receptive field
+  (full: S; SWA: window; chunked: chunk) with absolute slot positions for
+  masking; keys are stored post-RoPE.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models.config import ModelConfig
+
+Params = Dict[str, jax.Array]
+
+NEG_INF = -1e30
+
+
+# ------------------------------------------------------------------- params
+
+def init_attention(key, cfg: ModelConfig, cross: bool = False) -> Params:
+    d, h, kv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": L.he_init(ks[0], (d, h * hd), cfg.pdtype, fan_in=d),
+        "wk": L.he_init(ks[1], (d, kv * hd), cfg.pdtype, fan_in=d),
+        "wv": L.he_init(ks[2], (d, kv * hd), cfg.pdtype, fan_in=d),
+        "wo": L.he_init(ks[3], (h * hd, d), cfg.pdtype, fan_in=h * hd),
+    }
+    if cfg.qkv_bias and not cross:
+        p["bq"] = jnp.zeros((h * hd,), cfg.pdtype)
+        p["bk"] = jnp.zeros((kv * hd,), cfg.pdtype)
+        p["bv"] = jnp.zeros((kv * hd,), cfg.pdtype)
+    return p
+
+
+def project_q(p: Params, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    b, s, _ = x.shape
+    q = x @ L.wcast(p, "wq", cfg, [None, "model"])
+    if "bq" in p:
+        q = q + L.cast_to(p["bq"], cfg.cdtype)
+    return q.reshape(b, s, cfg.n_heads, cfg.hd)
+
+
+def project_kv(p: Params, x: jax.Array, cfg: ModelConfig) -> Tuple[jax.Array, jax.Array]:
+    b, s, _ = x.shape
+    k = x @ L.wcast(p, "wk", cfg, [None, "model"])
+    v = x @ L.wcast(p, "wv", cfg, [None, "model"])
+    if "bk" in p:
+        k = k + L.cast_to(p["bk"], cfg.cdtype)
+        v = v + L.cast_to(p["bv"], cfg.cdtype)
+    return (k.reshape(b, s, cfg.n_kv_heads, cfg.hd),
+            v.reshape(b, s, cfg.n_kv_heads, cfg.hd))
+
+
+def out_proj(p: Params, o: jax.Array, cfg: ModelConfig) -> jax.Array:
+    b, s = o.shape[:2]
+    return o.reshape(b, s, cfg.n_heads * cfg.hd) @ \
+        L.wcast(p, "wo", cfg, ["model", None])
+
+
+def maybe_rope(x: jax.Array, positions, cfg: ModelConfig,
+               use_rope=True) -> jax.Array:
+    """RoPE / M-RoPE / partial-rotary; ``use_rope`` may be traced."""
+    if not cfg.use_rope:
+        return x
+    if cfg.mrope:
+        roped = L.apply_mrope(x, positions, cfg.rope_theta, cfg.mrope_sections)
+    else:
+        roped = L.apply_rope(x, positions, cfg.rope_theta, cfg.rotary_pct)
+    if isinstance(use_rope, bool):
+        return roped if use_rope else x
+    return jnp.where(use_rope, roped, x)
+
+
+# ------------------------------------------------------------------ masking
+
+def _local_mask(qpos: jax.Array, kpos: jax.Array, cfg: ModelConfig,
+                is_global) -> jax.Array:
+    """(Tq, Tk) bool mask. qpos/kpos are absolute positions; is_global may
+    be traced (llama4 global layers use plain causal)."""
+    causal = kpos[None, :] <= qpos[:, None]
+    local = causal
+    if cfg.sliding_window is not None:
+        local = causal & (qpos[:, None] - kpos[None, :] < cfg.sliding_window)
+    if cfg.chunk_attn is not None:
+        local = causal & (qpos[:, None] // cfg.chunk_attn
+                          == kpos[None, :] // cfg.chunk_attn)
+    if isinstance(is_global, bool):
+        return causal if is_global else local
+    return jnp.where(is_global, causal, local)
+
+
+# --------------------------------------------------------- full / prefill
+
+def gqa_attend(q: jax.Array, k: jax.Array, v: jax.Array,
+               mask: Optional[jax.Array], cfg: ModelConfig) -> jax.Array:
+    """One attention pass. q: (B,Tq,H,hd); k,v: (B,Tk,KV,hd);
+    mask: (Tq,Tk) or (B,Tq,Tk) bool or None."""
+    b, tq, h, hd = q.shape
+    kvh = k.shape[2]
+    g = h // kvh
+    sdt = jnp.dtype(cfg.attn_score_dtype)
+    qg = q.reshape(b, tq, kvh, g, hd)
+    scores = jnp.einsum("bqkgh,bskh->bkgqs", qg, k,
+                        preferred_element_type=sdt)
+    scores = scores * jnp.asarray(1.0 / jnp.sqrt(hd), sdt)
+    if mask is not None:
+        m = mask if mask.ndim == 3 else mask[None]
+        scores = jnp.where(m[:, None, None],
+                           scores, jnp.asarray(NEG_INF, sdt))
+    probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bkgqs,bskh->bqkgh", probs, v)
+    return out.reshape(b, tq, h, hd)
+
+
+def attend_blocked(q: jax.Array, k: jax.Array, v: jax.Array,
+                   cfg: ModelConfig, *, is_global=False,
+                   causal: bool = True, q_offset: int = 0,
+                   q_block: Optional[int] = None) -> jax.Array:
+    """Query-blocked attention (never materializes S x S scores)."""
+    q_block = q_block or cfg.attn_q_block
+    b, s, h, hd = q.shape
+    tk = k.shape[1]
+    kpos = jnp.arange(tk)
+    if s <= q_block:
+        mask = (_local_mask(jnp.arange(s) + q_offset, kpos, cfg, is_global)
+                if causal else None)
+        return gqa_attend(q, k, v, mask, cfg)
+    nb = -(-s // q_block)
+    pad = nb * q_block - s
+    qp = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0))) if pad else q
+    qb = jnp.moveaxis(qp.reshape(b, nb, q_block, h, hd), 1, 0)
+
+    def body(carry, xs):
+        qi, blk = xs
+        qpos = qi * q_block + jnp.arange(q_block) + q_offset
+        mask = _local_mask(qpos, kpos, cfg, is_global) if causal else None
+        return carry, gqa_attend(blk, k, v, mask, cfg)
+
+    _, ob = jax.lax.scan(body, None, (jnp.arange(nb), qb),
+                         unroll=nb if cfg.unroll_scans else 1)
+    out = jnp.moveaxis(ob, 0, 1).reshape(b, nb * q_block, h, hd)
+    return out[:, :s]
+
+
+# -------------------------------------------------------------- decode path
+
+def cache_size_for(cfg: ModelConfig, seq_len: int, layer_has_global: bool) -> int:
+    """Ring-cache slots a layer actually needs at decode time."""
+    if layer_has_global:
+        return seq_len
+    size = seq_len
+    if cfg.sliding_window is not None:
+        size = min(size, cfg.sliding_window)
+    if cfg.chunk_attn is not None:
+        size = min(size, cfg.chunk_attn)
+    return size
+
+
+def init_kv_cache(cfg: ModelConfig, batch: int, size: int) -> Params:
+    """Empty ring cache. ``slot_pos`` holds each slot's absolute position
+    (-1 = empty); keys are stored post-RoPE.
+
+    ``kv_cache_dtype="int8"`` stores symmetric per-(slot, head) quantized
+    entries + f32 scales (§Perf: halves decode cache bytes vs bf16)."""
+    kv, hd = cfg.n_kv_heads, cfg.hd
+    cache: Params = {"slot_pos": jnp.full((size,), -1, jnp.int32)}
+    if cfg.kv_cache_dtype == "int8":
+        cache["k"] = jnp.zeros((batch, size, kv, hd), jnp.int8)
+        cache["v"] = jnp.zeros((batch, size, kv, hd), jnp.int8)
+        cache["k_scale"] = jnp.zeros((batch, size, kv, 1), jnp.float32)
+        cache["v_scale"] = jnp.zeros((batch, size, kv, 1), jnp.float32)
+    else:
+        cache["k"] = jnp.zeros((batch, size, kv, hd), cfg.cdtype)
+        cache["v"] = jnp.zeros((batch, size, kv, hd), cfg.cdtype)
+    return cache
+
+
+def _quantize_kv(x: jax.Array):
+    """Symmetric int8 per-(token, head) quantization over head_dim."""
+    scale = jnp.maximum(jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1,
+                                keepdims=True) / 127.0, 1e-8)
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale),
+                 -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def decode_attend(p: Params, x1: jax.Array, cache: Params, pos: jax.Array,
+                  cfg: ModelConfig, is_global=False,
+                  use_rope=True) -> Tuple[jax.Array, Params]:
+    """One-token decode: write (k,v) at ``pos % size``, attend the ring.
+
+    x1: (B, 1, d); pos: scalar int32 absolute position of the new token.
+    """
+    b = x1.shape[0]
+    size = cache["k"].shape[1]
+    q = project_q(p, x1, cfg)
+    k1, v1 = project_kv(p, x1, cfg)
+    if cfg.mrope:
+        pos3 = jnp.broadcast_to(pos, (3, b, 1)).astype(jnp.int32)
+        q = maybe_rope(q, pos3, cfg, use_rope)
+        k1 = maybe_rope(k1, pos3, cfg, use_rope)
+    else:
+        pos_b = jnp.broadcast_to(pos, (b, 1)).astype(jnp.int32)
+        q = maybe_rope(q, pos_b, cfg, use_rope)
+        k1 = maybe_rope(k1, pos_b, cfg, use_rope)
+    slot = (pos % size).astype(jnp.int32)
+    new_cache: Params = {}
+    if cfg.kv_cache_dtype == "int8":
+        kq, ks = _quantize_kv(k1)
+        vq, vs = _quantize_kv(v1)
+        kqc = jax.lax.dynamic_update_slice(cache["k"], kq, (0, slot, 0, 0))
+        vqc = jax.lax.dynamic_update_slice(cache["v"], vq, (0, slot, 0, 0))
+        ksc = jax.lax.dynamic_update_slice(cache["k_scale"], ks,
+                                           (0, slot, 0, 0))
+        vsc = jax.lax.dynamic_update_slice(cache["v_scale"], vs,
+                                           (0, slot, 0, 0))
+        kc = (kqc.astype(cfg.cdtype)
+              * ksc.astype(cfg.cdtype))
+        vc = (vqc.astype(cfg.cdtype)
+              * vsc.astype(cfg.cdtype))
+        new_cache.update(k=kqc, v=vqc, k_scale=ksc, v_scale=vsc)
+    else:
+        kc = jax.lax.dynamic_update_slice(cache["k"], k1, (0, slot, 0, 0))
+        vc = jax.lax.dynamic_update_slice(cache["v"], v1, (0, slot, 0, 0))
+        new_cache.update(k=kc, v=vc)
+    slot_pos = cache["slot_pos"].at[slot].set(pos.astype(jnp.int32))
+    new_cache["slot_pos"] = slot_pos
+
+    # ring mask from absolute slot positions
+    sp = slot_pos
+    valid = (sp >= 0) & (sp <= pos)
+    if cfg.sliding_window is not None:
+        local_valid = valid & (pos - sp < cfg.sliding_window)
+    elif cfg.chunk_attn is not None:
+        local_valid = valid & (sp // cfg.chunk_attn == pos // cfg.chunk_attn)
+    else:
+        local_valid = valid
+    if isinstance(is_global, bool):
+        mask = valid if is_global else local_valid
+    else:
+        mask = jnp.where(is_global, valid, local_valid)
+
+    out = gqa_attend(q, kc, vc, jnp.broadcast_to(mask[None, None, :],
+                                                 (b, 1, size)), cfg)
+    y = out_proj(p, out, cfg)
+    return y, new_cache
+
+
+# --------------------------------------------------------------- train path
+
+def self_attend(p: Params, x: jax.Array, positions, cfg: ModelConfig, *,
+                is_global=False, use_rope=True,
+                q_block: Optional[int] = None) -> jax.Array:
+    """Full causal self-attention over x: (B, S, d)."""
+    q = project_q(p, x, cfg)
+    k, v = project_kv(p, x, cfg)
+    q = maybe_rope(q, positions, cfg, use_rope)
+    k = maybe_rope(k, positions, cfg, use_rope)
+    if cfg.use_pallas_attn:
+        from repro.kernels.flash_attention import ops as fops
+        o = fops.flash_attention(
+            q, k, v, causal=True,
+            window=cfg.sliding_window, chunk=cfg.chunk_attn,
+            is_global=bool(is_global) if isinstance(is_global, bool) else False)
+    else:
+        o = attend_blocked(q, k, v, cfg, is_global=is_global, causal=True,
+                           q_block=q_block)
+    return out_proj(p, o, cfg)
+
+
+def cross_attend(p: Params, x: jax.Array, enc_kv: Tuple[jax.Array, jax.Array],
+                 cfg: ModelConfig) -> jax.Array:
+    """Encoder-decoder cross attention (no mask, no rope)."""
+    q = project_q(p, x, cfg)
+    k, v = enc_kv
+    o = attend_blocked(q, k, v, cfg, causal=False)
+    return out_proj(p, o, cfg)
+
+
+def precompute_cross_kv(p: Params, enc_out: jax.Array,
+                        cfg: ModelConfig) -> Tuple[jax.Array, jax.Array]:
+    return project_kv(p, L.cast_to(enc_out, cfg.cdtype), cfg)

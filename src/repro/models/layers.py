@@ -1,0 +1,178 @@
+"""Shared primitive layers: norms, MLPs, rotary embeddings, initializers.
+
+Convention: every layer is a pair of pure functions ``init_*(key, ...) ->
+params`` and ``apply_*(params, x, ...) -> y`` over plain dict pytrees.
+Parameters are stored in ``cfg.param_dtype`` and cast to
+``cfg.compute_dtype`` at use; norm/softmax reductions run in float32.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Params = Dict[str, jax.Array]
+
+
+# ----------------------------------------------------------------- numerics
+
+def cast_to(x: jax.Array, dtype) -> jax.Array:
+    return x.astype(dtype) if x.dtype != dtype else x
+
+
+def wcast(p: Dict[str, jax.Array], name: str, cfg, roles) -> jax.Array:
+    """Cast a weight to compute dtype, optionally dropping its FSDP-axis
+    sharding at use (cfg.gather_weights: ZeRO-3 weight all-gather instead
+    of XLA's default activation-partial psum — see §Perf)."""
+    w = cast_to(p[name], cfg.cdtype)
+    if cfg.gather_weights:
+        from repro.parallel import sharding as PS
+        w = PS.constrain(w, roles)
+    return w
+
+
+def he_init(key, shape, dtype, fan_in: Optional[int] = None):
+    fan = fan_in if fan_in is not None else shape[0]
+    return (jax.random.normal(key, shape, jnp.float32)
+            * (1.0 / jnp.sqrt(jnp.maximum(fan, 1)))).astype(dtype)
+
+
+# -------------------------------------------------------------------- norms
+
+def init_norm(kind: str, d: int, dtype) -> Params:
+    if kind == "rmsnorm":
+        return {"scale": jnp.zeros((d,), dtype)}          # gemma-style (1+s)
+    if kind == "layernorm":
+        return {"scale": jnp.zeros((d,), dtype), "bias": jnp.zeros((d,), dtype)}
+    raise ValueError(kind)
+
+
+def apply_norm(kind: str, p: Params, x: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dtype = x.dtype
+    xf = x.astype(jnp.float32)
+    if kind == "rmsnorm":
+        var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+        y = xf * jax.lax.rsqrt(var + eps) * (1.0 + p["scale"].astype(jnp.float32))
+    elif kind == "layernorm":
+        mu = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.var(xf, axis=-1, keepdims=True)
+        y = ((xf - mu) * jax.lax.rsqrt(var + eps)
+             * (1.0 + p["scale"].astype(jnp.float32))
+             + p["bias"].astype(jnp.float32))
+    else:
+        raise ValueError(kind)
+    return y.astype(dtype)
+
+
+# --------------------------------------------------------------------- MLPs
+
+def init_mlp(key, d: int, ff: int, activation: str, dtype) -> Params:
+    ks = jax.random.split(key, 3)
+    p = {"w_out": he_init(ks[2], (ff, d), dtype, fan_in=ff)}
+    if activation in ("swiglu", "geglu"):
+        p["w_gate"] = he_init(ks[0], (d, ff), dtype, fan_in=d)
+        p["w_in"] = he_init(ks[1], (d, ff), dtype, fan_in=d)
+    else:  # plain gelu MLP (whisper)
+        p["w_in"] = he_init(ks[1], (d, ff), dtype, fan_in=d)
+    return p
+
+
+def apply_mlp(p: Params, x: jax.Array, cfg) -> jax.Array:
+    activation = cfg.activation
+    x = cast_to(x, cfg.cdtype)
+    w_in = wcast(p, "w_in", cfg, [None, "model"])
+    w_out = wcast(p, "w_out", cfg, ["model", None])
+    if activation == "swiglu":
+        g = x @ wcast(p, "w_gate", cfg, [None, "model"])
+        h = jax.nn.silu(g) * (x @ w_in)
+    elif activation == "geglu":
+        g = x @ wcast(p, "w_gate", cfg, [None, "model"])
+        h = jax.nn.gelu(g, approximate=True) * (x @ w_in)
+    elif activation == "gelu":
+        h = jax.nn.gelu(x @ w_in, approximate=True)
+    else:
+        raise ValueError(activation)
+    return h @ w_out
+
+
+# ------------------------------------------------------------------- rotary
+
+def rope_freqs(hd_rot: int, theta: float) -> jax.Array:
+    """(hd_rot/2,) inverse frequencies."""
+    return 1.0 / (theta ** (jnp.arange(0, hd_rot, 2, dtype=jnp.float32) / hd_rot))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float,
+               rotary_pct: float = 1.0) -> jax.Array:
+    """Rotate the first ``rotary_pct`` fraction of head_dim.
+
+    x: (..., S, H, hd); positions: broadcastable to (..., S).
+    """
+    hd = x.shape[-1]
+    hd_rot = int(hd * rotary_pct) // 2 * 2
+    if hd_rot == 0:
+        return x
+    xr, xp = x[..., :hd_rot], x[..., hd_rot:]
+    freqs = rope_freqs(hd_rot, theta)                       # (hd_rot/2,)
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (..., S, hd/2)
+    ang = ang[..., None, :]                                 # (..., S, 1, hd/2)
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = jnp.split(xr.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return jnp.concatenate([out.astype(x.dtype), xp], axis=-1)
+
+
+def apply_mrope(x: jax.Array, positions3: jax.Array, theta: float,
+                sections: Tuple[int, int, int]) -> jax.Array:
+    """Qwen2-VL M-RoPE: head_dim/2 frequency slots split into (t, h, w)
+    sections, each rotated by its own position stream.
+
+    x: (B, S, H, hd); positions3: (3, B, S).
+    """
+    hd = x.shape[-1]
+    half = hd // 2
+    total = sum(sections)
+    # normalize sections to cover exactly half the head dim
+    scale = half / total
+    widths = [int(round(s * scale)) for s in sections]
+    widths[-1] = half - sum(widths[:-1])
+    freqs = rope_freqs(hd, theta)                           # (half,)
+    # per-slot position stream id: 0,1,2 over the freq axis
+    slot_pos = []
+    for comp, w in enumerate(widths):
+        slot_pos += [comp] * w
+    slot = jnp.asarray(slot_pos)                            # (half,)
+    pos = positions3.astype(jnp.float32)[slot]              # (half, B, S)
+    ang = jnp.einsum("hbs,h->bsh", pos, freqs)              # (B, S, half)
+    ang = ang[..., None, :]                                 # (B, S, 1, half)
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------- embedding
+
+def init_embedding(key, vocab: int, d: int, dtype) -> Params:
+    return {"table": jax.random.normal(key, (vocab, d), jnp.float32)
+            .astype(dtype) * 0.02}
+
+
+def embed(p: Params, tokens: jax.Array, cdtype, scale: bool = False) -> jax.Array:
+    x = cast_to(p["table"], cdtype)[tokens]
+    if scale:
+        x = x * jnp.asarray(jnp.sqrt(p["table"].shape[-1]), cdtype)
+    return x
+
+
+def unembed(p_head: Optional[Params], p_embed: Params, x: jax.Array,
+            cdtype, softcap: Optional[float] = None) -> jax.Array:
+    if p_head is not None:
+        logits = cast_to(x, cdtype) @ cast_to(p_head["w"], cdtype)
+    else:  # tied
+        logits = cast_to(x, cdtype) @ cast_to(p_embed["table"], cdtype).T
+    if softcap is not None:
+        logits = jnp.tanh(logits / softcap) * softcap
+    return logits

@@ -1,0 +1,383 @@
+"""State-space / recurrent blocks: Mamba (selective SSM), mLSTM, sLSTM.
+
+TPU adaptation notes (DESIGN.md):
+
+* **Mamba** — selective scan with diagonal state, implemented as a
+  ``lax.scan`` over time carrying (B, inner, d_state).  dt/B/C projections
+  are computed batched outside the scan; the per-step update is elementwise
+  + small contractions, which XLA fuses into the loop body.  Decode is the
+  natural single-step form of the same update.
+* **mLSTM** — the matrix-memory LSTM *is* gated linear attention; we use
+  the chunkwise-parallel form (intra-chunk attention matmuls + inter-chunk
+  (hd x hd) state carry) so the MXU does the work.  A sequential reference
+  (``mlstm_sequential``) backs the correctness tests.
+* **sLSTM** — scalar memory with exponential gating and block-diagonal
+  recurrence; inherently sequential -> ``lax.scan`` over time.
+
+All gating uses the xLSTM stabilizer state m (log-space running max), so
+exp() never overflows; the chunkwise and sequential mLSTM forms share the
+same stabilizer convention and match to float tolerance.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models.config import ModelConfig, SSMConfig
+
+Params = Dict[str, jax.Array]
+
+
+# ===========================================================================
+# Mamba (selective SSM, diagonal state)
+# ===========================================================================
+
+def mamba_dims(cfg: ModelConfig) -> Tuple[int, int]:
+    inner = cfg.ssm.expand * cfg.d_model
+    dt_rank = cfg.ssm.dt_rank or -(-cfg.d_model // 16)
+    return inner, dt_rank
+
+
+def init_mamba(key, cfg: ModelConfig) -> Params:
+    d, s = cfg.d_model, cfg.ssm
+    inner, dtr = mamba_dims(cfg)
+    ks = jax.random.split(key, 6)
+    # S4D-real initialization for A
+    a = jnp.broadcast_to(jnp.arange(1, s.d_state + 1, dtype=jnp.float32),
+                         (inner, s.d_state))
+    return {
+        "in_proj": L.he_init(ks[0], (d, 2 * inner), cfg.pdtype, fan_in=d),
+        "conv_w": L.he_init(ks[1], (s.d_conv, inner), cfg.pdtype,
+                            fan_in=s.d_conv),
+        "x_proj": L.he_init(ks[2], (inner, dtr + 2 * s.d_state), cfg.pdtype,
+                            fan_in=inner),
+        "dt_proj": L.he_init(ks[3], (dtr, inner), cfg.pdtype, fan_in=dtr),
+        "dt_bias": jnp.log(jnp.expm1(  # softplus^-1 of U(1e-3, 1e-1)
+            jax.random.uniform(ks[4], (inner,), minval=1e-3, maxval=1e-1)
+        )).astype(jnp.float32),
+        "A_log": jnp.log(a),
+        "D": jnp.ones((inner,), jnp.float32),
+        "out_proj": L.he_init(ks[5], (inner, d), cfg.pdtype, fan_in=inner),
+    }
+
+
+class MambaState(NamedTuple):
+    conv: jax.Array  # (B, d_conv-1, inner) last inputs for the causal conv
+    ssm: jax.Array   # (B, inner, d_state) fp32
+
+
+def init_mamba_state(cfg: ModelConfig, batch: int) -> MambaState:
+    inner, _ = mamba_dims(cfg)
+    return MambaState(
+        conv=jnp.zeros((batch, cfg.ssm.d_conv - 1, inner), cfg.cdtype),
+        ssm=jnp.zeros((batch, inner, cfg.ssm.d_state), jnp.float32))
+
+
+def _mamba_inner(p: Params, xz: jax.Array, cfg: ModelConfig,
+                 state: Optional[MambaState]) -> Tuple[jax.Array, MambaState]:
+    """Core selective scan. xz: (B, S, 2*inner) already projected."""
+    s = cfg.ssm
+    inner, dtr = mamba_dims(cfg)
+    b, t, _ = xz.shape
+    x, z = jnp.split(xz, 2, axis=-1)
+
+    # causal depthwise conv (window d_conv) with carried context
+    conv_ctx = (state.conv if state is not None
+                else jnp.zeros((b, s.d_conv - 1, inner), x.dtype))
+    xc = jnp.concatenate([conv_ctx, x], axis=1)              # (B, T+dc-1, in)
+    w = L.cast_to(p["conv_w"], x.dtype)                      # (dc, inner)
+    xconv = sum(xc[:, i:i + t, :] * w[i] for i in range(s.d_conv))
+    new_conv = xc[:, t:, :] if t >= s.d_conv - 1 else xc[:, -(s.d_conv - 1):, :]
+    xs = jax.nn.silu(xconv)
+
+    # input-dependent dt, B, C
+    proj = xs @ L.wcast(p, "x_proj", cfg, ["model", None])   # (B,T,dtr+2N)
+    dt, bmat, cmat = jnp.split(proj, [dtr, dtr + s.d_state], axis=-1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) @ p["dt_proj"].astype(jnp.float32)
+                         + p["dt_bias"])                     # (B,T,inner)
+    a = -jnp.exp(p["A_log"])                                 # (inner, N)
+    bmat = bmat.astype(jnp.float32)
+    cmat = cmat.astype(jnp.float32)
+    xs32 = xs.astype(jnp.float32)
+
+    def step(h, xs_t):
+        dt_t, b_t, c_t, x_t = xs_t                           # (B,in),(B,N),(B,N),(B,in)
+        da = jnp.exp(dt_t[..., None] * a)                    # (B,in,N)
+        dbx = (dt_t * x_t)[..., None] * b_t[:, None, :]      # (B,in,N)
+        h = da * h + dbx
+        y = jnp.einsum("bin,bn->bi", h, c_t)                 # (B,in)
+        return h, y
+
+    h0 = (state.ssm if state is not None
+          else jnp.zeros((b, inner, s.d_state), jnp.float32))
+    xs_seq = (jnp.moveaxis(dt, 1, 0), jnp.moveaxis(bmat, 1, 0),
+              jnp.moveaxis(cmat, 1, 0), jnp.moveaxis(xs32, 1, 0))
+    h_last, ys = jax.lax.scan(step, h0, xs_seq)
+    y = jnp.moveaxis(ys, 0, 1) + xs32 * p["D"]               # (B,T,inner)
+    y = y.astype(xz.dtype) * jax.nn.silu(z)
+    return y, MambaState(conv=new_conv, ssm=h_last)
+
+
+def apply_mamba(p: Params, x: jax.Array, cfg: ModelConfig,
+                state: Optional[MambaState] = None
+                ) -> Tuple[jax.Array, MambaState]:
+    """x: (B, S, d) -> (B, S, d). ``state`` enables decode continuation."""
+    xz = L.cast_to(x, cfg.cdtype) @ L.wcast(p, "in_proj", cfg,
+                                            [None, "model"])
+    y, new_state = _mamba_inner(p, xz, cfg, state)
+    return y @ L.wcast(p, "out_proj", cfg, ["model", None]), new_state
+
+
+# ===========================================================================
+# mLSTM (matrix memory; chunkwise-parallel = gated linear attention)
+# ===========================================================================
+
+def mlstm_dims(cfg: ModelConfig) -> Tuple[int, int]:
+    inner = 2 * cfg.d_model
+    hd = inner // cfg.n_heads
+    return inner, hd
+
+
+def init_mlstm(key, cfg: ModelConfig) -> Params:
+    d = cfg.d_model
+    inner, hd = mlstm_dims(cfg)
+    h = cfg.n_heads
+    ks = jax.random.split(key, 6)
+    return {
+        "up_proj": L.he_init(ks[0], (d, 2 * inner), cfg.pdtype, fan_in=d),
+        # q,k,v as block-diagonal per head: (H, hd, hd)
+        "wq": L.he_init(ks[1], (h, hd, hd), cfg.pdtype, fan_in=hd),
+        "wk": L.he_init(ks[2], (h, hd, hd), cfg.pdtype, fan_in=hd),
+        "wv": L.he_init(ks[3], (h, hd, hd), cfg.pdtype, fan_in=hd),
+        # per-dim gate projections from the block input
+        "w_i": L.he_init(ks[4], (inner, h), jnp.float32, fan_in=inner),
+        "w_f": L.he_init(ks[5], (inner, h), jnp.float32, fan_in=inner),
+        "b_i": jnp.zeros((h,), jnp.float32),
+        "b_f": jnp.full((h,), 3.0, jnp.float32),   # forget-gate bias > 0
+        "ln_scale": jnp.zeros((inner,), jnp.float32),
+        "down_proj": L.he_init(jax.random.fold_in(key, 7), (inner, d),
+                               cfg.pdtype, fan_in=inner),
+    }
+
+
+class MLSTMState(NamedTuple):
+    c: jax.Array  # (B, H, hd, hd) fp32 matrix memory
+    n: jax.Array  # (B, H, hd) normalizer
+    m: jax.Array  # (B, H) log-space stabilizer
+
+
+def init_mlstm_state(cfg: ModelConfig, batch: int) -> MLSTMState:
+    _, hd = mlstm_dims(cfg)
+    h = cfg.n_heads
+    return MLSTMState(c=jnp.zeros((batch, h, hd, hd), jnp.float32),
+                      n=jnp.zeros((batch, h, hd), jnp.float32),
+                      m=jnp.full((batch, h), -1e30, jnp.float32))
+
+
+def _mlstm_gates(p: Params, xin: jax.Array):
+    """log input/forget gate pre-activations. xin: (B,T,inner) ->
+    li, lf: (B,T,H) fp32."""
+    xf = xin.astype(jnp.float32)
+    li = xf @ p["w_i"] + p["b_i"]
+    lf = jax.nn.log_sigmoid(xf @ p["w_f"] + p["b_f"])
+    return li, lf
+
+
+def mlstm_sequential(q, k, v, li, lf, state: MLSTMState
+                     ) -> Tuple[jax.Array, MLSTMState]:
+    """Reference recurrence. q,k,v: (B,T,H,hd); li,lf: (B,T,H)."""
+    hd = q.shape[-1]
+    scale = 1.0 / jnp.sqrt(hd)
+
+    def step(st: MLSTMState, xs):
+        qt, kt, vt, lit, lft = xs                # (B,H,hd)x3, (B,H)x2
+        m_new = jnp.maximum(lft + st.m, lit)
+        fp = jnp.exp(lft + st.m - m_new)
+        ip = jnp.exp(lit - m_new)
+        kts = kt * scale
+        c = fp[..., None, None] * st.c + ip[..., None, None] * \
+            jnp.einsum("bhk,bhv->bhkv", kts, vt)
+        n = fp[..., None] * st.n + ip[..., None] * kts
+        num = jnp.einsum("bhk,bhkv->bhv", qt, c)
+        den = jnp.maximum(jnp.abs(jnp.einsum("bhk,bhk->bh", qt, n)),
+                          jnp.exp(-m_new))
+        y = num / den[..., None]
+        return MLSTMState(c, n, m_new), y
+
+    xs = tuple(jnp.moveaxis(a.astype(jnp.float32), 1, 0)
+               for a in (q, k, v, li, lf))
+    state, ys = jax.lax.scan(step, state, xs)
+    return jnp.moveaxis(ys, 0, 1), state
+
+
+def mlstm_chunkwise(q, k, v, li, lf, state: MLSTMState, chunk: int
+                    ) -> Tuple[jax.Array, MLSTMState]:
+    """Chunkwise-parallel mLSTM, exact w.r.t. the sequential form.
+
+    Shapes as in :func:`mlstm_sequential`; T must be a multiple of chunk.
+    """
+    b, t, h, hd = q.shape
+    assert t % chunk == 0, (t, chunk)
+    nc = t // chunk
+    scale = 1.0 / jnp.sqrt(hd)
+
+    def resh(a):
+        return jnp.moveaxis(
+            a.astype(jnp.float32).reshape(b, nc, chunk, *a.shape[2:]), 1, 0)
+
+    qc, kc, vc, lic, lfc = map(resh, (q, k, v, li, lf))      # (nc,B,L,H,...)
+
+    def chunk_step(st: MLSTMState, xs):
+        qt, kt, vt, lit, lft = xs                            # (B,L,H,...)
+        kt = kt * scale
+        bcum = jnp.cumsum(lft, axis=1)                       # (B,L,H) sum lf
+        btot = bcum[:, -1]                                   # (B,H)
+        # row stabilizers
+        g = bcum + st.m[:, None, :]                          # (B,L,H) inter
+        a_mat = (bcum[:, :, None, :] - bcum[:, None, :, :]
+                 + lit[:, None, :, :])                       # (B,Lq,Ls,H)
+        lq = jnp.arange(chunk)
+        causal = lq[:, None] >= lq[None, :]
+        a_mat = jnp.where(causal[None, :, :, None], a_mat, -jnp.inf)
+        a_max = jnp.max(a_mat, axis=2)                       # (B,L,H)
+        m_t = jnp.maximum(g, a_max)                          # (B,L,H)
+
+        inter_w = jnp.exp(g - m_t)                           # (B,L,H)
+        intra_w = jnp.exp(a_mat - m_t[:, :, None, :])        # (B,Lq,Ls,H)
+        s_qk = jnp.einsum("blhk,bshk->blsh", qt, kt)         # (B,Lq,Ls,H)
+        w = intra_w * s_qk
+        num = (jnp.einsum("blsh,bshv->blhv", w, vt)
+               + inter_w[..., None] * jnp.einsum("blhk,bhkv->blhv", qt, st.c))
+        den_intra = jnp.sum(w, axis=2)                       # (B,L,H)
+        den_inter = inter_w * jnp.einsum("blhk,bhk->blh", qt, st.n)
+        den = jnp.maximum(jnp.abs(den_intra + den_inter), jnp.exp(-m_t))
+        y = num / den[..., None]                             # (B,L,H,hd)
+
+        # chunk-final state
+        m_out = jnp.maximum(btot + st.m,
+                            jnp.max(btot[:, None] - bcum + lit, axis=1))
+        carry_w = jnp.exp(btot + st.m - m_out)               # (B,H)
+        in_w = jnp.exp(btot[:, None] - bcum + lit - m_out[:, None])  # (B,L,H)
+        c_new = (carry_w[..., None, None] * st.c
+                 + jnp.einsum("blh,blhk,blhv->bhkv", in_w, kt, vt))
+        n_new = (carry_w[..., None] * st.n
+                 + jnp.einsum("blh,blhk->bhk", in_w, kt))
+        return MLSTMState(c_new, n_new, m_out), y
+
+    state, ys = jax.lax.scan(chunk_step, state, (qc, kc, vc, lic, lfc))
+    return jnp.moveaxis(ys, 0, 1).reshape(b, t, h, hd), state
+
+
+def apply_mlstm(p: Params, x: jax.Array, cfg: ModelConfig,
+                state: Optional[MLSTMState] = None, chunk: Optional[int] = None
+                ) -> Tuple[jax.Array, MLSTMState]:
+    """Full mLSTM block body (pre-norm residual handled by caller).
+
+    x: (B, S, d) -> (B, S, d).
+    """
+    b, t, d = x.shape
+    inner, hd = mlstm_dims(cfg)
+    h = cfg.n_heads
+    cdt = cfg.cdtype
+    up = L.cast_to(x, cdt) @ L.wcast(p, "up_proj", cfg, [None, "model"])
+    xin, z = jnp.split(up, 2, axis=-1)                       # (B,T,inner)x2
+    xh = xin.reshape(b, t, h, hd)
+    qkv_roles = [None, None, "model"]
+    q = jnp.einsum("bthi,hij->bthj", xh, L.wcast(p, "wq", cfg, qkv_roles))
+    k = jnp.einsum("bthi,hij->bthj", xh, L.wcast(p, "wk", cfg, qkv_roles))
+    v = jnp.einsum("bthi,hij->bthj", xh, L.wcast(p, "wv", cfg, qkv_roles))
+    li, lf = _mlstm_gates(p, xin)
+    if state is None:
+        state = init_mlstm_state(cfg, b)
+    ck = chunk or cfg.ssm.chunk
+    if t == 1 or t % ck != 0:
+        y, state = mlstm_sequential(q, k, v, li, lf, state)
+    else:
+        y, state = mlstm_chunkwise(q, k, v, li, lf, state, ck)
+    y = y.reshape(b, t, inner)
+    # per-dim RMS "group norm" then gate
+    yn = L.apply_norm("rmsnorm", {"scale": p["ln_scale"]}, y.astype(cdt))
+    out = (yn * jax.nn.silu(z)) @ L.wcast(p, "down_proj", cfg,
+                                          ["model", None])
+    return out, state
+
+
+# ===========================================================================
+# sLSTM (scalar memory, exponential gating, block-diagonal recurrence)
+# ===========================================================================
+
+def init_slstm(key, cfg: ModelConfig) -> Params:
+    d = cfg.d_model
+    h = cfg.n_heads
+    dh = d // h
+    ks = jax.random.split(key, 4)
+    ff = -(-4 * d // 3)
+    return {
+        "w": L.he_init(ks[0], (d, 4 * d), cfg.pdtype, fan_in=d),   # i,f,z,o
+        "b": jnp.concatenate([jnp.zeros((d,)), jnp.full((d,), 3.0),
+                              jnp.zeros((2 * d,))]).astype(jnp.float32),
+        "r": L.he_init(ks[1], (h, dh, 4 * dh), cfg.pdtype, fan_in=dh),
+        "ff_in": L.he_init(ks[2], (d, ff), cfg.pdtype, fan_in=d),
+        "ff_out": L.he_init(ks[3], (ff, d), cfg.pdtype, fan_in=ff),
+    }
+
+
+class SLSTMState(NamedTuple):
+    c: jax.Array  # (B, d)
+    n: jax.Array  # (B, d)
+    h: jax.Array  # (B, d)
+    m: jax.Array  # (B, d)
+
+
+def init_slstm_state(cfg: ModelConfig, batch: int) -> SLSTMState:
+    d = cfg.d_model
+    z = jnp.zeros((batch, d), jnp.float32)
+    return SLSTMState(c=z, n=z, h=z, m=jnp.full((batch, d), -1e30, jnp.float32))
+
+
+def apply_slstm_cell(p: Params, x: jax.Array, cfg: ModelConfig,
+                     state: Optional[SLSTMState] = None
+                     ) -> Tuple[jax.Array, SLSTMState]:
+    """Sequential sLSTM over x: (B, T, d) (cell only, no FFN)."""
+    b, t, d = x.shape
+    h_heads = cfg.n_heads
+    dh = d // h_heads
+    wx = (x.astype(jnp.float32) @ p["w"].astype(jnp.float32)
+          + p["b"])                                          # (B,T,4d)
+    if state is None:
+        state = init_slstm_state(cfg, b)
+    r = p["r"].astype(jnp.float32)
+
+    def step(st: SLSTMState, wx_t):
+        hh = st.h.reshape(b, h_heads, dh)
+        rec = jnp.einsum("bhi,hio->bho", hh, r).reshape(b, 4 * d)
+        pre = wx_t + rec
+        li_, lf_, z_, o_ = jnp.split(pre, 4, axis=-1)
+        lf = jax.nn.log_sigmoid(lf_)
+        z = jnp.tanh(z_)
+        o = jax.nn.sigmoid(o_)
+        m_new = jnp.maximum(lf + st.m, li_)
+        fp = jnp.exp(lf + st.m - m_new)
+        ip = jnp.exp(li_ - m_new)
+        c = fp * st.c + ip * z
+        n = jnp.maximum(fp * st.n + ip, 1e-6)
+        h = o * c / n
+        return SLSTMState(c, n, h, m_new), h
+
+    state, ys = jax.lax.scan(step, state, jnp.moveaxis(wx, 1, 0))
+    return jnp.moveaxis(ys, 0, 1).astype(x.dtype), state
+
+
+def apply_slstm(p: Params, x: jax.Array, cfg: ModelConfig,
+                state: Optional[SLSTMState] = None
+                ) -> Tuple[jax.Array, SLSTMState]:
+    """Cell + post-FFN (projection factor 4/3), as one residual body."""
+    y, state = apply_slstm_cell(p, x, cfg, state)
+    cdt = cfg.cdtype
+    hmid = jax.nn.gelu(L.cast_to(y, cdt) @ L.wcast(p, "ff_in", cfg, [None, "model"]),
+                       approximate=True)
+    return hmid @ L.wcast(p, "ff_out", cfg, ["model", None]), state

@@ -1,0 +1,366 @@
+"""Decoder-LM assembly: scanned layer groups over heterogeneous blocks.
+
+Layers are stacked into groups of ``cfg.group_pattern`` (e.g. jamba's
+``(mamba x4, attn, mamba x3)``) whose parameters carry a leading
+``(n_groups, ...)`` axis; the stack is applied with ``lax.scan`` so an
+80-layer model lowers to one group body (small HLO, fast compiles).
+Per-layer variation *across* groups (llama4's every-4th-layer global
+attention) rides in as scanned boolean flags.
+
+Three entry points, all pure functions over a params pytree:
+
+* ``forward_train(params, batch, cfg)``       -> logits (B, S, Vp)
+* ``forward_prefill(params, batch, cfg)``     -> logits, decode caches
+* ``decode_step(params, caches, tokens, pos, cfg)`` -> logits, caches
+
+MoE aux losses accumulate through the scan carry and come back in a
+metrics dict.  ``repro.parallel.sharding.activations`` pins (B, S, d)
+activations to the DP axes at group boundaries.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import attention as A
+from repro.models import layers as L
+from repro.models import moe as MOE
+from repro.models import ssm as S
+from repro.models.config import ModelConfig
+from repro.parallel import sharding as PS
+
+Params = Dict[str, Any]
+
+
+# ===========================================================================
+# init
+# ===========================================================================
+
+def _init_block(key, cfg: ModelConfig, kind: str, layer_is_moe: bool) -> Params:
+    ks = jax.random.split(key, 4)
+    p: Params = {}
+    if kind == "attn":
+        p["attn_norm"] = L.init_norm(cfg.norm, cfg.d_model, jnp.float32)
+        p["attn"] = A.init_attention(ks[0], cfg)
+    elif kind == "mamba":
+        p["attn_norm"] = L.init_norm(cfg.norm, cfg.d_model, jnp.float32)
+        p["mamba"] = S.init_mamba(ks[0], cfg)
+    elif kind == "mlstm":
+        p["norm"] = L.init_norm(cfg.norm, cfg.d_model, jnp.float32)
+        p["cell"] = S.init_mlstm(ks[0], cfg)
+        return p
+    elif kind == "slstm":
+        p["norm"] = L.init_norm(cfg.norm, cfg.d_model, jnp.float32)
+        p["ff_norm"] = L.init_norm(cfg.norm, cfg.d_model, jnp.float32)
+        p["cell"] = S.init_slstm(ks[0], cfg)
+        return p
+    else:
+        raise ValueError(kind)
+    p["mlp_norm"] = L.init_norm(cfg.norm, cfg.d_model, jnp.float32)
+    if layer_is_moe:
+        p["moe"] = MOE.init_moe(ks[1], cfg)
+    else:
+        p["mlp"] = L.init_mlp(ks[1], cfg.d_model, cfg.d_ff, cfg.activation,
+                              cfg.pdtype)
+    return p
+
+
+def group_flags(cfg: ModelConfig) -> jax.Array:
+    """(n_groups, G) bool — per-layer 'global attention' flag (llama4)."""
+    flags = np.zeros((cfg.n_groups, cfg.group_size), bool)
+    for li in range(cfg.n_layers):
+        flags[li // cfg.group_size, li % cfg.group_size] = \
+            cfg.layer_is_global_attn(li)
+    return jnp.asarray(flags)
+
+
+def init_lm(key, cfg: ModelConfig) -> Params:
+    keys = jax.random.split(key, 4 + cfg.group_size)
+    params: Params = {
+        "embed": L.init_embedding(keys[0], cfg.padded_vocab, cfg.d_model,
+                                  cfg.pdtype),
+        "final_norm": L.init_norm(cfg.norm, cfg.d_model, jnp.float32),
+    }
+    if not cfg.tie_embeddings:
+        params["head"] = {"w": L.he_init(keys[1], (cfg.d_model,
+                                                   cfg.padded_vocab),
+                                         cfg.pdtype, fan_in=cfg.d_model)}
+    groups: Params = {}
+    for pos, kind in enumerate(cfg.group_pattern):
+        is_moe = cfg.layer_is_moe(pos)  # every_n divides G (validated below)
+        if cfg.moe is not None and cfg.group_size % cfg.moe.every_n_layers:
+            raise ValueError("moe.every_n_layers must divide group size")
+
+        def init_one(k, kind=kind, is_moe=is_moe):
+            return _init_block(k, cfg, kind, is_moe)
+
+        gkeys = jax.random.split(keys[4 + pos], cfg.n_groups)
+        groups[f"pos_{pos}"] = jax.vmap(init_one)(gkeys)
+    params["groups"] = groups
+    return params
+
+
+# ===========================================================================
+# forward (train / prefill)
+# ===========================================================================
+
+class ScanAux(NamedTuple):
+    lb_loss: jax.Array
+    z_loss: jax.Array
+    dropped: jax.Array
+
+
+ZERO_AUX = ScanAux(jnp.zeros(()), jnp.zeros(()), jnp.zeros(()))
+
+
+def _apply_mlp_or_moe(p: Params, x: jax.Array, cfg: ModelConfig
+                      ) -> Tuple[jax.Array, ScanAux]:
+    h = L.apply_norm(cfg.norm, p["mlp_norm"], x)
+    if "moe" in p:
+        y, aux = MOE.apply_moe(p["moe"], h, cfg)
+        return x + y, ScanAux(aux.load_balance_loss, aux.router_z_loss,
+                              aux.dropped_fraction)
+    return x + L.apply_mlp(p["mlp"], h, cfg), ZERO_AUX
+
+
+def _block_train(p: Params, x: jax.Array, kind: str, cfg: ModelConfig,
+                 positions, is_global) -> Tuple[jax.Array, ScanAux]:
+    if kind == "attn":
+        h = L.apply_norm(cfg.norm, p["attn_norm"], x)
+        use_rope = (not is_global) if isinstance(is_global, bool) \
+            else jnp.logical_not(is_global)  # llama4: NoPE on global layers
+        x = x + A.self_attend(p["attn"], h, positions, cfg,
+                              is_global=is_global, use_rope=use_rope)
+        return _apply_mlp_or_moe(p, x, cfg)
+    if kind == "mamba":
+        h = L.apply_norm(cfg.norm, p["attn_norm"], x)
+        y, _ = S.apply_mamba(p["mamba"], h, cfg)
+        return _apply_mlp_or_moe(p, x + y, cfg)
+    if kind == "mlstm":
+        h = L.apply_norm(cfg.norm, p["norm"], x)
+        y, _ = S.apply_mlstm(p["cell"], h, cfg)
+        return x + y, ZERO_AUX
+    if kind == "slstm":
+        h = L.apply_norm(cfg.norm, p["norm"], x)
+        y, _ = S.apply_slstm_cell(p["cell"], h, cfg)
+        x = x + y
+        h2 = L.apply_norm(cfg.norm, p["ff_norm"], x)
+        cdt = cfg.cdtype
+        ff = jax.nn.gelu(L.cast_to(h2, cdt)
+                         @ L.wcast(p["cell"], "ff_in", cfg, [None, "model"]),
+                         approximate=True)
+        return x + ff @ L.wcast(p["cell"], "ff_out", cfg, ["model", None]), ZERO_AUX
+    raise ValueError(kind)
+
+
+def _group_body_train(gparams: Params, x: jax.Array, flags: jax.Array,
+                      cfg: ModelConfig, positions) -> Tuple[jax.Array, ScanAux]:
+    aux = ZERO_AUX
+    for pos, kind in enumerate(cfg.group_pattern):
+        x, a = _block_train(gparams[f"pos_{pos}"], x, kind, cfg, positions,
+                            flags[pos] if cfg.global_every else False)
+        aux = ScanAux(*(s + t for s, t in zip(aux, a)))
+        x = PS.activations(x)
+    return x, aux
+
+
+def _maybe_remat(fn, cfg: ModelConfig):
+    if cfg.remat == "none":
+        return fn
+    if cfg.remat == "dots":
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+    return jax.checkpoint(fn)  # "block": save only group boundaries
+
+
+def backbone(params: Params, x: jax.Array, cfg: ModelConfig,
+             positions) -> Tuple[jax.Array, ScanAux]:
+    """Run all layer groups over embedded activations x: (B, S, d)."""
+    flags = group_flags(cfg)
+
+    def body(carry, xs):
+        x, aux = carry
+        gp, fl = xs
+        x, a = _group_body_train(gp, x, fl, cfg, positions)
+        return (x, ScanAux(*(s + t for s, t in zip(aux, a)))), None
+
+    body = _maybe_remat(body, cfg)
+    (x, aux), _ = jax.lax.scan(body, (x, ZERO_AUX),
+                               (params["groups"], flags),
+                               unroll=cfg.n_groups if cfg.unroll_scans else 1)
+    return x, aux
+
+
+def forward_train(params: Params, batch: Dict[str, jax.Array],
+                  cfg: ModelConfig) -> Tuple[jax.Array, ScanAux]:
+    tokens = batch["tokens"]
+    b, s = tokens.shape
+    x = L.embed(params["embed"], tokens, cfg.cdtype, scale=cfg.embed_scale)
+    if "patch_embeds" in batch:
+        # VLM stub frontend: precomputed patch embeddings occupy the first
+        # P token slots (early fusion); the vision tower itself is out of
+        # scope per the assignment.
+        patches = L.cast_to(batch["patch_embeds"], cfg.cdtype)
+        x = jax.lax.dynamic_update_slice(x, patches, (0, 0, 0))
+    x = PS.activations(x)
+    if cfg.mrope:
+        positions = batch.get("positions")
+        if positions is None:
+            pos = jnp.broadcast_to(jnp.arange(s), (b, s))
+            positions = jnp.broadcast_to(pos, (3, b, s))
+    else:
+        positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+    x, aux = backbone(params, x, cfg, positions)
+    x = L.apply_norm(cfg.norm, params["final_norm"], x)
+    logits = L.unembed(params.get("head"), params["embed"], x, cfg.cdtype,
+                       softcap=cfg.logit_softcap)
+    logits = PS.constrain(logits, ["batch", None, "model"])
+    return logits, aux
+
+
+# ===========================================================================
+# loss
+# ===========================================================================
+
+def lm_loss(params: Params, batch: Dict[str, jax.Array], cfg: ModelConfig
+            ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    logits, aux = forward_train(params, batch, cfg)
+    targets = batch["targets"]
+    logits32 = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits32, axis=-1)
+    # gold logit via iota-mask reduction, NOT take_along_axis: a gather over
+    # the TP-sharded vocab axis makes XLA all-gather the full (B,S,V) f32
+    # logits per device (tens of GB at 4k x 256); the masked reduce stays
+    # sharded and fuses.
+    viota = jax.lax.broadcasted_iota(jnp.int32, (1, 1, logits.shape[-1]), 2)
+    gold = jnp.sum(jnp.where(viota == targets[..., None], logits32, 0.0),
+                   axis=-1)
+    mask = batch.get("loss_mask", jnp.ones_like(targets, jnp.float32))
+    nll = jnp.sum((lse - gold) * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    n_moe_layers = sum(1 for i in range(cfg.n_layers) if cfg.layer_is_moe(i))
+    scale = 1.0 / max(n_moe_layers, 1)
+    aux_w = cfg.moe.router_aux_weight if cfg.moe else 0.0
+    total = nll + aux_w * scale * aux.lb_loss + scale * aux.z_loss
+    return total, {"nll": nll, "lb_loss": aux.lb_loss * scale,
+                   "z_loss": aux.z_loss * scale,
+                   "moe_dropped": aux.dropped * scale}
+
+
+# ===========================================================================
+# decode (serve path)
+# ===========================================================================
+
+def init_caches(cfg: ModelConfig, batch: int, seq_len: int) -> Params:
+    """Decode caches stacked over groups, one entry per group position."""
+    caches: Params = {}
+    for pos, kind in enumerate(cfg.group_pattern):
+        if kind == "attn":
+            # a position's layers may mix local/global across groups
+            # (llama4) -> size for the largest receptive field among them
+            has_global = any(
+                cfg.layer_is_global_attn(g * cfg.group_size + pos)
+                for g in range(cfg.n_groups))
+            size = A.cache_size_for(cfg, seq_len, has_global)
+            one = lambda _=None: A.init_kv_cache(cfg, batch, size)
+        elif kind == "mamba":
+            one = lambda _=None: S.init_mamba_state(cfg, batch)._asdict()
+        elif kind == "mlstm":
+            one = lambda _=None: S.init_mlstm_state(cfg, batch)._asdict()
+        elif kind == "slstm":
+            one = lambda _=None: S.init_slstm_state(cfg, batch)._asdict()
+        else:
+            raise ValueError(kind)
+        caches[f"pos_{pos}"] = jax.vmap(one)(jnp.arange(cfg.n_groups))
+    return caches
+
+
+def _block_decode(p: Params, cache: Params, x: jax.Array, kind: str,
+                  cfg: ModelConfig, pos_scalar, is_global
+                  ) -> Tuple[jax.Array, Params, ScanAux]:
+    if kind == "attn":
+        h = L.apply_norm(cfg.norm, p["attn_norm"], x)
+        use_rope = (not is_global) if isinstance(is_global, bool) \
+            else jnp.logical_not(is_global)
+        y, cache = A.decode_attend(p["attn"], h, cache, pos_scalar, cfg,
+                                   is_global=is_global, use_rope=use_rope)
+        x, aux = _apply_mlp_or_moe(p, x + y, cfg)
+        return x, cache, aux
+    if kind == "mamba":
+        h = L.apply_norm(cfg.norm, p["attn_norm"], x)
+        y, st = S.apply_mamba(p["mamba"], h, cfg,
+                              state=S.MambaState(**cache))
+        x, aux = _apply_mlp_or_moe(p, x + y, cfg)
+        return x, st._asdict(), aux
+    if kind == "mlstm":
+        h = L.apply_norm(cfg.norm, p["norm"], x)
+        y, st = S.apply_mlstm(p["cell"], h, cfg, state=S.MLSTMState(**cache))
+        return x + y, st._asdict(), ZERO_AUX
+    if kind == "slstm":
+        h = L.apply_norm(cfg.norm, p["norm"], x)
+        y, st = S.apply_slstm_cell(p["cell"], h, cfg,
+                                   state=S.SLSTMState(**cache))
+        x = x + y
+        h2 = L.apply_norm(cfg.norm, p["ff_norm"], x)
+        cdt = cfg.cdtype
+        ff = jax.nn.gelu(L.cast_to(h2, cdt)
+                         @ L.wcast(p["cell"], "ff_in", cfg, [None, "model"]),
+                         approximate=True)
+        return x + ff @ L.wcast(p["cell"], "ff_out", cfg, ["model", None]), \
+            st._asdict(), ZERO_AUX
+    raise ValueError(kind)
+
+
+def decode_step(params: Params, caches: Params, tokens: jax.Array,
+                pos, cfg: ModelConfig) -> Tuple[jax.Array, Params]:
+    """One decode step. tokens: (B, 1); pos: scalar absolute position."""
+    pos = jnp.asarray(pos, jnp.int32)
+    x = L.embed(params["embed"], tokens, cfg.cdtype, scale=cfg.embed_scale)
+    x = PS.constrain(x, ["batch", None, None])
+    flags = group_flags(cfg)
+
+    def body(x, xs):
+        gp, gcache, fl = xs
+        new_cache = {}
+        for p_i, kind in enumerate(cfg.group_pattern):
+            key = f"pos_{p_i}"
+            x, c, _ = _block_decode(gp[key], gcache[key], x, kind, cfg, pos,
+                                    fl[p_i] if cfg.global_every else False)
+            new_cache[key] = c
+        return x, new_cache
+
+    x, new_caches = jax.lax.scan(body, x, (params["groups"], caches, flags),
+                                 unroll=cfg.n_groups if cfg.unroll_scans else 1)
+    x = L.apply_norm(cfg.norm, params["final_norm"], x)
+    logits = L.unembed(params.get("head"), params["embed"], x, cfg.cdtype,
+                       softcap=cfg.logit_softcap)
+    return logits, new_caches
+
+
+def forward_prefill(params: Params, batch: Dict[str, jax.Array],
+                    cfg: ModelConfig, cache_len: Optional[int] = None
+                    ) -> Tuple[jax.Array, Params]:
+    """Prefill: run the train forward while filling decode caches.
+
+    Used by the serving example / tests (small shapes); the dry-run's
+    ``prefill_32k`` cell lowers ``forward_train`` (logits only), and its
+    ``decode_*`` cells take pre-existing caches as inputs.
+    """
+    tokens = batch["tokens"]
+    b, s = tokens.shape
+    cache_len = cache_len or s
+    caches = init_caches(cfg, b, cache_len)
+    logits, _ = forward_train(params, batch, cfg)
+
+    # fill caches by replaying tokens one at a time (exact, small-scale)
+    def step(caches, t):
+        _, caches = decode_step(params, caches, jax.lax.dynamic_slice(
+            tokens, (0, t), (b, 1)), t, cfg)
+        return caches, None
+
+    caches, _ = jax.lax.scan(step, caches, jnp.arange(s))
+    return logits, caches

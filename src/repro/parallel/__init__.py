@@ -1,0 +1,6 @@
+"""repro.parallel — logical-axis sharding rules for pjit distribution."""
+
+from repro.parallel.sharding import (  # noqa: F401
+    MeshRules, activations, constrain, current_rules, make_rules,
+    named_shardings, param_specs, use_mesh_rules,
+)

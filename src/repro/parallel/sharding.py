@@ -1,0 +1,203 @@
+"""Logical-axis sharding rules: params + activations -> PartitionSpecs.
+
+Mesh contract (launch/mesh.py): single-pod ``("data", "model")`` = (16, 16),
+multi-pod ``("pod", "data", "model")`` = (2, 16, 16).
+
+Placement strategy (DESIGN.md §4):
+
+* batch dims of activations       -> ("pod", "data")   (DP)
+* weight d_model dims             -> "data"            (FSDP / ZeRO-3)
+* weight d_ff / heads / vocab dims-> "model"           (TP)
+* optimizer state                 -> same spec as its parameter (ZeRO-1)
+* any dim not divisible by its mesh axis -> replicated on that axis
+
+Parameter specs are derived from (path, shape) name rules with divisibility
+guards, so every architecture (6-head whisper, 4-head xlstm, 40-head
+llama4) lowers without manual per-arch tables.  Activation constraints are
+applied through a context (:func:`use_mesh_rules`) so model code stays
+mesh-agnostic and tests/smoke runs (1 CPU device) skip constraints.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import threading
+from typing import Dict, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+@dataclasses.dataclass(frozen=True)
+class MeshRules:
+    mesh: Mesh
+    batch_axes: Tuple[str, ...]         # ("pod","data") or ("data",)
+    fsdp_axis: Optional[str] = "data"   # weight d_model dim
+    tp_axis: Optional[str] = "model"    # weight ff/head/vocab dim
+    seq_axis: Optional[str] = None      # sequence sharding (long-context)
+
+    def axis_size(self, name: Optional[str]) -> int:
+        if name is None:
+            return 1
+        if isinstance(name, tuple):
+            return int(np.prod([self.mesh.shape[a] for a in name]))
+        return self.mesh.shape[name]
+
+
+_tls = threading.local()
+
+
+def current_rules() -> Optional[MeshRules]:
+    return getattr(_tls, "rules", None)
+
+
+@contextlib.contextmanager
+def use_mesh_rules(rules: Optional[MeshRules]):
+    prev = getattr(_tls, "rules", None)
+    _tls.rules = rules
+    try:
+        yield rules
+    finally:
+        _tls.rules = prev
+
+
+def make_rules(mesh: Mesh, seq_axis: Optional[str] = None,
+               fsdp_over_pod: bool = False) -> MeshRules:
+    axes = mesh.axis_names
+    batch = tuple(a for a in ("pod", "data") if a in axes)
+    fsdp = "data" if "data" in axes else None
+    if fsdp_over_pod and "pod" in axes:
+        fsdp = ("pod", "data")  # ZeRO-3 across pods (a §Perf lever)
+    return MeshRules(mesh=mesh, batch_axes=batch, fsdp_axis=fsdp,
+                     tp_axis="model" if "model" in axes else None,
+                     seq_axis=seq_axis)
+
+
+# ------------------------------------------------------------- activations
+
+def constrain(x: jax.Array, spec_dims: Sequence[Optional[str]]) -> jax.Array:
+    """Apply a sharding constraint described with logical dim roles.
+
+    Roles: "batch", "model", "seq", "fsdp", None (replicated).  No-op when
+    no rules context is active (CPU smoke tests).
+    """
+    rules = current_rules()
+    if rules is None:
+        return x
+    parts = []
+    for role in spec_dims:
+        if role is None:
+            parts.append(None)
+        elif role == "batch":
+            parts.append(rules.batch_axes if rules.batch_axes else None)
+        elif role == "model":
+            parts.append(rules.tp_axis)
+        elif role == "fsdp":
+            parts.append(rules.fsdp_axis)
+        elif role == "seq":
+            parts.append(rules.seq_axis)
+        else:  # pragma: no cover
+            raise ValueError(role)
+    # divisibility guard
+    parts = [p if p is not None and x.shape[i] % rules.axis_size(p) == 0
+             else None
+             for i, p in enumerate(parts)]
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(rules.mesh, P(*parts)))
+
+
+def activations(x: jax.Array) -> jax.Array:
+    """Standard (B, S, d) activation constraint: batch on DP axes."""
+    if x.ndim == 3:
+        return constrain(x, ["batch", None, None])
+    return x
+
+
+# ------------------------------------------------------------------ params
+
+def _divisible(dim: int, rules: MeshRules, axis) -> bool:
+    return axis is not None and dim % rules.axis_size(axis) == 0
+
+
+def _spec_for(path: str, shape: Tuple[int, ...], rules: MeshRules) -> P:
+    """Name-rule param spec with divisibility fallbacks."""
+    fsdp, tp = rules.fsdp_axis, rules.tp_axis
+    name = path.rsplit("/", 1)[-1]
+
+    def d2(a_axis, b_axis, off=0):
+        """Spec for the trailing 2 dims, leading dims replicated."""
+        a = a_axis if _divisible(shape[off + 0], rules, a_axis) else None
+        b = b_axis if _divisible(shape[off + 1], rules, b_axis) else None
+        lead = [None] * off
+        return P(*lead, a, b)
+
+    if name in ("table",):                       # embedding (V, d)
+        return d2(tp, fsdp)
+    if name == "w" and len(shape) == 2 and "head" in path:  # lm head (d, V)
+        return d2(fsdp, tp)
+    if name in ("wq", "wk", "wv", "w_gate", "w_in", "in_proj", "x_proj",
+                "up_proj", "ff_in", "dt_proj", "w") and len(shape) == 2:
+        return d2(fsdp, tp)
+    if name in ("wo", "w_out", "out_proj", "down_proj", "ff_out") \
+            and len(shape) == 2:
+        return d2(tp, fsdp)
+    if len(shape) == 3 and name in ("w_in", "w_gate"):   # MoE (E, d, ff)
+        return d2(fsdp, tp, off=1)
+    if len(shape) == 3 and name == "w_out":              # MoE (E, ff, d)
+        return d2(tp, fsdp, off=1)
+    if len(shape) == 3 and name in ("wq", "wk", "wv", "r"):  # per-head blocks
+        return d2(fsdp, tp, off=1)
+    if name == "router":
+        return d2(fsdp, None)
+    if name in ("A_log", "conv_w"):
+        a = tp if _divisible(shape[-1], rules, tp) else None
+        return P(*([None] * (len(shape) - 1)), a)
+    if len(shape) == 1:
+        # big 1-D vectors (biases over ff/heads) shard on tp when divisible
+        if name in ("bq", "bk", "bv", "D", "dt_bias", "ln_scale") \
+                and _divisible(shape[0], rules, tp):
+            return P(tp)
+        return P()
+    if len(shape) == 2:
+        return d2(fsdp, tp)
+    return P(*([None] * len(shape)))
+
+
+def param_specs(params, rules: MeshRules, stacked_prefixes=("groups",
+                                                            "enc_groups")):
+    """Pytree of PartitionSpec matching ``params``.
+
+    Leaves under a stacked-groups prefix have a leading group axis that is
+    always replicated (it is scanned over).
+    """
+    import jax.tree_util as jtu
+
+    flat, treedef = jtu.tree_flatten_with_path(params)
+    specs = []
+    for kp, leaf in flat:
+        path = jtu.keystr(kp, simple=True, separator="/")
+        stacked = any(path.startswith(pfx + "/") for pfx in stacked_prefixes)
+        shape = tuple(leaf.shape)
+        if stacked:
+            inner = _spec_for(path, shape[1:], rules)
+            specs.append(P(None, *inner))
+        else:
+            specs.append(_spec_for(path, shape, rules))
+    return jtu.tree_unflatten(treedef, specs)
+
+
+def named_shardings(params, rules: MeshRules):
+    return jax.tree.map(lambda s: NamedSharding(rules.mesh, s),
+                        param_specs(params, rules))
+
+
+def spec_bytes_per_device(shape: Tuple[int, ...], dtype, spec: P,
+                          rules: MeshRules) -> int:
+    """Napkin-math per-device bytes of an array under a spec."""
+    n = int(np.prod(shape)) if shape else 1
+    denom = 1
+    for p in spec:
+        denom *= rules.axis_size(p)
+    return n * np.dtype(dtype).itemsize // max(denom, 1)

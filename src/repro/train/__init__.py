@@ -1,0 +1,8 @@
+"""repro.train — optimizer, step functions, gradient compression."""
+
+from repro.train.optimizer import OptConfig, OptState, init, lr_at, update  # noqa: F401
+from repro.train.steps import (  # noqa: F401
+    TrainState, abstract_state, init_state, make_decode_step,
+    make_prefill_step, make_train_step,
+)
+from repro.train import compression  # noqa: F401

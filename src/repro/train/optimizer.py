@@ -1,0 +1,101 @@
+"""AdamW + global-norm clipping + warmup-cosine schedule (pure pytrees).
+
+Optimizer state mirrors the parameter pytree leaf-for-leaf, so ZeRO-1
+sharding falls out of ``param_specs`` automatically (m/v adopt their
+parameter's PartitionSpec in the train step's shardings).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class OptConfig:
+    peak_lr: float = 3e-4
+    min_lr_ratio: float = 0.1
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+
+
+class OptState(NamedTuple):
+    m: Any
+    v: Any
+    count: jax.Array
+
+
+def init(params) -> OptState:
+    zeros = lambda p: jnp.zeros_like(p, dtype=jnp.float32)
+    return OptState(m=jax.tree.map(zeros, params),
+                    v=jax.tree.map(zeros, params),
+                    count=jnp.zeros((), jnp.int32))
+
+
+def lr_at(cfg: OptConfig, step: jax.Array) -> jax.Array:
+    step = step.astype(jnp.float32)
+    warm = cfg.peak_lr * step / max(cfg.warmup_steps, 1)
+    prog = jnp.clip((step - cfg.warmup_steps)
+                    / max(cfg.total_steps - cfg.warmup_steps, 1), 0.0, 1.0)
+    cos = cfg.peak_lr * (cfg.min_lr_ratio + (1 - cfg.min_lr_ratio)
+                         * 0.5 * (1 + jnp.cos(jnp.pi * prog)))
+    return jnp.where(step < cfg.warmup_steps, warm, cos)
+
+
+def global_norm(tree) -> jax.Array:
+    sq = sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+             for x in jax.tree.leaves(tree))
+    return jnp.sqrt(sq)
+
+
+def clip_by_global_norm(grads, max_norm: float) -> Tuple[Any, jax.Array]:
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda g: g * scale.astype(g.dtype), grads), norm
+
+
+def _decay_mask(path: str) -> bool:
+    """No weight decay on norms/biases/1-D params (by path name)."""
+    leaf = path.rsplit("/", 1)[-1]
+    return leaf not in ("scale", "bias", "b", "b_i", "b_f", "bq", "bk", "bv",
+                        "dt_bias", "ln_scale", "D")
+
+
+def update(cfg: OptConfig, grads, state: OptState, params
+           ) -> Tuple[Any, OptState, Dict[str, jax.Array]]:
+    """One AdamW step; returns (new_params, new_state, metrics)."""
+    grads, gnorm = clip_by_global_norm(grads, cfg.clip_norm)
+    count = state.count + 1
+    lr = lr_at(cfg, count)
+    b1c = 1 - cfg.b1 ** count.astype(jnp.float32)
+    b2c = 1 - cfg.b2 ** count.astype(jnp.float32)
+
+    import jax.tree_util as jtu
+    flat_p, treedef = jtu.tree_flatten_with_path(params)
+    flat_g = jtu.tree_leaves(grads)
+    flat_m = jtu.tree_leaves(state.m)
+    flat_v = jtu.tree_leaves(state.v)
+    new_p, new_m, new_v = [], [], []
+    for (kp, p), g, m, v in zip(flat_p, flat_g, flat_m, flat_v):
+        path = jtu.keystr(kp, simple=True, separator="/")
+        g32 = g.astype(jnp.float32)
+        m = cfg.b1 * m + (1 - cfg.b1) * g32
+        v = cfg.b2 * v + (1 - cfg.b2) * g32 * g32
+        upd = (m / b1c) / (jnp.sqrt(v / b2c) + cfg.eps)
+        if cfg.weight_decay and _decay_mask(path):
+            upd = upd + cfg.weight_decay * p.astype(jnp.float32)
+        new_p.append((p.astype(jnp.float32) - lr * upd).astype(p.dtype))
+        new_m.append(m)
+        new_v.append(v)
+    params = jtu.tree_unflatten(treedef, new_p)
+    st = OptState(m=jtu.tree_unflatten(treedef, new_m),
+                  v=jtu.tree_unflatten(treedef, new_v), count=count)
+    return params, st, {"grad_norm": gnorm, "lr": lr}

@@ -1,0 +1,94 @@
+"""Train / prefill / decode step functions (the things the dry-run lowers).
+
+``make_train_step`` builds the canonical fused step:
+
+    loss/grad (remat per config) -> clip -> AdamW -> new TrainState
+
+The returned function is pure (state, batch) -> (state, metrics) and is
+jitted/pjitted by the caller with shardings from ``repro.parallel``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import encdec as E
+from repro.models import transformer as T
+from repro.models.config import ModelConfig
+from repro.train import optimizer as O
+
+
+class TrainState(NamedTuple):
+    params: Any
+    opt: O.OptState
+    step: jax.Array
+
+
+def init_state(key, cfg: ModelConfig) -> TrainState:
+    init_fn = E.init_encdec if cfg.enc_dec else T.init_lm
+    params = init_fn(key, cfg)
+    return TrainState(params=params, opt=O.init(params),
+                      step=jnp.zeros((), jnp.int32))
+
+
+def abstract_state(cfg: ModelConfig, key=None) -> TrainState:
+    """Shape/dtype-only TrainState (no allocation) for dry-run lowering."""
+    key = key if key is not None else jax.random.key(0)
+    return jax.eval_shape(lambda k: init_state(k, cfg), key)
+
+
+def loss_fn_for(cfg: ModelConfig) -> Callable:
+    return E.lm_loss if cfg.enc_dec else T.lm_loss
+
+
+def make_train_step(cfg: ModelConfig, opt_cfg: O.OptConfig
+                    ) -> Callable[[TrainState, Dict[str, jax.Array]],
+                                  Tuple[TrainState, Dict[str, jax.Array]]]:
+    loss_fn = loss_fn_for(cfg)
+
+    def train_step(state: TrainState, batch: Dict[str, jax.Array]):
+        (loss, metrics), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(state.params, batch, cfg)
+        params, opt, opt_metrics = O.update(opt_cfg, grads, state.opt,
+                                            state.params)
+        metrics = dict(metrics)
+        metrics.update(opt_metrics)
+        metrics["loss"] = loss
+        new_state = TrainState(params=params, opt=opt, step=state.step + 1)
+        return new_state, metrics
+
+    return train_step
+
+
+def make_prefill_step(cfg: ModelConfig) -> Callable:
+    """Prefill = full forward over the prompt, logits out (dry-run cell)."""
+    fwd = E.forward_train if cfg.enc_dec else T.forward_train
+
+    def prefill_step(params, batch):
+        logits, _ = fwd(params, batch, cfg)
+        return logits
+
+    return prefill_step
+
+
+def make_decode_step(cfg: ModelConfig) -> Callable:
+    """One-token serve step: (params, caches, tokens(B,1), pos) -> logits."""
+    if cfg.enc_dec:
+        def decode(params, caches, tokens, pos):
+            return E.decode_step(params, caches, tokens, pos, cfg)
+    else:
+        def decode(params, caches, tokens, pos):
+            return T.decode_step(params, caches, tokens, pos, cfg)
+    return decode
+
+
+def eval_ppl(params, batches, cfg: ModelConfig) -> float:
+    """Mean token NLL over a list of host batches (examples/quickstart)."""
+    loss_fn = loss_fn_for(cfg)
+    f = jax.jit(lambda p, b: loss_fn(p, b, cfg)[1]["nll"])
+    import numpy as np
+    return float(np.mean([jax.device_get(f(params, b)) for b in batches]))

@@ -1,0 +1,164 @@
+"""I/O substrate: striping, stores, redirect tables, maintainer, client."""
+
+import os
+import tempfile
+
+import numpy as np
+import pytest
+from hypothesis import given, strategies as st
+
+from repro.core.policies import PolicyConfig
+from repro.io import (IOClient, IOClientConfig, LocalFSStore,
+                      MaintainerThread, ServerFailedError, SimulatedCluster,
+                      striping)
+from repro.io.striping import MB, StripingConfig, stripe_file, stripe_request
+
+
+@given(offset=st.integers(0, 10 * MB), length=st.integers(0, 20 * MB),
+       stripe=st.sampled_from([MB, 2 * MB, 4 * MB]))
+def test_striping_covers_range_exactly(offset, length, stripe):
+    cfg = StripingConfig(stripe_size=stripe)
+    reqs = stripe_request(cfg, file_id=7, offset=offset, length=length)
+    assert sum(r.length for r in reqs) == length
+    # contiguous, in-order, object-boundary-respecting
+    pos = offset
+    for r in reqs:
+        assert r.file_offset == pos
+        assert r.offset == pos % stripe
+        assert r.offset + r.length <= stripe
+        pos += r.length
+    ids = [r.object_id for r in reqs]
+    assert len(set(ids)) == len(ids)  # distinct stripes -> distinct objects
+
+
+def test_boundary_split_example():
+    """Paper Fig. 3: an I/O crossing an object boundary splits in two."""
+    cfg = StripingConfig(stripe_size=4 * MB)
+    reqs = stripe_request(cfg, 1, offset=3 * MB, length=2 * MB)
+    assert len(reqs) == 2
+    assert reqs[0].length == MB and reqs[1].length == MB
+    assert reqs[0].stripe_index == 0 and reqs[1].stripe_index == 1
+
+
+def test_localfs_roundtrip_and_redirect():
+    with tempfile.TemporaryDirectory() as d:
+        store = LocalFSStore(d, n_servers=4)
+        rng = np.random.default_rng(1)
+        data = rng.integers(0, 256, 3 * MB, dtype=np.uint8).tobytes()
+        oid = 11  # default home = 3
+        res = store.write_object(oid, data, server=1)  # redirected
+        assert res.server == 1
+        assert store.get_redirect(3, oid) == 1
+        assert store.locate(oid) == 1
+        assert store.read_object(oid) == data
+        # maintainer moves it home and clears the entry (Fig. 6)
+        moved = store.maintainer_tick()
+        assert moved == 1
+        assert store.locate(oid) == 3
+        assert store.get_redirect(3, oid) is None
+        assert store.read_object(oid) == data
+
+
+def test_localfs_failure_injection():
+    with tempfile.TemporaryDirectory() as d:
+        store = LocalFSStore(d, n_servers=2)
+        store.fail_server(0)
+        with pytest.raises(ServerFailedError):
+            store.write_object(5, b"xx", 0)
+        store.heal_server(0)
+        store.write_object(5, b"xx", 0)
+
+
+def test_maintainer_thread_runs():
+    with tempfile.TemporaryDirectory() as d:
+        store = LocalFSStore(d, n_servers=3)
+        store.write_object(4, b"abc", 2)  # home 1 -> redirect
+        t = MaintainerThread(store, interval_s=0.01)
+        t.start()
+        import time
+        deadline = time.time() + 5
+        while store.redirect_count() and time.time() < deadline:
+            time.sleep(0.02)
+        t.stop()
+        assert store.redirect_count() == 0
+        assert store.locate(4) == 1
+
+
+def test_sim_cluster_barrier_semantics():
+    sim = SimulatedCluster(4, base_rate_mb_s=100.0)
+    sim.write_object(0, 100.0, 0)   # 1s on server 0
+    sim.write_object(1, 400.0, 1)   # 4s on server 1 -> gates the phase
+    phase = sim.barrier()
+    assert phase == pytest.approx(4.0)
+    assert sim.clock == pytest.approx(4.0)
+
+
+def test_sim_straggler_slows_phase():
+    sim = SimulatedCluster(4, base_rate_mb_s=100.0)
+    sim.make_straggler(2, slow_factor=10.0)
+    sim.write_object(0, 100.0, 2)
+    assert sim.barrier() == pytest.approx(10.0)
+
+
+def test_client_write_read_with_failures():
+    with tempfile.TemporaryDirectory() as d:
+        store = LocalFSStore(d, n_servers=6)
+        store.fail_server(2)
+        cli = IOClient(store, IOClientConfig(
+            policy=PolicyConfig(name="trh", threshold=0.1),
+            stripe_size=MB // 2))
+        rng = np.random.default_rng(0)
+        blobs = {f: rng.integers(0, 256, rng.integers(1, 3 * MB),
+                                 dtype=np.uint8).tobytes() for f in range(5)}
+        for f, b in blobs.items():
+            cli.write_file(f, b)
+        for f, b in blobs.items():
+            assert cli.read_file(f, len(b)) == b
+        st = cli.stats()
+        assert st["probe_messages"] == 0
+        assert 2 in cli.sched.masked_servers or st["failed_writes"] == 0
+
+
+def test_client_replication_survives_server_loss():
+    with tempfile.TemporaryDirectory() as d:
+        store = LocalFSStore(d, n_servers=5)
+        cli = IOClient(store, IOClientConfig(
+            policy=PolicyConfig(name="mlml", threshold=0.0),
+            stripe_size=MB, replication=2))
+        data = b"critical" * 1000
+        recs = cli.write_file(1, data)
+        # kill the primary replica of every object; read must still work
+        for r in recs:
+            store.fail_server(r.server)
+            assert cli.read_file(1, len(data)) == data
+            store.heal_server(r.server)
+
+
+def test_client_async_flush():
+    with tempfile.TemporaryDirectory() as d:
+        store = LocalFSStore(d, n_servers=4)
+        cli = IOClient(store, IOClientConfig(stripe_size=MB,
+                                             async_writers=3))
+        data = os.urandom(2 * MB + 17)
+        cli.write_file_async(9, data)
+        cli.flush()
+        assert cli.read_file(9, len(data)) == data
+        cli.close()
+
+
+def test_sim_client_straggler_avoidance_beats_rr():
+    def run(policy):
+        sim = SimulatedCluster(10, base_rate_mb_s=100.0, seed=1)
+        sim.make_straggler(3, 8.0)
+        sim.add_external_load(3, 300.0)
+        cli = IOClient(sim, IOClientConfig(policy=PolicyConfig(
+            name=policy, threshold=4.0)))
+        cli.log.loads[3] = sim.queued_mb(3)
+        for f in range(40):
+            cli.write_file(f, size_mb=8.0)
+        return cli.flush(), sim.servers[3].n_requests
+
+    t_rr, hits_rr = run("rr")
+    t_trh, hits_trh = run("trh")
+    assert t_trh < t_rr
+    assert hits_trh < hits_rr

@@ -1,0 +1,124 @@
+"""Pallas kernel sweeps: shapes/dtypes vs pure-jnp oracles (interpret)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.flash_attention import attention_ref, flash_attention
+from repro.kernels.sched_select import sched_select, sched_select_ref
+
+FLASH_CASES = [
+    # (B, S, H, KV, hd, window, chunk, dtype)
+    (2, 64, 4, 2, 32, None, None, jnp.float32),
+    (1, 128, 4, 1, 64, None, None, jnp.float32),     # MQA
+    (2, 96, 4, 4, 16, 32, None, jnp.float32),        # MHA + SWA
+    (1, 128, 8, 2, 32, None, 32, jnp.float32),       # chunked-local
+    (1, 64, 2, 2, 128, None, None, jnp.bfloat16),    # bf16 end-to-end
+    (1, 80, 4, 2, 24, 24, None, jnp.float32),        # ragged S, odd hd
+]
+
+
+@pytest.mark.parametrize("case", FLASH_CASES)
+def test_flash_matches_oracle(case):
+    b, s, h, kv, hd, win, ck, dtype = case
+    keys = jax.random.split(jax.random.key(hash(case) % 2**31), 3)
+    q = jax.random.normal(keys[0], (b, s, h, hd), dtype)
+    k = jax.random.normal(keys[1], (b, s, kv, hd), dtype)
+    v = jax.random.normal(keys[2], (b, s, kv, hd), dtype)
+    out = flash_attention(q, k, v, window=win, chunk=ck,
+                          block_q=32, block_k=32)
+    ref = attention_ref(q, k, v, window=win, chunk=ck)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    err = float(jnp.max(jnp.abs(out.astype(jnp.float32)
+                                - ref.astype(jnp.float32))))
+    assert err < tol, (case, err)
+
+
+def test_flash_noncausal_cross():
+    b, s, h, hd = 2, 64, 4, 32
+    keys = jax.random.split(jax.random.key(0), 3)
+    q = jax.random.normal(keys[0], (b, s, h, hd))
+    k = jax.random.normal(keys[1], (b, s, h, hd))
+    v = jax.random.normal(keys[2], (b, s, h, hd))
+    out = flash_attention(q, k, v, causal=False, block_q=32, block_k=32)
+    ref = attention_ref(q, k, v, causal=False)
+    assert float(jnp.max(jnp.abs(out - ref))) < 2e-5
+
+
+def test_flash_block_shape_sweep():
+    """Block sizes must not change the math."""
+    b, s, h, kv, hd = 1, 128, 4, 2, 32
+    keys = jax.random.split(jax.random.key(3), 3)
+    q = jax.random.normal(keys[0], (b, s, h, hd))
+    k = jax.random.normal(keys[1], (b, s, kv, hd))
+    v = jax.random.normal(keys[2], (b, s, kv, hd))
+    ref = attention_ref(q, k, v)
+    for bq, bk in [(16, 16), (32, 64), (64, 32), (128, 128)]:
+        out = flash_attention(q, k, v, block_q=bq, block_k=bk)
+        assert float(jnp.max(jnp.abs(out - ref))) < 2e-5, (bq, bk)
+
+
+def test_flash_is_global_flag_disables_locality():
+    b, s, h, kv, hd = 1, 64, 4, 2, 32
+    keys = jax.random.split(jax.random.key(4), 3)
+    q = jax.random.normal(keys[0], (b, s, h, hd))
+    k = jax.random.normal(keys[1], (b, s, kv, hd))
+    v = jax.random.normal(keys[2], (b, s, kv, hd))
+    out = flash_attention(q, k, v, window=8, is_global=True,
+                          block_q=32, block_k=32)
+    ref = attention_ref(q, k, v)  # plain causal
+    assert float(jnp.max(jnp.abs(out - ref))) < 2e-5
+
+
+SCHED_CASES = [
+    # (C, N, M, policy, threshold)
+    (2, 40, 16, "minload", 0.0),
+    (3, 64, 100, "minload", 8.0),
+    (2, 40, 16, "two_random", 0.0),
+    (1, 100, 100, "two_random", 4.0),
+    (4, 16, 3, "minload", 1.0),
+]
+
+
+@pytest.mark.parametrize("case", SCHED_CASES)
+def test_sched_select_matches_oracle(case):
+    c, n, m, policy, thr = case
+    keys = jax.random.split(jax.random.key(hash(case) % 2**31), 3)
+    objs = jax.random.randint(keys[0], (c, n), 0, 10_000, dtype=jnp.int32)
+    lens = jax.random.uniform(keys[1], (c, n), minval=0.5, maxval=100.0)
+    init = jax.random.uniform(keys[2], (c, m), minval=0.0, maxval=50.0)
+    seeds = jnp.arange(c, dtype=jnp.uint32) * 13 + 1
+    ch, fl = sched_select(objs, lens, init, seeds, n_servers=m,
+                          threshold=thr, policy=policy)
+    m_pad = max(-(-m // 128) * 128, 128)
+    for i in range(c):
+        ip = jnp.pad(init[i], (0, m_pad - m))
+        rch, rfl = sched_select_ref(objs[i], lens[i], ip, seeds[i],
+                                    n_servers=m, threshold=thr, lam=32.0,
+                                    policy=policy)
+        np.testing.assert_array_equal(np.asarray(ch[i]), np.asarray(rch))
+        np.testing.assert_allclose(np.asarray(fl[i]), np.asarray(rfl[:m]),
+                                   atol=1e-3)
+
+
+def test_sched_select_avoids_straggler():
+    c, n, m = 2, 60, 12
+    objs = jax.random.randint(jax.random.key(0), (c, n), 0, 999,
+                              dtype=jnp.int32)
+    lens = jnp.ones((c, n)) * 4.0
+    init = jnp.zeros((c, m)).at[:, 5].set(1e5)  # server 5 = straggler
+    ch, _ = sched_select(objs, lens, init,
+                         jnp.asarray([1, 2], jnp.uint32), n_servers=m,
+                         threshold=1.0, policy="minload")
+    assert int((np.asarray(ch) == 5).sum()) == 0
+
+
+def test_sched_select_conserves_bytes():
+    c, n, m = 1, 30, 8
+    objs = jnp.arange(n, dtype=jnp.int32)[None]
+    lens = jnp.ones((1, n)) * 2.5
+    init = jnp.zeros((1, m))
+    ch, fl = sched_select(objs, lens, init, jnp.asarray([9], jnp.uint32),
+                          n_servers=m, policy="two_random")
+    assert float(fl.sum()) == pytest.approx(n * 2.5, rel=1e-5)

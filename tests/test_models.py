@@ -1,0 +1,126 @@
+"""Per-architecture smoke tests: reduced configs, one forward/train step
+on CPU, asserting output shapes + finite values (assignment requirement)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_IDS, get_config
+from repro.data import DataConfig, SyntheticTokens
+from repro.models import encdec as E
+from repro.models import transformer as T
+from repro.train import OptConfig, init_state, make_train_step
+
+
+def _batch_for(cfg, b=2, s=16, seed=0):
+    pipe = SyntheticTokens(DataConfig(vocab_size=cfg.vocab_size, seq_len=s,
+                                      global_batch=b, seed=seed))
+    batch = {k: jnp.asarray(v) for k, v in pipe.batch_at(0).items()}
+    if cfg.enc_dec:
+        batch["frames"] = jax.random.normal(
+            jax.random.key(1), (b, cfg.enc_seq, cfg.d_model))
+    if cfg.mrope:
+        pos = jnp.broadcast_to(jnp.arange(s), (b, s))
+        batch["positions"] = jnp.broadcast_to(pos, (3, b, s))
+        batch["patch_embeds"] = jax.random.normal(
+            jax.random.key(2), (b, s // 2, cfg.d_model))
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_arch_forward_shapes_and_finite(arch):
+    cfg = get_config(arch, reduced=True)
+    b, s = 2, 16
+    batch = _batch_for(cfg, b, s)
+    key = jax.random.key(0)
+    if cfg.enc_dec:
+        params = E.init_encdec(key, cfg)
+        logits, _ = jax.jit(lambda p, x: E.forward_train(p, x, cfg))(
+            params, batch)
+    else:
+        params = T.init_lm(key, cfg)
+        logits, _ = jax.jit(lambda p, x: T.forward_train(p, x, cfg))(
+            params, batch)
+    assert logits.shape == (b, s, cfg.padded_vocab)
+    assert bool(jnp.isfinite(logits.astype(jnp.float32)).all()), arch
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_arch_one_train_step(arch):
+    cfg = get_config(arch, reduced=True)
+    state = init_state(jax.random.key(0), cfg)
+    step = jax.jit(make_train_step(cfg, OptConfig(peak_lr=1e-3,
+                                                  warmup_steps=2,
+                                                  total_steps=10)))
+    batch = _batch_for(cfg, 2, 16)
+    state, metrics = step(state, batch)
+    loss = float(metrics["loss"])
+    assert np.isfinite(loss), (arch, loss)
+    assert int(state.step) == 1
+    gnorm = float(metrics["grad_norm"])
+    assert np.isfinite(gnorm) and gnorm > 0, arch
+
+
+@pytest.mark.parametrize("arch", ["qwen2-72b", "mixtral-8x22b",
+                                  "jamba-v0.1-52b", "xlstm-1.3b",
+                                  "gemma-2b"])
+def test_arch_decode_matches_train(arch):
+    """Greedy decode logits equal the teacher-forced forward (reduced)."""
+    import dataclasses
+    cfg = dataclasses.replace(get_config(arch, reduced=True),
+                              compute_dtype="float32")
+    if cfg.moe is not None:
+        # train-time capacity drops don't exist on the decode path; give
+        # the test headroom so both paths route identically
+        cfg = dataclasses.replace(
+            cfg, moe=dataclasses.replace(cfg.moe, capacity_factor=8.0))
+    b, s = 2, 12
+    params = T.init_lm(jax.random.key(0), cfg)
+    tokens = jax.random.randint(jax.random.key(1), (b, s), 1,
+                                cfg.vocab_size, dtype=jnp.int32)
+    ref, _ = T.forward_train(params, {"tokens": tokens}, cfg)
+    caches = T.init_caches(cfg, b, s)
+    dec = jax.jit(lambda p, c, t, i: T.decode_step(p, c, t, i, cfg))
+    outs = []
+    for t in range(s):
+        lg, caches = dec(params, caches, tokens[:, t:t + 1], t)
+        outs.append(lg)
+    got = jnp.concatenate(outs, axis=1)
+    err = float(jnp.max(jnp.abs(got - ref)))
+    assert err < 2e-2, (arch, err)
+
+
+def test_param_count_analytic_close_to_actual():
+    """cfg.param_count() bookkeeping tracks the real init tree (full-size
+    formulas validated on reduced instantiations)."""
+    for arch in ARCH_IDS:
+        cfg = get_config(arch, reduced=True)
+        init_fn = E.init_encdec if cfg.enc_dec else T.init_lm
+        params = jax.eval_shape(lambda k: init_fn(k, cfg),
+                                jax.random.key(0))
+        actual = sum(int(np.prod(l.shape)) for l in jax.tree.leaves(params))
+        analytic = cfg.param_count()
+        # padded vocab + minor bookkeeping slack
+        assert abs(actual - analytic) / actual < 0.30, \
+            (arch, actual, analytic)
+
+
+def test_moe_aux_losses_reported():
+    cfg = get_config("mixtral-8x22b", reduced=True)
+    state = init_state(jax.random.key(0), cfg)
+    step = jax.jit(make_train_step(cfg, OptConfig()))
+    _, metrics = step(state, _batch_for(cfg))
+    assert float(metrics["lb_loss"]) > 0
+    assert 0.0 <= float(metrics["moe_dropped"]) < 1.0
+
+
+def test_vlm_patch_embedding_stub_changes_logits():
+    cfg = get_config("qwen2-vl-72b", reduced=True)
+    params = T.init_lm(jax.random.key(0), cfg)
+    batch = _batch_for(cfg, 2, 16)
+    l1, _ = T.forward_train(params, batch, cfg)
+    batch2 = dict(batch)
+    batch2["patch_embeds"] = batch["patch_embeds"] * 2.0
+    l2, _ = T.forward_train(params, batch2, cfg)
+    assert float(jnp.max(jnp.abs(l1 - l2))) > 0

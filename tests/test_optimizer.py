@@ -1,0 +1,62 @@
+"""Optimizer + gradient compression unit/property tests."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, strategies as st
+
+from repro.train import OptConfig, compression as C, optimizer as O
+
+
+def test_lr_schedule_shape():
+    cfg = OptConfig(peak_lr=1.0, warmup_steps=10, total_steps=100,
+                    min_lr_ratio=0.1)
+    lrs = [float(O.lr_at(cfg, jnp.asarray(s))) for s in range(0, 101, 5)]
+    assert lrs[0] == 0.0
+    assert max(lrs) == pytest.approx(1.0, rel=1e-2)
+    assert lrs[-1] == pytest.approx(0.1, rel=1e-2)
+    assert all(b <= a + 1e-6 for a, b in zip(lrs[2:], lrs[3:]))  # decays
+
+
+def test_clip_by_global_norm():
+    g = {"a": jnp.ones((4,)) * 3.0, "b": jnp.ones((4,)) * 4.0}
+    clipped, norm = O.clip_by_global_norm(g, 1.0)
+    assert float(norm) == pytest.approx(10.0)
+    assert float(O.global_norm(clipped)) == pytest.approx(1.0, rel=1e-5)
+
+
+def test_weight_decay_mask():
+    assert O._decay_mask("groups/pos_0/attn/wq")
+    assert not O._decay_mask("groups/pos_0/attn_norm/scale")
+    assert not O._decay_mask("groups/pos_0/attn/bq")
+
+
+def test_adamw_moves_params_and_counts():
+    params = {"w": jnp.ones((8, 8)), "norm": {"scale": jnp.zeros((8,))}}
+    st_ = O.init(params)
+    grads = jax.tree.map(jnp.ones_like, params)
+    cfg = OptConfig(peak_lr=0.1, warmup_steps=0, total_steps=10)
+    new, st2, m = O.update(cfg, grads, st_, params)
+    assert int(st2.count) == 1
+    assert float(jnp.abs(new["w"] - params["w"]).max()) > 0
+    assert np.isfinite(float(m["grad_norm"]))
+
+
+@given(st.integers(0, 2**31 - 1))
+def test_quantize_error_feedback_identity(seed):
+    """q*scale + residual == g + e exactly (error feedback invariant)."""
+    g = jax.random.normal(jax.random.key(seed), (256,)) * 10
+    e = jax.random.normal(jax.random.key(seed + 1), (256,)) * 0.1
+    q, scale, new_e = C.quantize(g, e)
+    recon = C.dequantize(q, scale) + new_e
+    np.testing.assert_allclose(np.asarray(recon), np.asarray(g + e),
+                               rtol=1e-5, atol=1e-5)
+    assert q.dtype == jnp.int8
+    assert float(jnp.abs(new_e).max()) <= float(scale) * 0.5 + 1e-6
+
+
+def test_wire_bytes_savings():
+    g = {"w": jnp.zeros((1000, 100))}
+    assert C.wire_bytes(g, compressed=True) * 4 == \
+        C.wire_bytes(g, compressed=False)

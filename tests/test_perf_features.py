@@ -1,0 +1,121 @@
+"""Tests for the §Perf features adopted from the hillclimbs."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.statlog import HostStatLog, LogConfig
+from repro.models import moe as MOE
+from repro.models import transformer as T
+from repro.models.config import ModelConfig, MoEConfig
+
+
+def test_absorb_loads_orders_probs_by_load():
+    log = HostStatLog(LogConfig(n_servers=4, lam=10.0))
+    log.absorb_loads(np.array([0.0, 5.0, 50.0, 500.0]))
+    assert np.all(np.diff(log.probs) < 0)          # monotone decreasing
+    assert abs(log.probs.sum() - 1.0) < 1e-12
+
+
+def test_prob_refresh_restores_ranking_after_drift():
+    """Eq. (2) incremental decay drifts the ranking; absorb_loads fixes it
+    (the §Perf C finding)."""
+    log = HostStatLog(LogConfig(n_servers=3, lam=16.0))
+    log.loads[2] = 40.0  # lightly-assigned straggler
+    log.absorb_loads()
+    for _ in range(30):  # busy clean server 0
+        log.apply_assignment(0, 4.0)
+        log.complete(0, 4.0)  # drained: true load stays ~0
+    assert log.probs[0] < log.probs[2]  # DRIFT: busy clean < straggler
+    log.absorb_loads()                   # memoryless refresh
+    assert log.probs[0] > log.probs[2]   # ranking restored
+
+
+def test_moe_local_dispatch_matches_global_when_nothing_drops():
+    cfg = ModelConfig(name="m", n_layers=2, d_model=64, n_heads=4,
+                      n_kv_heads=2, d_ff=128, vocab_size=256,
+                      moe=MoEConfig(n_experts=4, top_k=2,
+                                    capacity_factor=8.0),
+                      compute_dtype="float32")
+    p = MOE.init_moe(jax.random.key(0), cfg)
+    x = jax.random.normal(jax.random.key(1), (4, 8, 64))
+    y_g, aux_g = MOE.apply_moe(p, x, cfg)
+    for dp in (2, 4):
+        y_l, aux_l = MOE._apply_moe_local(p, x, cfg, dp=dp)
+        np.testing.assert_allclose(np.asarray(y_g), np.asarray(y_l),
+                                   atol=1e-4)
+        assert float(aux_l.dropped_fraction) == 0.0
+
+
+def test_moe_local_falls_back_without_mesh():
+    """dispatch="local" with no mesh rules (CPU tests) == global path."""
+    cfg = ModelConfig(name="m", n_layers=2, d_model=32, n_heads=4,
+                      n_kv_heads=2, d_ff=64, vocab_size=128,
+                      moe=MoEConfig(n_experts=4, top_k=1,
+                                    dispatch="local"),
+                      compute_dtype="float32")
+    cfg_g = dataclasses.replace(
+        cfg, moe=dataclasses.replace(cfg.moe, dispatch="global"))
+    p = MOE.init_moe(jax.random.key(0), cfg)
+    x = jax.random.normal(jax.random.key(1), (2, 8, 32))
+    y_l, _ = MOE.apply_moe(p, x, cfg)
+    y_g, _ = MOE.apply_moe(p, x, cfg_g)
+    np.testing.assert_array_equal(np.asarray(y_l), np.asarray(y_g))
+
+
+def test_llama4_group4_pattern_shrinks_caches():
+    """The adopted cache4 topology sizes local positions at chunk length."""
+    from repro.configs import get_config
+    cfg = get_config("llama4-scout-17b-a16e")
+    assert cfg.group_pattern == ("attn",) * 4
+    caches = jax.eval_shape(lambda: T.init_caches(cfg, 1, 32768))
+    sizes = {k: v["k"].shape[2] for k, v in caches.items()}
+    assert sizes["pos_3"] == 32768       # global every 4th layer
+    assert sizes["pos_0"] == 8192        # chunk-local ring
+    assert sizes["pos_1"] == 8192 and sizes["pos_2"] == 8192
+
+
+def test_bf16_score_dtype_close_to_f32():
+    cfg32 = ModelConfig(name="a", n_layers=2, d_model=64, n_heads=4,
+                        n_kv_heads=2, d_ff=128, vocab_size=256,
+                        compute_dtype="float32")
+    cfg16 = dataclasses.replace(cfg32, attn_score_dtype="bfloat16")
+    params = T.init_lm(jax.random.key(0), cfg32)
+    tok = jax.random.randint(jax.random.key(1), (2, 16), 0, 256)
+    l32, _ = T.forward_train(params, {"tokens": tok}, cfg32)
+    l16, _ = T.forward_train(params, {"tokens": tok}, cfg16)
+    # bf16 scores cost ~2-3 decimal digits, not correctness
+    assert float(jnp.max(jnp.abs(l32 - l16))) < 0.15
+
+
+def test_int8_kv_cache_decode_parity():
+    """int8 cache decode stays within quantization noise of bf16 and
+    agrees on greedy tokens (the §Perf serving iteration)."""
+    cfg = ModelConfig(name="q", n_layers=2, d_model=64, n_heads=4,
+                      n_kv_heads=2, d_ff=128, vocab_size=256,
+                      compute_dtype="float32")
+    cfg8 = dataclasses.replace(cfg, kv_cache_dtype="int8")
+    b, s = 2, 10
+    params = T.init_lm(jax.random.key(0), cfg)
+    tok = jax.random.randint(jax.random.key(1), (b, s), 1, 256,
+                             dtype=jnp.int32)
+
+    def run(c):
+        caches = T.init_caches(c, b, s)
+        outs = []
+        for t in range(s):
+            lg, caches = T.decode_step(params, caches, tok[:, t:t + 1],
+                                       t, c)
+            outs.append(lg)
+        return jnp.concatenate(outs, 1)
+
+    l16, l8 = run(cfg), run(cfg8)
+    assert float(jnp.max(jnp.abs(l16 - l8))) < 0.25
+    assert float(jnp.mean(jnp.argmax(l8, -1) == jnp.argmax(l16, -1))) > 0.9
+    # storage really is int8 + scales
+    c8 = T.init_caches(cfg8, b, s)
+    assert c8["pos_0"]["k"].dtype == jnp.int8
+    assert c8["pos_0"]["k_scale"].dtype == jnp.float32

@@ -1,0 +1,132 @@
+"""Sharding rules + multi-device behaviour (subprocess: forced devices)."""
+
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import numpy as np
+import pytest
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+def test_param_specs_divisibility_rules():
+    """Rule table shards divisible dims and replicates the rest."""
+    from jax.sharding import PartitionSpec as P
+    import repro.parallel.sharding as PS
+
+    class FakeMesh:
+        axis_names = ("data", "model")
+        shape = {"data": 16, "model": 16}
+
+    rules = PS.MeshRules(mesh=FakeMesh(), batch_axes=("data",),
+                         fsdp_axis="data", tp_axis="model")
+    assert PS._spec_for("groups/pos_0/attn/wq", (8192, 8192), rules) == \
+        P("data", "model")
+    # 40 heads * 128 = 5120 q-dim: divisible; d=5120 divisible
+    assert PS._spec_for("x/wq", (5120, 5120), rules) == P("data", "model")
+    # odd dims -> replicated on that axis
+    assert PS._spec_for("x/wq", (120, 5120), rules) == P(None, "model")
+    assert PS._spec_for("embed/table", (51968, 384), rules) == \
+        P("model", "data")
+    assert PS._spec_for("head/w", (384, 51968), rules) == P("data", "model")
+    assert PS._spec_for("a/moe/w_in", (8, 6144, 16384), rules) == \
+        P(None, "data", "model")
+    assert PS._spec_for("n/attn_norm/scale", (8192,), rules) == P()
+
+
+def test_constrain_noop_without_rules():
+    import jax.numpy as jnp
+    import repro.parallel.sharding as PS
+    x = jnp.ones((4, 4))
+    assert PS.constrain(x, ["batch", None]) is x
+
+
+_SUBPROCESS_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import jax, jax.numpy as jnp, json
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+import repro.parallel.sharding as PS
+from repro.models.config import ModelConfig
+from repro.train import OptConfig, init_state, make_train_step
+from repro.launch.shardutil import state_shardings
+
+mesh = jax.make_mesh((4, 2), ("data", "model"))
+rules = PS.make_rules(mesh)
+cfg = ModelConfig(name="tiny", n_layers=2, d_model=32, n_heads=4,
+                  n_kv_heads=2, d_ff=64, vocab_size=256)
+state = init_state(jax.random.key(0), cfg)
+st_sh = state_shardings(jax.eval_shape(lambda: state), rules)
+state = jax.device_put(state, st_sh)
+step = jax.jit(make_train_step(cfg, OptConfig(peak_lr=1e-3)),
+               in_shardings=(st_sh, None), out_shardings=(st_sh, None))
+tok = jnp.ones((8, 16), jnp.int32)
+with mesh, PS.use_mesh_rules(rules):
+    state, m = step(state, {"tokens": tok, "targets": tok})
+loss_sharded = float(m["loss"])
+
+# single-logical-device reference
+cfg2 = cfg
+state2 = init_state(jax.random.key(0), cfg2)
+step2 = jax.jit(make_train_step(cfg2, OptConfig(peak_lr=1e-3)))
+state2, m2 = step2(state2, {"tokens": tok, "targets": tok})
+loss_ref = float(m2["loss"])
+
+# compressed psum over an axis via shard_map
+from repro.train import compression as C
+from jax.sharding import PartitionSpec as P
+import functools
+g = jax.random.normal(jax.random.key(1), (8, 64))
+def f(gs):
+    ef = C.init_ef({"g": gs})
+    out, _ = C.compressed_psum({"g": gs}, ef, "data")
+    return out["g"]
+fm = jax.shard_map(f, mesh=mesh, in_specs=P("data", None),
+                   out_specs=P("data", None))
+mean_c = np.asarray(fm(g))
+mean_ref = np.broadcast_to(np.asarray(g).reshape(4, 2, 64).mean(0,
+                           keepdims=True), (4, 2, 64)).reshape(8, 64)
+err = float(np.abs(mean_c - mean_ref).max())
+scale = float(np.abs(mean_ref).max())
+
+print(json.dumps({"loss_sharded": loss_sharded, "loss_ref": loss_ref,
+                  "psum_err": err, "psum_scale": scale}))
+"""
+
+
+def test_multidevice_training_matches_single(tmp_path):
+    """An 8-device (4x2) sharded train step computes the same loss as the
+    single-device reference, and the int8 error-feedback psum approximates
+    the true mean (subprocess so the forced device count cannot leak)."""
+    script = tmp_path / "sub.py"
+    script.write_text(_SUBPROCESS_SCRIPT)
+    env = dict(os.environ, PYTHONPATH=SRC)
+    out = subprocess.run([sys.executable, str(script)], env=env,
+                         capture_output=True, text=True, timeout=600)
+    assert out.returncode == 0, out.stderr[-2000:]
+    res = json.loads(out.stdout.strip().splitlines()[-1])
+    assert res["loss_sharded"] == pytest.approx(res["loss_ref"], rel=2e-2)
+    assert res["psum_err"] <= 0.02 * res["psum_scale"] + 1e-3
+
+
+def test_cache_roles_cover_all_leaves():
+    """Every decode-cache leaf gets a role list of matching rank."""
+    import jax.tree_util as jtu
+    from repro.configs import SHAPES, get_config, input_specs
+    for arch in ("qwen2-72b", "jamba-v0.1-52b", "xlstm-1.3b",
+                 "whisper-tiny"):
+        cfg = get_config(arch, reduced=True)
+        (caches, tok, pos), (c_roles, t_roles, _) = \
+            input_specs(cfg, SHAPES["decode_32k"])
+        flat_c = jtu.tree_leaves(caches)
+        flat_r = jtu.tree_leaves(c_roles, is_leaf=lambda x: isinstance(x,
+                                                                       list))
+        assert len(flat_c) == len(flat_r)
+        for leaf, roles in zip(flat_c, flat_r):
+            assert len(roles) == len(leaf.shape), (arch, leaf.shape, roles)

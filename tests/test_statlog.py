@@ -1,0 +1,102 @@
+"""Property tests for the client-side server statistic log (Eqs. 1-3)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import statlog
+from repro.core.statlog import HostStatLog, LogConfig
+
+
+@given(m=st.integers(2, 64),
+       seq=st.lists(st.tuples(st.integers(0, 63),
+                              st.floats(0.01, 500.0)), min_size=1,
+                    max_size=60))
+def test_probs_stay_simplex(m, seq):
+    """After any assignment sequence: sum(p) == 1, p >= 0, loads >= 0."""
+    log = HostStatLog(LogConfig(n_servers=m, lam=32.0))
+    for srv, ln in seq:
+        log.apply_assignment(srv % m, ln)
+    assert abs(log.probs.sum() - 1.0) < 1e-6
+    assert (log.probs >= -1e-12).all()
+    assert (log.loads >= 0).all()
+
+
+@given(m=st.integers(2, 32), srv=st.integers(0, 31),
+       ln=st.floats(0.01, 100.0))
+def test_eq123_formulas(m, srv, ln):
+    """One assignment matches the closed-form Eqs. (1)-(3)."""
+    srv = srv % m
+    cfg = LogConfig(n_servers=m, lam=16.0)
+    log = HostStatLog(cfg)
+    p0 = log.probs.copy()
+    log.apply_assignment(srv, ln)
+    assert log.loads[srv] == pytest.approx(ln)                     # Eq. 1
+    decayed = p0[srv] * np.exp(-ln / cfg.lam)
+    assert log.probs[srv] == pytest.approx(decayed)                # Eq. 2
+    others = [j for j in range(m) if j != srv]
+    expect = p0[others] + (p0[srv] - decayed) / (m - 1)
+    np.testing.assert_allclose(log.probs[others], expect, rtol=1e-9)  # Eq. 3
+
+
+@given(m=st.integers(2, 16),
+       seq=st.lists(st.tuples(st.integers(0, 15), st.floats(0.1, 50.0)),
+                    min_size=1, max_size=30))
+def test_host_and_jax_twins_agree(m, seq):
+    cfg = LogConfig(n_servers=m, lam=24.0)
+    host = HostStatLog(cfg)
+    state = statlog.init_state(cfg)
+    for srv, ln in seq:
+        srv = srv % m
+        host.apply_assignment(srv, ln)
+        state = statlog.apply_assignment(state, jnp.asarray(srv),
+                                         jnp.asarray(ln, jnp.float32), cfg)
+    np.testing.assert_allclose(np.asarray(state.loads), host.loads,
+                               rtol=2e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(state.probs), host.probs,
+                               rtol=2e-4, atol=1e-6)
+
+
+def test_heavier_server_has_lower_prob():
+    """The exponential weighting orders probabilities by load (§3.3.2)."""
+    cfg = LogConfig(n_servers=4, lam=10.0)
+    log = HostStatLog(cfg)
+    log.apply_assignment(0, 50.0)
+    log.apply_assignment(1, 5.0)
+    assert log.probs[0] < log.probs[1] < log.probs[2]
+    assert log.probs[2] == pytest.approx(log.probs[3])
+
+
+def test_ewma_observation():
+    cfg = LogConfig(n_servers=3, ewma_alpha=0.5)
+    log = HostStatLog(cfg)
+    log.observe_completion(1, 100.0)
+    assert log.ewma_lat[1] == 100.0     # first observation seeds
+    log.observe_completion(1, 50.0)
+    assert log.ewma_lat[1] == pytest.approx(75.0)
+
+
+def test_complete_drains_load():
+    log = HostStatLog(LogConfig(n_servers=2))
+    log.apply_assignment(0, 10.0)
+    log.complete(0, 4.0)
+    assert log.loads[0] == pytest.approx(6.0)
+    log.complete(0, 100.0)  # never negative
+    assert log.loads[0] == 0.0
+
+
+def test_renormalize_fixes_drift():
+    log = HostStatLog(LogConfig(n_servers=5))
+    log.probs = log.probs * 1.1
+    log.renormalize()
+    assert abs(log.probs.sum() - 1.0) < 1e-12
+
+
+def test_request_log_records_fig8_rows():
+    """The I/O request table keeps (object, offset, length) rows (Fig. 8)."""
+    log = HostStatLog(LogConfig(n_servers=2))
+    log.record_request(12, 4096, 2.0)
+    log.record_request(99, 0, 0.5)
+    assert log.request_log == [(12, 4096, 2.0), (99, 0, 0.5)]
