@@ -20,11 +20,13 @@ import time
 from typing import Dict
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 
 from repro.core import analysis, simulate
+from repro.core.engine import ClusterTrace
 from repro.core.policies import PolicyConfig
-from repro.core.simulate import SimConfig
+from repro.core.simulate import ScenarioConfig, SimConfig
 from repro.io import IOClient, IOClientConfig, SimulatedCluster
 
 FULL = SimConfig()          # the paper's numbers: 100 OSS, 2000 reqs, 100 trials
@@ -155,6 +157,60 @@ def completion_time(n_servers: int = 24, n_files: int = 120,
     return out
 
 
+def fig_temporal(n_trials: int = 12) -> Dict[str, dict]:
+    """Beyond-paper temporal figure: time-varying stragglers.
+
+    Left: jitted scenario sweep — straggler-hit fraction per window under
+    the transient trace (does the policy track onset and recovery?) plus
+    p99/makespan slowdown vs RR.  Right: the SAME ClusterTrace driven
+    through the host-path queueing cluster (``SimulatedCluster(trace=)``)
+    for one policy, cross-checking the two substrates.
+    """
+    cfg = SimConfig(n_servers=24, n_requests=480, n_trials=n_trials,
+                    window_size=60,
+                    scenario=ScenarioConfig(name="transient"))
+    out = simulate.run_scenario_eval(
+        seed=0, cfg=cfg, scenario_names=("transient",),
+        policy_names=("rr", "trh", "ect"))["transient"]
+    print("\n== Temporal (transient stragglers): hit-rate over time ==")
+    for pol, res in out.items():
+        hits = analysis.straggler_hits_over_time(
+            res.chosen, res.straggler_mask, cfg.window_size)
+        curve = " ".join(f"{100 * h:5.1f}" for h in hits)
+        print(f"{pol:>6s} hit% per window: {curve}")
+    slow = analysis.slowdown_vs_baseline(out, baseline="rr")
+    print(f"{'policy':>8s} {'p99 vs rr':>10s} {'makespan vs rr':>15s}")
+    for pol, s in slow.items():
+        print(f"{pol:>8s} {s['p99_vs_rr']:10.2f} {s['makespan_vs_rr']:15.2f}")
+
+    # host path on the same kind of trace: 2 servers flap slow mid-run
+    m, base = 12, 200.0
+    slow_row = np.full(m, base)
+    slow_row[[1, 5]] = base / 8.0
+    trace = ClusterTrace(times=jnp.asarray([0.0, 2.0, 6.0], jnp.float32),
+                         rates=jnp.asarray(
+                             np.stack([np.full(m, base), slow_row,
+                                       np.full(m, base)]), jnp.float32))
+    host = {}
+    for pol, thr in (("rr", 0.0), ("trh", 4.0), ("ect", 0.05)):
+        sim = SimulatedCluster(m, base_rate_mb_s=base, seed=3, trace=trace)
+        cli = IOClient(sim, IOClientConfig(
+            policy=PolicyConfig(name=pol, threshold=thr)))
+        for f in range(48):
+            cli.write_file(f, size_mb=16.0)
+            sim.advance_time(0.25)          # writes spread over the trace
+            for s in range(m):
+                cli.log.loads[s] = sim.queued_mb(s)
+        cli.flush()
+        st = cli.stats()
+        host[pol] = {"p99_write_s": st["p99_write_s"],
+                     "done_at_s": sim.clock}
+    print("host path, same transient trace: "
+          + "  ".join(f"{p}: p99={h['p99_write_s']:.2f}s "
+                      f"done@{h['done_at_s']:.1f}s" for p, h in host.items()))
+    return {"sweep": out, "host": host}
+
+
 def run_all(full: bool = False):
     cfg = FULL if full else QUICK
     figs_12_17(cfg)
@@ -164,6 +220,7 @@ def run_all(full: bool = False):
     table_probe_overhead(cfg)
     nltr_sensitivity(cfg)
     completion_time()
+    fig_temporal()
 
 
 if __name__ == "__main__":

@@ -26,6 +26,8 @@ def main() -> None:
 
     from benchmarks import sched_perf
     sched_perf.run_all()
+    # one perf-trajectory point per run (phase time + transient p99)
+    sched_perf.emit_bench_point("BENCH_sched.json")
 
     from benchmarks import kernels_bench
     kernels_bench.run_all()

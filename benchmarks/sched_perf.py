@@ -6,17 +6,33 @@ servers at 200 MB/s, one slow-rate straggler (8x) with 800 MB of foreign
 queue, one half-loaded server; 120 files x 16 MB written through the
 client.  Each iteration follows hypothesis -> change -> measure; results
 are recorded in EXPERIMENTS.md §Perf.
+
+Temporal extension (DESIGN.md §Temporal-model): ``scenario_ranking``
+ranks every policy by p50/p95/p99 latency and makespan under each
+scenario of the library (jitted ``run_trials`` sweep), and
+``transient_latency_cdf`` prints the latency CDF under a transient
+straggler trace.  ``emit_bench_point`` appends one JSON point per run to
+``BENCH_sched.json`` for the perf trajectory.
 """
 
 from __future__ import annotations
 
+import functools
+import json
+import os
+import time
 from typing import Dict, Optional
+
+import numpy as np
 
 from repro.core.policies import PolicyConfig
 from repro.io import IOClient, IOClientConfig, SimulatedCluster
 from repro.io.striping import MB
 
 
+# Memoized: run_all prints a full iteration table and emit_bench_point
+# re-reads three of the same cells — don't pay for the simulation twice.
+@functools.lru_cache(maxsize=None)
 def phase_time(policy: str, threshold: float = 4.0,
                stripe_mb: float = 4.0, n_files: int = 120,
                file_mb: float = 16.0, lam: float = 32.0,
@@ -50,6 +66,120 @@ def ideal_phase_time() -> float:
     queue and server 5's 2 s queue)."""
     total_mb = 120 * 16.0
     return total_mb / (22 * 200.0)
+
+
+# ---------------------------------------------------------------------------
+# Temporal scenarios (DESIGN.md §Temporal-model): latency / makespan ranking
+# ---------------------------------------------------------------------------
+
+# single source of truth: the simulator's scenario/policy libraries
+from repro.core.simulate import (SCENARIOS as SWEEP_SCENARIOS,  # noqa: E402
+                                 SWEEP_POLICIES)
+
+
+def _sweep_cfg(n_trials: int = 25):
+    from repro.core.simulate import SimConfig
+    return SimConfig(n_servers=24, n_requests=480, n_trials=n_trials,
+                     window_size=60)
+
+
+# One seed-0 sweep per (scenarios, policies, trials) per process —
+# scenario_ranking, transient_latency_cdf and emit_bench_point overlap.
+_SWEEP_CACHE: Dict[tuple, dict] = {}
+
+
+def _scenario_sweep(scenario_names: tuple, policy_names: tuple,
+                    n_trials: int) -> dict:
+    key = (scenario_names, policy_names, n_trials)
+    if key not in _SWEEP_CACHE:
+        from repro.core import simulate
+        _SWEEP_CACHE[key] = simulate.run_scenario_eval(
+            seed=0, cfg=_sweep_cfg(n_trials),
+            scenario_names=scenario_names, policy_names=policy_names)
+    return _SWEEP_CACHE[key]
+
+
+def _transient_results(n_trials: int) -> dict:
+    """{policy: TrialResult} under the transient trace, reusing the full
+    ranking sweep when it has already run this process."""
+    full = (SWEEP_SCENARIOS, SWEEP_POLICIES, n_trials)
+    if full in _SWEEP_CACHE:
+        row = _SWEEP_CACHE[full]["transient"]
+        return {p: row[p] for p in ("rr", "trh", "ect")}
+    return _scenario_sweep(("transient",), ("rr", "trh", "ect"),
+                           n_trials)["transient"]
+
+
+def scenario_ranking(n_trials: int = 25) -> Dict[str, Dict[str, dict]]:
+    """Policy ranking per scenario: p50/p95/p99 latency + makespan +
+    straggler-hit fraction (jitted run_trials sweep)."""
+    from repro.core import analysis
+    out = _scenario_sweep(SWEEP_SCENARIOS, SWEEP_POLICIES, n_trials)
+    table: Dict[str, Dict[str, dict]] = {}
+    print("\n== Temporal scenarios: policy ranking "
+          "(est. completion latency, s) ==")
+    for scn, row in out.items():
+        print(f"\n-- scenario: {scn} --")
+        print(f"{'policy':>8s} {'p50':>8s} {'p95':>8s} {'p99':>8s} "
+              f"{'makespan':>9s} {'strag_hit%':>10s}")
+        ranked = {}
+        for pol, res in row.items():
+            ls = analysis.latency_stats(res.latencies)
+            ls["makespan"] = analysis.makespan(res)
+            ls["hit_frac"] = analysis.straggler_summary(res)["hit_fraction"]
+            ranked[pol] = ls
+            print(f"{pol:>8s} {ls['p50']:8.2f} {ls['p95']:8.2f} "
+                  f"{ls['p99']:8.2f} {ls['makespan']:9.2f} "
+                  f"{100 * ls['hit_frac']:10.2f}")
+        best = min(ranked, key=lambda p: ranked[p]["p99"])
+        print(f"   best p99: {best} "
+              f"({ranked[best]['p99'] / max(ranked['rr']['p99'], 1e-9):.2f}x rr)")
+        table[scn] = ranked
+    return table
+
+
+def transient_latency_cdf(n_trials: int = 25) -> None:
+    """Latency CDF under the transient straggler trace (rr vs trh vs ect)."""
+    from repro.core import analysis
+    out = _transient_results(n_trials)
+    print("\n== Transient stragglers: request latency CDF ==")
+    for pol, res in out.items():
+        xs, ys = analysis.latency_cdf(res.latencies, 72)
+        print(analysis.ascii_plot(
+            ys, label=f"CDF P[lat<=x] — {pol} "
+                      f"(x: 0..{xs[-1]:.1f}s, p99={analysis.latency_stats(res.latencies)['p99']:.2f}s)"))
+
+
+def emit_bench_point(path: str = "BENCH_sched.json",
+                     n_trials: int = 25) -> dict:
+    """Append one perf-trajectory point: the §Perf C phase time per policy
+    plus the transient-scenario p99 for the log-assisted policies.
+    Reuses this process's cached run_all results when available."""
+    from repro.core import analysis
+    point: Dict[str, object] = {"ts": time.time(), "metric_unit": "seconds"}
+    # call signatures mirror run_all's rows so the lru_cache hits
+    for pol, kw in (("rr", {}), ("trh", {"threshold": 4.0}),
+                    ("ect", {"threshold": 0.05})):
+        point[f"phase_s_{pol}"] = phase_time(policy=pol, **kw)["phase_s"]
+    for pol, res in _transient_results(n_trials).items():
+        point[f"transient_p99_{pol}"] = \
+            analysis.latency_stats(res.latencies)["p99"]
+    history = []
+    if os.path.exists(path):
+        try:
+            with open(path) as f:
+                history = json.load(f)
+            if not isinstance(history, list):
+                history = [history]
+        except (json.JSONDecodeError, OSError):
+            history = []
+    history.append(point)
+    with open(path, "w") as f:
+        json.dump(history, f, indent=1)
+    print(f"[sched_perf] appended point -> {path} "
+          f"(trh phase {point['phase_s_trh']:.2f}s, "
+          f"transient p99 {point['transient_p99_trh']:.2f}s)")
+    return point
 
 
 def run_all() -> None:
@@ -93,6 +223,10 @@ def run_all() -> None:
     row("ect cold log (no snapshot)", policy="ect", threshold=0.05,
         know_loads=False)
 
+    scenario_ranking()
+    transient_latency_cdf()
+
 
 if __name__ == "__main__":
     run_all()
+    emit_bench_point()

@@ -23,6 +23,8 @@ from typing import Any, Dict, List, Optional, Tuple
 
 import numpy as np
 
+from repro.compat import simple_keystr
+
 
 def file_id_for(step: int, leaf_index: int, shard_index: int) -> int:
     """Stable 63-bit file id for a checkpoint shard."""
@@ -147,7 +149,7 @@ def flatten_with_paths(tree) -> List[Tuple[str, np.ndarray]]:
     flat, _ = jax.tree_util.tree_flatten_with_path(tree)
     out = []
     for kp, leaf in flat:
-        out.append((jax.tree_util.keystr(kp, simple=True, separator="/"), leaf))
+        out.append((simple_keystr(kp), leaf))
     return out
 
 
@@ -157,7 +159,7 @@ def unflatten_like(target, named: Dict[str, np.ndarray]):
     flat, treedef = jax.tree_util.tree_flatten_with_path(target)
     leaves = []
     for kp, old in flat:
-        path = jax.tree_util.keystr(kp, simple=True, separator="/")
+        path = simple_keystr(kp)
         if path not in named:
             raise KeyError(f"checkpoint missing leaf {path!r}")
         leaves.append(named[path])

@@ -26,6 +26,7 @@ import jax.numpy as jnp
 from repro.models import transformer as T
 from repro.models import encdec as E
 from repro.models.config import ModelConfig
+from repro.compat import simple_keystr
 
 
 @dataclasses.dataclass(frozen=True)
@@ -97,7 +98,7 @@ def _cache_roles(cfg: ModelConfig, caches_abs, batch: int):
     import jax.tree_util as jtu
 
     def role_for(kp, leaf):
-        path = jtu.keystr(kp, simple=True, separator="/")
+        path = simple_keystr(kp)
         name = path.rsplit("/", 1)[-1]
         nd = len(leaf.shape)
         if name in ("k", "v", "k_scale", "v_scale"):  # (G, B, S, KV, *)

@@ -1,15 +1,20 @@
 """repro.core — the paper's contribution: log-assisted straggler-aware
-I/O scheduling (client-side statistic log, Eqs. 1-3, RR/MLML/TRH/nLTR)."""
+I/O scheduling (client-side statistic log, Eqs. 1-3, RR/MLML/TRH/nLTR),
+plus the temporal cluster model (service-rate traces, latency metrics)."""
 
 from repro.core.statlog import (  # noqa: F401
     LogConfig, SchedState, HostStatLog, init_state, apply_assignment,
-    observe_completion, renormalize,
+    observe_completion, advance_time, estimated_latency, renormalize,
 )
 from repro.core.policies import (  # noqa: F401
     POLICIES, PolicyConfig, HostScheduler, plan_window, select_target,
     apply_threshold,
 )
 from repro.core.engine import (  # noqa: F401
-    Workload, ScheduleResult, group_by_object, run_window, run_stream,
-    run_stream_jit,
+    ClusterTrace, Workload, ScheduleResult, group_by_object, rates_at,
+    run_window, run_stream, run_stream_jit,
+)
+from repro.core.simulate import (  # noqa: F401
+    SCENARIOS, SWEEP_POLICIES, ScenarioConfig, SimConfig, TrialResult,
+    make_trace, run_scenario_eval, run_trials,
 )

@@ -1,4 +1,9 @@
-"""Balance / straggler metrics over scheduling outcomes (paper §4 figures).
+"""Balance / straggler / latency metrics over scheduling outcomes.
+
+Covers the paper's §4 figures (load balance, Fig. 18 straggler avoidance,
+probe overhead) plus the temporal-model metrics (DESIGN.md
+§Temporal-model): latency percentiles, makespan, straggler-hit-over-time
+and slowdown-vs-baseline summaries.
 
 All functions take numpy-or-jnp arrays with an optional leading trial axis
 and return plain floats / numpy arrays, so benchmarks can print CSV without
@@ -89,6 +94,77 @@ def straggler_summary(result) -> Dict[str, float]:
             float(np.mean(strag_growth)) if strag_growth else 0.0,
         "max_load": float(loads.max(axis=1).mean()),
     }
+
+
+def latency_stats(latencies) -> Dict[str, float]:
+    """p50/p95/p99/mean/max of per-request estimated completion latencies.
+
+    ``latencies``: (R,) or (T, R) seconds (temporal model).  Percentiles
+    pool all trials' requests — the paper-scale question is "what does the
+    99th-percentile request see", not "the 99th-percentile trial".
+    """
+    lat = _np(latencies).astype(np.float64).reshape(-1)
+    return {
+        "p50": float(np.percentile(lat, 50)),
+        "p95": float(np.percentile(lat, 95)),
+        "p99": float(np.percentile(lat, 99)),
+        "mean": float(lat.mean()),
+        "max": float(lat.max()),
+    }
+
+
+def makespan(result) -> float:
+    """Mean (over trials) I/O-phase makespan: the latest estimated
+    completion time of any request (``TrialResult.phase_time``)."""
+    return float(_np(result.phase_time).astype(np.float64).mean())
+
+
+def latency_cdf(latencies, n_points: int = 64) -> Tuple[np.ndarray, np.ndarray]:
+    """Empirical CDF of request latencies: (latency grid, P[lat <= x])."""
+    lat = np.sort(_np(latencies).astype(np.float64).reshape(-1))
+    xs = np.linspace(lat[0], lat[-1] if lat[-1] > lat[0] else lat[0] + 1.0,
+                     n_points)
+    ys = np.searchsorted(lat, xs, side="right") / len(lat)
+    return xs, ys
+
+
+def straggler_hits_over_time(chosen, straggler_mask,
+                             window_size: int) -> np.ndarray:
+    """Fraction of each window's requests landing on stragglers, averaged
+    over trials — shows onset/recovery tracking under temporal scenarios.
+
+    ``chosen``: (T, R) or (R,); ``straggler_mask``: (T, M) or (M,).
+    """
+    ch = _np(chosen)
+    mask = _np(straggler_mask).astype(bool)
+    if ch.ndim == 1:
+        ch = ch[None]
+    if mask.ndim == 1:                     # shared mask across trials
+        mask = np.broadcast_to(mask, (ch.shape[0], mask.shape[0]))
+    t, r = ch.shape
+    n_win = -(-r // window_size)
+    pad = n_win * window_size - r
+    hit = np.take_along_axis(mask, ch, axis=1).astype(np.float64)
+    if pad:
+        hit = np.concatenate([hit, np.full((t, pad), np.nan)], axis=1)
+    per_win = np.nanmean(hit.reshape(t, n_win, window_size), axis=2)
+    return per_win.mean(axis=0)
+
+
+def slowdown_vs_baseline(results: Dict[str, object],
+                         baseline: str = "rr") -> Dict[str, Dict[str, float]]:
+    """Per-policy p99-latency and makespan ratios vs a baseline policy
+    (values < 1 mean the policy beats the baseline)."""
+    base_p99 = latency_stats(results[baseline].latencies)["p99"]
+    base_mk = makespan(results[baseline])
+    out = {}
+    for name, res in results.items():
+        out[name] = {
+            "p99_vs_" + baseline: latency_stats(res.latencies)["p99"]
+            / max(base_p99, 1e-12),
+            "makespan_vs_" + baseline: makespan(res) / max(base_mk, 1e-12),
+        }
+    return out
 
 
 def probe_overhead(results: Dict[str, object], n_requests: int) -> Dict[str, float]:

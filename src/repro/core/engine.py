@@ -14,9 +14,20 @@ policies x 2000 requests) runs as a handful of jitted programs:
                            window's steps, applying Eqs. (1)-(3) per step.
 * ``run_stream``         — ``lax.scan`` over windows.
 
-Outputs per request: the chosen server (original request order) and the
+Outputs per request: the chosen server (original request order), the
 probe-message count (0 for all log-assisted policies, 2/request for the
-SC'14 two-choice baseline).
+SC'14 two-choice baseline), and the estimated completion latency.
+
+Temporal model (DESIGN.md §Temporal-model): ``run_stream`` optionally
+takes a :class:`ClusterTrace` — a static-shape schedule of per-server
+service-rate events (straggler onset/recovery, flapping, correlated rack
+degradation, permanent heterogeneity).  Between windows the engine
+applies the trace's rates, drains each server's queue for ``window_dt``
+virtual seconds (:func:`repro.core.statlog.advance_time`), and records a
+per-request estimated completion time; completions feed the log's
+``ewma_lat`` so the ECT policy sees *slow* servers in the JAX path.  With
+``trace=None`` (or the degenerate all-equal-rates, ``window_dt=0``
+trace) the engine reproduces the paper's static-load model exactly.
 """
 
 from __future__ import annotations
@@ -44,11 +55,39 @@ class Workload(NamedTuple):
         return self.object_ids.shape[0]
 
 
+class ClusterTrace(NamedTuple):
+    """Static-shape schedule of service-rate change events.
+
+    Row ``e`` says: from virtual time ``times[e]`` on, server ``i`` serves
+    at ``rates[e, i]`` MB/s.  ``times[0]`` must be 0 (the base rates).
+    Piecewise-constant rates express every scenario in the library:
+    permanent heterogeneity (1 event), transient stragglers (3), flapping
+    (alternating events), correlated rack degradation (rack rows slowed).
+    """
+
+    times: jax.Array   # (E,) float32, ascending, times[0] == 0
+    rates: jax.Array   # (E, M) float32 MB/s per server
+
+    @property
+    def n_events(self) -> int:
+        return self.times.shape[0]
+
+
+def rates_at(trace: ClusterTrace, t: jax.Array) -> jax.Array:
+    """(M,) service rates in effect at virtual time ``t``."""
+    idx = jnp.sum(trace.times <= t) - 1
+    return trace.rates[jnp.clip(idx, 0, trace.n_events - 1)]
+
+
 class ScheduleResult(NamedTuple):
     state: SchedState
     chosen: jax.Array        # (R,) int32 server per request (original order)
     probe_msgs: jax.Array    # () int32 total probe messages issued
     redirected: jax.Array    # (R,) bool — True where chosen != default home
+    latencies: jax.Array     # (R,) float32 est. completion latency, seconds
+    #                          (queue ahead + own bytes, at assignment time)
+    window_loads: jax.Array  # (W, M) per-window post-drain load snapshots
+    #                          (W=1 for run_window)
 
 
 def group_by_object_with_map(work: Workload) -> Tuple[Workload, jax.Array]:
@@ -88,11 +127,18 @@ def group_by_object(work: Workload) -> Workload:
 
 def run_window(state: SchedState, work: Workload, key: jax.Array, *,
                policy: P.PolicyConfig, log_cfg: LogConfig,
-               group_steps: bool = True) -> ScheduleResult:
+               group_steps: bool = True,
+               observe: bool = False) -> ScheduleResult:
     """Schedule one time window's requests against the log.
 
     ``chosen``/``redirected`` come back in ORIGINAL request order (grouped
-    same-object steps share one decision)."""
+    same-object steps share one decision).
+
+    ``observe`` (temporal model; on whenever ``run_stream`` has a trace)
+    folds each request's estimated effective MB/s into ``ewma_lat`` right
+    after its assignment — the completion-feedback path that lets ECT see
+    slow servers.  Off by default so the static model (and the Pallas
+    kernel's minload semantics) stay bit-exact with the paper."""
     orig_work = work
     req_to_step = None
     if group_steps:
@@ -113,12 +159,21 @@ def run_window(state: SchedState, work: Workload, key: jax.Array, *,
         target = P.select_target(policy, plan, st, pos, o, ln, k)
         chosen = P.apply_threshold(policy, st, default, target, ln)
         st2 = statlog.apply_assignment(st, chosen, ln, log_cfg)
+        # Estimated completion latency: everything queued ahead of (and
+        # including) this request, at the server's current service rate.
+        lat = statlog.estimated_latency(st2, chosen)
+        if observe:
+            # Completion feedback: the effective MB/s this request will
+            # see folds into ewma_lat — the ECT policy's rate signal (the
+            # host twin observes the same via WriteResult.mb_per_s).
+            st2 = statlog.observe_completion(
+                st2, chosen, ln / jnp.maximum(lat, 1e-9), log_cfg)
         # padding rows leave the log untouched
         st = jax.tree.map(lambda a, b: jnp.where(v, b, a), st, st2)
-        return st, (chosen, chosen != default)
+        return st, (chosen, chosen != default, jnp.where(v, lat, 0.0))
 
     pos = jnp.arange(r, dtype=jnp.int32)
-    state, (chosen_sorted, redir_sorted) = jax.lax.scan(
+    state, (chosen_sorted, redir_sorted, lat_sorted) = jax.lax.scan(
         body, state, (pos, obj, lens, val, keys))
     if log_cfg.renorm:
         state = statlog.renormalize(state)
@@ -127,21 +182,42 @@ def run_window(state: SchedState, work: Workload, key: jax.Array, *,
     inv = jnp.zeros((r,), jnp.int32).at[plan.order].set(pos)
     chosen = chosen_sorted[inv]
     redirected = redir_sorted[inv] & work.valid
+    latencies = lat_sorted[inv] * work.valid
     if req_to_step is not None:
         chosen = chosen[req_to_step]
         redirected = redirected[req_to_step] & orig_work.valid
+        latencies = latencies[req_to_step] * orig_work.valid
     probes = (jnp.sum(work.valid) * policy.probes_per_request).astype(jnp.int32)
     return ScheduleResult(state=state, chosen=chosen, probe_msgs=probes,
-                          redirected=redirected)
+                          redirected=redirected, latencies=latencies,
+                          window_loads=state.loads[None])
 
 
 def run_stream(state: SchedState, work: Workload, key: jax.Array, *,
                policy: P.PolicyConfig, log_cfg: LogConfig, window_size: int,
-               group_steps: bool = True) -> ScheduleResult:
+               group_steps: bool = True,
+               trace: Optional[ClusterTrace] = None,
+               window_dt: float = 0.0,
+               observe: Optional[bool] = None) -> ScheduleResult:
     """Split the request time series into windows and schedule each (§3.2).
 
     Pads the stream to a multiple of ``window_size``; padding is invalid.
+
+    Temporal model: window ``w`` opens at virtual time ``w * window_dt``.
+    When a ``trace`` is given, the rates in effect at each window start are
+    looked up from it before scheduling, and after the window the queues
+    drain for ``window_dt`` seconds at those rates.  ``window_dt`` must be
+    a static python float (0.0 disables draining — the static model).
+
+    ``observe`` controls the completion-feedback path (see
+    :func:`run_window`); default: on exactly when a trace is given.  Pass
+    ``observe=False`` with a trace to keep ewma-reading policies (ECT)
+    bit-identical to the no-trace path — the degenerate static scenario
+    does this (the feedback would differ from the never-observing static
+    model even with all-equal rates).
     """
+    if observe is None:
+        observe = trace is not None
     r = work.n_requests
     n_win = -(-r // window_size)
     pad = n_win * window_size - r
@@ -154,25 +230,42 @@ def run_stream(state: SchedState, work: Workload, key: jax.Array, *,
     val = pad_to(work.valid, False).reshape(n_win, window_size)
     keys = jax.random.split(key, n_win)
 
-    def body(st, xs):
-        o, ln, v, k = xs
-        res = run_window(st, Workload(o, ln, v), k, policy=policy,
-                         log_cfg=log_cfg, group_steps=group_steps)
-        return res.state, (res.chosen, res.probe_msgs, res.redirected)
+    if trace is not None:
+        t_open = jnp.arange(n_win, dtype=jnp.float32) * window_dt
+        win_rates = jax.vmap(lambda t: rates_at(trace, t))(t_open)
+    else:  # static model: keep whatever rates the state carries
+        win_rates = jnp.broadcast_to(state.rates, (n_win, state.n_servers))
 
-    state, (chosen, probes, redirected) = jax.lax.scan(
-        body, state, (obj, lens, val, keys))
+    def body(st, xs):
+        o, ln, v, k, rates = xs
+        st = st._replace(rates=rates)
+        res = run_window(st, Workload(o, ln, v), k, policy=policy,
+                         log_cfg=log_cfg, group_steps=group_steps,
+                         observe=observe)
+        st = res.state
+        if window_dt:
+            st = statlog.advance_time(st, jnp.float32(window_dt))
+        return st, (res.chosen, res.probe_msgs, res.redirected,
+                    res.latencies, st.loads)
+
+    state, (chosen, probes, redirected, latencies, window_loads) = \
+        jax.lax.scan(body, state, (obj, lens, val, keys, win_rates))
     return ScheduleResult(
         state=state,
         chosen=chosen.reshape(-1)[:r],
         probe_msgs=jnp.sum(probes).astype(jnp.int32),
         redirected=redirected.reshape(-1)[:r],
+        latencies=latencies.reshape(-1)[:r],
+        window_loads=window_loads,
     )
 
 
 @functools.partial(jax.jit, static_argnames=("policy", "log_cfg",
-                                             "window_size", "group_steps"))
+                                             "window_size", "group_steps",
+                                             "window_dt", "observe"))
 def run_stream_jit(state, work, key, *, policy, log_cfg, window_size,
-                   group_steps=True):
+                   group_steps=True, trace=None, window_dt=0.0,
+                   observe=None):
     return run_stream(state, work, key, policy=policy, log_cfg=log_cfg,
-                      window_size=window_size, group_steps=group_steps)
+                      window_size=window_size, group_steps=group_steps,
+                      trace=trace, window_dt=window_dt, observe=observe)

@@ -33,11 +33,63 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import engine, policies, statlog
-from repro.core.engine import Workload
+from repro.core.engine import ClusterTrace, Workload
 from repro.core.policies import PolicyConfig
 from repro.core.statlog import LogConfig, SchedState
 
 SIZE_CLASSES = ("small", "medium", "large", "mixed")
+
+SCENARIOS = ("static", "permanent_slow", "transient", "flapping",
+             "correlated_rack")
+
+# Canonical policy set for temporal sweeps (the paper's log-assisted
+# policies + the rate-aware ECT extension); benchmarks import this so the
+# ranking tables track the scenario/policy libraries automatically.
+SWEEP_POLICIES = ("rr", "mlml", "trh", "nltr", "ect")
+
+
+@dataclasses.dataclass(frozen=True)
+class ScenarioConfig:
+    """Temporal straggler scenario (DESIGN.md §Temporal-model).
+
+    Generates a :class:`~repro.core.engine.ClusterTrace` per trial (random
+    straggler identities, deterministic per trial key):
+
+    * ``static``          — all rates equal, no events; with the default
+                            ``window_dt = 0`` this is the degenerate trace
+                            that reproduces the paper's static-load model
+                            bit-for-bit (Fig. 18's extra-load stragglers
+                            stay available via ``SimConfig.straggler_frac``).
+    * ``permanent_slow``  — a random ``straggler_frac`` subset serves at
+                            ``base/slow_factor`` for the whole run
+                            (permanent heterogeneity, arXiv:1911.05918's
+                            slow-service setting).
+    * ``transient``       — same subset degrades at ``onset`` and recovers
+                            at ``recover`` (fractions of the stream
+                            horizon) — the IOPathTune-style runtime drift.
+    * ``flapping``        — the subset alternates slow/normal ``n_flaps``
+                            times over the horizon.
+    * ``correlated_rack`` — a random contiguous rack of ``rack_size``
+                            servers degrades at ``onset`` and stays slow
+                            (correlated failure domain).
+    """
+
+    name: str = "static"
+    base_rate_mb_s: float = 200.0
+    slow_factor: float = 8.0
+    straggler_frac: float = 0.10
+    # None -> auto: the time in which the *healthy* cluster exactly drains
+    # one window's bytes, so stragglers accumulate queue (static -> 0.0).
+    window_dt: Optional[float] = None
+    onset: float = 0.25       # fraction of horizon (transient/flapping/rack)
+    recover: float = 0.65     # transient recovery point (fraction of horizon)
+    n_flaps: int = 8
+    rack_size: int = 8
+
+    def __post_init__(self):
+        if self.name not in SCENARIOS:
+            raise ValueError(
+                f"unknown scenario {self.name!r}; choose from {SCENARIOS}")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -55,6 +107,8 @@ class SimConfig:
     straggler_frac: float = 0.0      # 0.10 for the Fig. 18 experiment
     straggler_factor: float = 5.0    # 5x average extra load on stragglers
     client_model: str = "shared_log"  # shared_log | per_client
+    # temporal scenario (None = the seed's static-load model, no trace)
+    scenario: Optional[ScenarioConfig] = None
     # size-class boundaries (MB) per §4
     small_lo: float = 0.25
     small_hi: float = 4.0
@@ -64,6 +118,10 @@ class SimConfig:
     def __post_init__(self):
         assert self.workload in SIZE_CLASSES
         assert self.client_model in ("shared_log", "per_client")
+
+    @property
+    def n_windows(self) -> int:
+        return -(-self.n_requests // self.window_size)
 
 
 class TrialResult(NamedTuple):
@@ -76,7 +134,11 @@ class TrialResult(NamedTuple):
     straggler_hits: jax.Array  # () requests landed on injected stragglers
     redirected: jax.Array      # () requests redirected away from default
     init_loads: jax.Array      # (M,) initial (pre-scheduling) loads
-    straggler_mask: jax.Array  # (M,) bool
+    straggler_mask: jax.Array  # (M,) bool — load-injected OR trace-slowed
+    # -- temporal extension (meaningful when cfg.scenario is set) ----------
+    latencies: jax.Array       # (R,) est. completion latency per request, s
+    phase_time: jax.Array      # () makespan: latest est. completion time, s
+    window_loads: jax.Array    # (W, M) post-drain load snapshot per window
 
 
 def sample_workload(key: jax.Array, cfg: SimConfig) -> Workload:
@@ -157,6 +219,72 @@ def absorb_initial_loads(state: SchedState, loads: jax.Array,
     return state._replace(loads=loads, probs=probs.astype(jnp.float32))
 
 
+def resolve_window_dt(cfg: SimConfig, scn: ScenarioConfig) -> float:
+    """Static virtual seconds per window.  Auto default: the time in which
+    the healthy cluster in aggregate exactly drains one window's expected
+    bytes — so balanced load stays bounded while stragglers accumulate."""
+    if scn.window_dt is not None:
+        return float(scn.window_dt)
+    if scn.name == "static":
+        return 0.0
+    per_window_mb = cfg.window_size * mean_request_mb(cfg)
+    return per_window_mb / (cfg.n_servers * scn.base_rate_mb_s)
+
+
+def make_trace(key: jax.Array, cfg: SimConfig,
+               scn: ScenarioConfig) -> ClusterTrace:
+    """Build the scenario's rate-event schedule (static shapes per scenario).
+
+    Straggler identities are drawn from ``key`` so every vmapped trial sees
+    a different slow subset (matching the paper's per-trial straggler
+    injection).  Event times are fractions of the stream horizon
+    ``n_windows * window_dt``.
+    """
+    m = cfg.n_servers
+    base = scn.base_rate_mb_s
+    horizon = max(cfg.n_windows * resolve_window_dt(cfg, scn), 1e-6)
+    base_row = jnp.full((m,), base, jnp.float32)
+
+    if scn.name == "static":
+        return ClusterTrace(times=jnp.zeros((1,), jnp.float32),
+                            rates=base_row[None])
+
+    if scn.name == "correlated_rack":
+        rack = min(scn.rack_size, m)
+        start = jax.random.randint(key, (), 0, m - rack + 1)
+        idx = jnp.arange(m)
+        mask = (idx >= start) & (idx < start + rack)
+    else:
+        n_strag = max(int(round(scn.straggler_frac * m)), 1)
+        idx = jax.random.choice(key, m, (n_strag,), replace=False)
+        mask = jnp.zeros((m,), bool).at[idx].set(True)
+    slow_row = jnp.where(mask, base / scn.slow_factor, base).astype(jnp.float32)
+
+    if scn.name == "permanent_slow":
+        return ClusterTrace(times=jnp.zeros((1,), jnp.float32),
+                            rates=slow_row[None])
+    if scn.name == "transient":
+        times = jnp.asarray([0.0, scn.onset * horizon, scn.recover * horizon],
+                            jnp.float32)
+        return ClusterTrace(times=times,
+                            rates=jnp.stack([base_row, slow_row, base_row]))
+    if scn.name == "flapping":
+        n_ev = max(scn.n_flaps, 2)
+        times = jnp.arange(n_ev, dtype=jnp.float32) * (horizon / n_ev)
+        rows = jnp.stack([base_row if e % 2 == 0 else slow_row
+                          for e in range(n_ev)])
+        return ClusterTrace(times=times, rates=rows)
+    if scn.name == "correlated_rack":
+        times = jnp.asarray([0.0, scn.onset * horizon], jnp.float32)
+        return ClusterTrace(times=times, rates=jnp.stack([base_row, slow_row]))
+    raise AssertionError(scn.name)
+
+
+def trace_straggler_mask(trace: ClusterTrace, scn: ScenarioConfig) -> jax.Array:
+    """(M,) bool: servers that are slow at any point of the trace."""
+    return jnp.any(trace.rates < scn.base_rate_mb_s * (1.0 - 1e-6), axis=0)
+
+
 def _run_shared_log(key: jax.Array, cfg: SimConfig, policy: PolicyConfig,
                     log_cfg: LogConfig) -> TrialResult:
     k_load, k_work, k_sched = jax.random.split(key, 3)
@@ -164,19 +292,39 @@ def _run_shared_log(key: jax.Array, cfg: SimConfig, policy: PolicyConfig,
     work = sample_workload(k_work, cfg)
     state = statlog.init_state(log_cfg)
     state = absorb_initial_loads(state, init, log_cfg)
+    trace, window_dt = None, 0.0
+    if cfg.scenario is not None:
+        # fold_in keeps the 3-way split above byte-identical to the static
+        # path, so the degenerate trace reproduces it bit-for-bit.
+        trace = make_trace(jax.random.fold_in(key, 0x7e3), cfg, cfg.scenario)
+        window_dt = resolve_window_dt(cfg, cfg.scenario)
+        state = state._replace(rates=trace.rates[0])
+    # the degenerate static scenario must stay bit-identical to the
+    # no-trace path for EVERY policy, so its completion feedback is off
+    # (the static model never observes)
+    observe = cfg.scenario is not None and cfg.scenario.name != "static"
     res = engine.run_stream(state, work, k_sched, policy=policy,
                             log_cfg=log_cfg, window_size=cfg.window_size,
-                            group_steps=True)
+                            group_steps=True, trace=trace,
+                            window_dt=window_dt, observe=observe)
     written = jax.ops.segment_sum(work.lengths, res.chosen,
                                   num_segments=cfg.n_servers)
     n_assigned = jax.ops.segment_sum(jnp.ones_like(res.chosen), res.chosen,
                                      num_segments=cfg.n_servers)
+    if cfg.scenario is not None:
+        strag_mask = strag_mask | trace_straggler_mask(trace, cfg.scenario)
     hits = jnp.sum(strag_mask[res.chosen])
+    # completion estimate = window open time + queueing latency
+    w_open = (jnp.arange(cfg.n_requests) // cfg.window_size) * window_dt
+    completion = w_open.astype(jnp.float32) + res.latencies
     return TrialResult(server_loads=init + written, n_assigned=n_assigned,
                        chosen=res.chosen, probe_msgs=res.probe_msgs,
                        straggler_hits=hits,
                        redirected=jnp.sum(res.redirected),
-                       init_loads=init, straggler_mask=strag_mask)
+                       init_loads=init, straggler_mask=strag_mask,
+                       latencies=res.latencies,
+                       phase_time=jnp.max(completion),
+                       window_loads=res.window_loads)
 
 
 def _run_per_client(key: jax.Array, cfg: SimConfig, policy: PolicyConfig,
@@ -190,6 +338,11 @@ def _run_per_client(key: jax.Array, cfg: SimConfig, policy: PolicyConfig,
     n_c = cfg.n_clients
     per = -(-cfg.n_requests // n_c)
     pad = n_c * per - cfg.n_requests
+    win = min(cfg.window_size, per)
+    trace, window_dt = None, 0.0
+    if cfg.scenario is not None:
+        trace = make_trace(jax.random.fold_in(key, 0x7e3), cfg, cfg.scenario)
+        window_dt = resolve_window_dt(cfg, cfg.scenario)
 
     def pad_to(a, fill=0):
         return jnp.concatenate([a, jnp.full((pad,), fill, a.dtype)]) if pad else a
@@ -199,25 +352,42 @@ def _run_per_client(key: jax.Array, cfg: SimConfig, policy: PolicyConfig,
     val = pad_to(work.valid, False).reshape(n_c, per)
     keys = jax.random.split(k_sched, n_c)
 
+    observe = cfg.scenario is not None and cfg.scenario.name != "static"
+
     def one_client(o, ln, v, k):
         state = statlog.init_state(log_cfg)
         state = absorb_initial_loads(state, init, log_cfg)
+        if trace is not None:
+            state = state._replace(rates=trace.rates[0])
         res = engine.run_stream(state, Workload(o, ln, v), k, policy=policy,
-                                log_cfg=log_cfg, window_size=min(cfg.window_size, per))
-        return res.chosen, res.probe_msgs, res.redirected
+                                log_cfg=log_cfg, window_size=win,
+                                trace=trace, window_dt=window_dt,
+                                observe=observe)
+        return (res.chosen, res.probe_msgs, res.redirected, res.latencies,
+                res.window_loads)
 
-    chosen, probes, redirected = jax.vmap(one_client)(obj, lens, val, keys)
+    chosen, probes, redirected, lat, wloads = \
+        jax.vmap(one_client)(obj, lens, val, keys)
     chosen = chosen.reshape(-1)[:cfg.n_requests]
     redirected = redirected.reshape(-1)[:cfg.n_requests]
+    latencies = lat.reshape(-1)[:cfg.n_requests]
     written = jax.ops.segment_sum(work.lengths, chosen,
                                   num_segments=cfg.n_servers)
     n_assigned = jax.ops.segment_sum(jnp.ones_like(chosen), chosen,
                                      num_segments=cfg.n_servers)
+    if cfg.scenario is not None:
+        strag_mask = strag_mask | trace_straggler_mask(trace, cfg.scenario)
+    w_open = (jnp.arange(per) // win).astype(jnp.float32) * window_dt
+    completion = (w_open[None, :] + lat).reshape(-1)[:cfg.n_requests]
     return TrialResult(server_loads=init + written, n_assigned=n_assigned,
                        chosen=chosen, probe_msgs=jnp.sum(probes),
                        straggler_hits=jnp.sum(strag_mask[chosen]),
                        redirected=jnp.sum(redirected),
-                       init_loads=init, straggler_mask=strag_mask)
+                       init_loads=init, straggler_mask=strag_mask,
+                       latencies=latencies,
+                       phase_time=jnp.max(completion),
+                       # clients' private views; mean = typical client
+                       window_loads=jnp.mean(wloads, axis=0))
 
 
 @functools.partial(jax.jit, static_argnames=("cfg", "policy", "log_cfg"))
@@ -237,6 +407,36 @@ def default_log_cfg(cfg: SimConfig, lam: Optional[float] = None) -> LogConfig:
     if lam is None:
         lam = max(4.0 * mean_request_mb(cfg), expected_server_load_mb(cfg))
     return LogConfig(n_servers=cfg.n_servers, lam=lam)
+
+
+def run_scenario_eval(seed: int = 0, cfg: Optional[SimConfig] = None,
+                      scenario_names: Tuple[str, ...] = SCENARIOS,
+                      policy_names: Tuple[str, ...] = SWEEP_POLICIES,
+                      threshold: float = 5.0,
+                      ect_threshold: float = 0.05,
+                      scenario: Optional[ScenarioConfig] = None) -> dict:
+    """Temporal sweep: {scenario: {policy: TrialResult}}, all jitted.
+
+    ``threshold`` is in MB (load benefit) for the paper's policies; the
+    rate-aware ECT guard is in expected *seconds*, hence the separate
+    ``ect_threshold``.  ``scenario`` overrides the per-name defaults'
+    common knobs (rates, straggler fraction, ...).
+    """
+    cfg = cfg or SimConfig()
+    base_scn = scenario or ScenarioConfig()
+    key = jax.random.key(seed)
+    out: dict = {}
+    for scn_name in scenario_names:
+        scn_cfg = dataclasses.replace(base_scn, name=scn_name)
+        s_cfg = dataclasses.replace(cfg, scenario=scn_cfg)
+        log_cfg = default_log_cfg(s_cfg)
+        row = {}
+        for name in policy_names:
+            thr = ect_threshold if name == "ect" else threshold
+            pol = PolicyConfig(name=name, threshold=thr)
+            row[name] = run_trials(key, s_cfg, pol, log_cfg)
+        out[scn_name] = row
+    return out
 
 
 def run_paper_eval(seed: int = 0, cfg: Optional[SimConfig] = None,

@@ -31,12 +31,28 @@ import numpy as np
 
 
 class SchedState(NamedTuple):
-    """Server statistic table (jnp arrays, one row per OSS)."""
+    """Server statistic table (jnp arrays, one row per OSS).
+
+    The temporal extension (DESIGN.md §Temporal-model) adds per-server
+    service *rates* and virtual completion-time clocks so the jitted
+    engine can drain queues between time windows and feed completion
+    observations back into ``ewma_lat`` (making slow — not merely loaded
+    — servers visible to the ECT policy in the JAX path).  With
+    ``rates == 1`` and ``advance_time`` never called, the state degrades
+    exactly to the paper's static-load model.
+    """
 
     loads: jax.Array        # (M,) expected outstanding bytes (MB) per server
     probs: jax.Array        # (M,) selection probability, sums to 1
     n_assigned: jax.Array   # (M,) int32 — requests scheduled per server
     ewma_lat: jax.Array     # (M,) observed MB/s EWMA (ECT extension; 0 = unseen)
+    rates: jax.Array        # (M,) current true service rate, MB per virtual s
+    vclock: jax.Array       # ()  virtual time since stream start, seconds
+    free_at: jax.Array      # (M,) virtual completion-time clock: when each
+    #                          server's outstanding queue drains (vclock
+    #                          units).  Derived state for introspection /
+    #                          metrics: refreshed ONLY by advance_time (it
+    #                          is stale between drains); no policy reads it.
 
     @property
     def n_servers(self) -> int:
@@ -53,16 +69,24 @@ class LogConfig:
     renorm: bool = True        # re-project probs onto the simplex per window
 
 
-def init_state(cfg: LogConfig, init_loads: Optional[jax.Array] = None) -> SchedState:
-    """Fresh log: round-robin prior p_i = 1/M (paper §3.3.2)."""
+def init_state(cfg: LogConfig, init_loads: Optional[jax.Array] = None,
+               rates: Optional[jax.Array] = None) -> SchedState:
+    """Fresh log: round-robin prior p_i = 1/M (paper §3.3.2).
+
+    ``rates`` defaults to 1 MB/s everywhere — the static-load degenerate
+    model where "seconds" and "MB" coincide."""
     m = cfg.n_servers
     loads = jnp.zeros((m,), jnp.float32) if init_loads is None else init_loads.astype(jnp.float32)
     probs = jnp.full((m,), 1.0 / m, jnp.float32)
+    rates = jnp.ones((m,), jnp.float32) if rates is None else rates.astype(jnp.float32)
     return SchedState(
         loads=loads,
         probs=probs,
         n_assigned=jnp.zeros((m,), jnp.int32),
         ewma_lat=jnp.zeros((m,), jnp.float32),
+        rates=rates,
+        vclock=jnp.zeros((), jnp.float32),
+        free_at=jnp.zeros((m,), jnp.float32),
     )
 
 
@@ -95,6 +119,31 @@ def observe_completion(state: SchedState, server: jax.Array, mb_per_s: jax.Array
     return state._replace(ewma_lat=state.ewma_lat.at[server].set(new))
 
 
+def advance_time(state: SchedState, dt: jax.Array) -> SchedState:
+    """Temporal model: advance the virtual clock by ``dt`` seconds.
+
+    Each server drains its outstanding queue at its *current* service rate
+    (piecewise-constant between :class:`~repro.core.engine.ClusterTrace`
+    events), clipped at empty; the per-server completion-time clock
+    ``free_at`` is re-derived from the residual queue.  ``dt == 0`` is the
+    exact identity on non-negative loads, which is what makes the
+    degenerate (static) trace reproduce the paper's original model
+    bit-for-bit.  jit-compatible; used inside the engine's window scan.
+    """
+    rates = jnp.maximum(state.rates, 1e-6)
+    loads = jnp.maximum(state.loads - rates * dt, 0.0)
+    vclock = state.vclock + dt
+    free_at = vclock + loads / rates
+    return state._replace(loads=loads, vclock=vclock, free_at=free_at)
+
+
+def estimated_latency(state: SchedState, server: jax.Array) -> jax.Array:
+    """Seconds until a request just queued on ``server`` completes: the
+    whole outstanding queue (which includes that request, Eq. (1) already
+    applied) divided by the server's current service rate."""
+    return state.loads[server] / jnp.maximum(state.rates[server], 1e-6)
+
+
 def renormalize(state: SchedState) -> SchedState:
     """Re-project probs onto the simplex (guards float drift; analytic sum
     is already 1 — see tests/test_statlog.py property tests)."""
@@ -122,6 +171,9 @@ class HostStatLog:
         self.probs = np.full(m, 1.0 / m, np.float64)
         self.n_assigned = np.zeros(m, np.int64)
         self.ewma_lat = np.zeros(m, np.float64)
+        self.rates = np.ones(m, np.float64)   # MB per virtual second
+        self.vclock = 0.0
+        self.free_at = np.zeros(m, np.float64)
         # I/O request table (Fig. 8, left): (object_id, offset, length) rows.
         self.request_log: list[tuple[int, int, float]] = []
 
@@ -151,6 +203,20 @@ class HostStatLog:
         """Bytes drained from a server's outstanding queue (write finished)."""
         self.loads[server] = max(0.0, self.loads[server] - length_mb)
 
+    def set_rates(self, rates: np.ndarray) -> None:
+        self.rates = np.asarray(rates, np.float64).copy()
+
+    def advance_time(self, dt: float) -> None:
+        """Numpy twin of :func:`advance_time`: drain queues at the current
+        per-server rates and advance the virtual clock."""
+        rates = np.maximum(self.rates, 1e-6)
+        self.loads = np.maximum(self.loads - rates * dt, 0.0)
+        self.vclock += dt
+        self.free_at = self.vclock + self.loads / rates
+
+    def estimated_latency(self, server: int) -> float:
+        return float(self.loads[server] / max(self.rates[server], 1e-6))
+
     def renormalize(self) -> None:
         p = np.clip(self.probs, 0.0, None)
         self.probs = p / p.sum()
@@ -170,4 +236,7 @@ class HostStatLog:
             probs=jnp.asarray(self.probs, jnp.float32),
             n_assigned=jnp.asarray(self.n_assigned, jnp.int32),
             ewma_lat=jnp.asarray(self.ewma_lat, jnp.float32),
+            rates=jnp.asarray(self.rates, jnp.float32),
+            vclock=jnp.asarray(self.vclock, jnp.float32),
+            free_at=jnp.asarray(self.free_at, jnp.float32),
         )

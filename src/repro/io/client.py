@@ -28,6 +28,8 @@ import threading
 from concurrent.futures import Future, ThreadPoolExecutor
 from typing import Dict, List, Optional, Sequence, Union
 
+import numpy as np
+
 from repro.core.policies import HostScheduler, PolicyConfig
 from repro.core.statlog import HostStatLog, LogConfig
 from repro.io import striping
@@ -255,7 +257,6 @@ class IOClient:
 
     # ----------------------------------------------------------------- stats
     def stats(self) -> Dict[str, float]:
-        import numpy as np
         if not self.records:
             return {"writes": 0}
         mbs = np.array([r.mb for r in self.records])
@@ -265,6 +266,8 @@ class IOClient:
             "total_mb": float(mbs.sum()),
             "redirect_rate": float(np.mean([r.redirected for r in self.records])),
             "mean_write_mb_s": float((mbs / secs).mean()),
+            "p50_write_s": float(np.percentile(secs, 50)),
+            "p99_write_s": float(np.percentile(secs, 99)),
             "probe_messages": float(self.probe_messages),
             "retries": float(sum(r.retries for r in self.records)),
             "failed_writes": float(self.failed_writes),

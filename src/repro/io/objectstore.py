@@ -110,7 +110,7 @@ class SimulatedCluster:
     """
 
     def __init__(self, n_servers: int, base_rate_mb_s: float = 200.0,
-                 rate_jitter: float = 0.0, seed: int = 0):
+                 rate_jitter: float = 0.0, seed: int = 0, trace=None):
         import numpy as np
         rng = np.random.default_rng(seed)
         self.n_servers = n_servers
@@ -126,15 +126,62 @@ class SimulatedCluster:
         self._locations: Dict[int, int] = {}      # object -> server actually holding it
         self._sizes: Dict[int, float] = {}        # object -> MB
         self._phase_finish = 0.0
+        self._phase_touched: set = set()          # servers serving this phase
         self.migrated_objects = 0
+        # Optional rate-event schedule: the SAME ClusterTrace the jitted
+        # engine consumes (repro.core.engine.ClusterTrace, or anything with
+        # .times (E,) / .rates (E, M)), so host-path and JAX-path results
+        # are comparable on identical scenarios.  Events apply as the
+        # clock passes them (advance_time / barrier).
+        self._trace_times = self._trace_rates = None
+        self._next_event = 0
+        if trace is not None:
+            self._trace_times = np.asarray(trace.times, np.float64)
+            self._trace_rates = np.asarray(trace.rates, np.float64)
+            if self._trace_rates.shape != (len(self._trace_times), n_servers):
+                raise ValueError("trace.rates must be (n_events, n_servers)")
+            self._apply_trace_events(0.0)
 
     # -- straggler / failure injection --------------------------------------
     def set_rate(self, server: int, rate_mb_s: float) -> None:
-        self.servers[server].rate_mb_s = max(rate_mb_s, 1e-3)
+        """Change a server's service rate, preserving its queued WORK:
+        bytes still pending keep their volume, their drain time rescales."""
+        s = self.servers[server]
+        remaining_mb = max(s.free_at - self.clock, 0.0) * s.rate_mb_s
+        s.rate_mb_s = max(rate_mb_s, 1e-3)
+        s.free_at = self.clock + remaining_mb / s.rate_mb_s
+        if server in self._phase_touched:
+            # re-derive: a slowdown extends the phase, a recovery SHORTENS
+            # it (the raise-only update would leave a stale-high finish)
+            self._phase_finish = self._projected_finish()
+
+    def _apply_trace_events(self, up_to: float) -> None:
+        """Apply all trace rate events with time <= ``up_to`` (in order,
+        advancing the clock to each event so queues rescale correctly)."""
+        if self._trace_times is None:
+            return
+        while (self._next_event < len(self._trace_times)
+               and self._trace_times[self._next_event] <= up_to):
+            ev_t = float(self._trace_times[self._next_event])
+            self.clock = max(self.clock, ev_t)
+            for srv, rate in enumerate(self._trace_rates[self._next_event]):
+                self.set_rate(srv, float(rate))
+            self._next_event += 1
+
+    def advance_time(self, dt: float) -> float:
+        """Temporal model: move the virtual clock forward ``dt`` seconds
+        (queues drain implicitly — ``free_at`` is absolute), applying any
+        trace rate events passed on the way.  Returns the new clock."""
+        target = self.clock + max(dt, 0.0)
+        self._apply_trace_events(target)
+        self.clock = max(self.clock, target)
+        self._phase_finish = max(self._phase_finish, self.clock)
+        return self.clock
 
     def make_straggler(self, server: int, slow_factor: float = 5.0) -> None:
-        """Slow-rate straggler: service rate divided by ``slow_factor``."""
-        self.servers[server].rate_mb_s /= slow_factor
+        """Slow-rate straggler: service rate divided by ``slow_factor``
+        (queue-preserving: already-queued bytes rescale like set_rate)."""
+        self.set_rate(server, self.servers[server].rate_mb_s / slow_factor)
 
     def add_external_load(self, server: int, mb: float) -> None:
         """Busy straggler: queue ``mb`` of foreign bytes on the server.
@@ -179,6 +226,7 @@ class SimulatedCluster:
         s.total_written_mb += mb
         s.n_requests += 1
         self._phase_finish = max(self._phase_finish, finish)
+        self._phase_touched.add(server)
         home = self.default_home(object_id)
         prev = self._locations.get(object_id)
         self._locations[object_id] = server
@@ -201,18 +249,41 @@ class SimulatedCluster:
         s.free_at = finish
         s.n_requests += 1
         self._phase_finish = max(self._phase_finish, finish)
+        self._phase_touched.add(server)
         return mb, server, WriteResult(server=server, mb=mb,
                                        issued_at=self.clock, finished_at=finish)
 
+    def _projected_finish(self) -> float:
+        """Latest completion among servers serving this phase's requests."""
+        touched = [self.servers[i].free_at for i in self._phase_touched]
+        return max(max(touched), self.clock) if touched else self.clock
+
     def barrier(self) -> float:
         """Synchronous I/O-phase end: advance the clock to the slowest
-        server's finish (the paper's Fig. 1 semantics). Returns phase time."""
-        phase = max(self._phase_finish - self.clock, 0.0)
+        server's finish (the paper's Fig. 1 semantics). Returns phase time.
+
+        With a trace, rate events firing BEFORE the projected finish are
+        stepped through in order (queues rescale at each event), so a
+        mid-phase slowdown extends the phase exactly as the jitted engine
+        models it — not just the next phase's rates."""
+        t0 = self.clock
+        if self._trace_times is not None:
+            while self._next_event < len(self._trace_times):
+                ev_t = float(self._trace_times[self._next_event])
+                if ev_t > self._projected_finish():
+                    break
+                self.clock = max(self.clock, ev_t)
+                for srv, rate in enumerate(self._trace_rates[self._next_event]):
+                    self.set_rate(srv, float(rate))
+                self._next_event += 1
+            self._phase_finish = self._projected_finish()
+        phase = max(self._phase_finish - t0, 0.0)
         self.clock = max(self.clock, self._phase_finish)
         for s in self.servers:
             if s.free_at <= self.clock:
                 s.pending_mb = 0.0
         self._phase_finish = self.clock
+        self._phase_touched.clear()
         return phase
 
     # -- metadata maintainer (§3.1) -------------------------------------------
@@ -440,17 +511,19 @@ class MaintainerThread(threading.Thread):
         self.store = store
         self.interval_s = interval_s
         self.max_objects = max_objects
-        self._stop = threading.Event()
+        # NB: must not be named _stop — threading.Thread.join() calls the
+        # private Thread._stop() internally on CPython >= 3.10.
+        self._stop_evt = threading.Event()
         self.total_moved = 0
 
     def run(self) -> None:
-        while not self._stop.is_set():
+        while not self._stop_evt.is_set():
             try:
                 self.total_moved += self.store.maintainer_tick(self.max_objects)
             except Exception:  # pragma: no cover - never kill the daemon
                 pass
-            self._stop.wait(self.interval_s)
+            self._stop_evt.wait(self.interval_s)
 
     def stop(self) -> None:
-        self._stop.set()
+        self._stop_evt.set()
         self.join(timeout=5.0)

@@ -25,9 +25,8 @@ MULTI_POD = (2, 16, 16)
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes,
-        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    from repro.compat import make_mesh
+    return make_mesh(shape, axes)
 
 
 def n_chips(multi_pod: bool = False) -> int:

@@ -40,8 +40,8 @@ def build_mesh(spec: str):
     dims = [int(x) for x in spec.split("x")]
     names = ("data", "model")[:len(dims)] if len(dims) <= 2 else \
         ("pod", "data", "model")
-    return jax.make_mesh(tuple(dims), names,
-                         axis_types=(jax.sharding.AxisType.Auto,) * len(dims))
+    from repro.compat import make_mesh
+    return make_mesh(tuple(dims), names)
 
 
 def make_checkpointer(args, n_servers: int = 8) -> Checkpointer:

@@ -29,6 +29,8 @@ import jax
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro.compat import simple_keystr
+
 
 @dataclasses.dataclass(frozen=True)
 class MeshRules:
@@ -177,7 +179,7 @@ def param_specs(params, rules: MeshRules, stacked_prefixes=("groups",
     flat, treedef = jtu.tree_flatten_with_path(params)
     specs = []
     for kp, leaf in flat:
-        path = jtu.keystr(kp, simple=True, separator="/")
+        path = simple_keystr(kp)
         stacked = any(path.startswith(pfx + "/") for pfx in stacked_prefixes)
         shape = tuple(leaf.shape)
         if stacked:

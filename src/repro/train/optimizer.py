@@ -13,6 +13,8 @@ from typing import Any, Dict, NamedTuple, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.compat import simple_keystr
+
 
 @dataclasses.dataclass(frozen=True)
 class OptConfig:
@@ -85,7 +87,7 @@ def update(cfg: OptConfig, grads, state: OptState, params
     flat_v = jtu.tree_leaves(state.v)
     new_p, new_m, new_v = [], [], []
     for (kp, p), g, m, v in zip(flat_p, flat_g, flat_m, flat_v):
-        path = jtu.keystr(kp, simple=True, separator="/")
+        path = simple_keystr(kp)
         g32 = g.astype(jnp.float32)
         m = cfg.b1 * m + (1 - cfg.b1) * g32
         v = cfg.b2 * v + (1 - cfg.b2) * g32 * g32

@@ -145,8 +145,8 @@ def test_elastic_restore_onto_new_shardings():
         tree = {"w": jnp.arange(64.0).reshape(8, 8)}
         ck.save(2, tree)
         from jax.sharding import NamedSharding, PartitionSpec as P
-        mesh = jax.make_mesh((1,), ("data",),
-                             axis_types=(jax.sharding.AxisType.Auto,))
+        from repro.compat import make_mesh
+        mesh = make_mesh((1,), ("data",))
         sh = lambda path: NamedSharding(mesh, P("data"))
         back = ck.restore(step=2, target=tree, shardings=sh)
         np.testing.assert_array_equal(np.asarray(back["w"]),

@@ -87,7 +87,8 @@ def f(gs):
     ef = C.init_ef({"g": gs})
     out, _ = C.compressed_psum({"g": gs}, ef, "data")
     return out["g"]
-fm = jax.shard_map(f, mesh=mesh, in_specs=P("data", None),
+from repro.compat import shard_map
+fm = shard_map(f, mesh=mesh, in_specs=P("data", None),
                    out_specs=P("data", None))
 mean_c = np.asarray(fm(g))
 mean_ref = np.broadcast_to(np.asarray(g).reshape(4, 2, 64).mean(0,

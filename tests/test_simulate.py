@@ -95,3 +95,118 @@ def test_fig18_curve_shape():
     xs, ys = analysis.fig18_curve(res.server_loads, res.n_assigned, 20)
     assert xs.shape == (20,) and ys.shape == (20,)
     assert ys.max() > 0
+
+
+# ---------------------------------------------------------------------------
+# Temporal cluster model (DESIGN.md §Temporal-model)
+# ---------------------------------------------------------------------------
+
+import dataclasses
+
+from repro.core.simulate import ScenarioConfig
+
+TCFG = simulate.SimConfig(n_servers=24, n_requests=240, n_trials=100,
+                          window_size=60)
+SEED_FIELDS = ("server_loads", "n_assigned", "chosen", "probe_msgs",
+               "straggler_hits", "redirected", "init_loads",
+               "straggler_mask")
+
+
+def test_degenerate_trace_is_bit_for_bit_static():
+    """The all-rates-equal, no-events, dt=0 trace must reproduce the
+    static-load model's TrialResult fields bit-for-bit on the same seed."""
+    cfg_static = dataclasses.replace(TCFG, n_trials=8,
+                                     scenario=ScenarioConfig(name="static"))
+    cfg_none = dataclasses.replace(TCFG, n_trials=8)
+    log = simulate.default_log_cfg(cfg_none)
+    # ect included: the static scenario keeps completion feedback OFF so
+    # even the ewma-reading policy stays identical to the no-trace path
+    for policy in ("rr", "trh", "mlml", "ect"):
+        pol = PolicyConfig(name=policy, threshold=5.0)
+        a = simulate.run_trials(KEY, cfg_none, pol, log)
+        b = simulate.run_trials(KEY, cfg_static, pol, log)
+        for field in SEED_FIELDS:
+            av = np.asarray(getattr(a, field))
+            bv = np.asarray(getattr(b, field))
+            assert (av == bv).all(), (policy, field)
+
+
+def test_transient_log_assisted_beats_rr_on_tail_latency():
+    """Under a transient straggler trace, the rate-aware ECT policy (and
+    TRH) beat round-robin on p99 latency AND makespan."""
+    cfg = dataclasses.replace(TCFG, n_trials=20,
+                              scenario=ScenarioConfig(name="transient"))
+    log = simulate.default_log_cfg(cfg)
+    stats = {}
+    for policy, thr in (("rr", 0.0), ("trh", 5.0), ("ect", 0.05)):
+        res = simulate.run_trials(KEY, cfg,
+                                  PolicyConfig(name=policy, threshold=thr),
+                                  log)
+        stats[policy] = (analysis.latency_stats(res.latencies)["p99"],
+                         analysis.makespan(res))
+    for policy in ("trh", "ect"):
+        assert stats[policy][0] < stats["rr"][0], (policy, stats)
+        assert stats[policy][1] < stats["rr"][1], (policy, stats)
+
+
+def test_full_scenario_sweep_jitted():
+    """Acceptance criterion: 100 trials x 5 policies x 4 temporal
+    scenarios runs jitted end-to-end on CPU; every policy/scenario cell
+    yields finite latencies and a positive makespan."""
+    out = simulate.run_scenario_eval(
+        seed=0, cfg=TCFG,
+        scenario_names=("permanent_slow", "transient", "flapping",
+                        "correlated_rack"),
+        policy_names=("rr", "mlml", "trh", "nltr", "ect"))
+    assert len(out) == 4
+    for scn, row in out.items():
+        assert len(row) == 5
+        for pol, res in row.items():
+            lat = np.asarray(res.latencies)
+            assert lat.shape == (TCFG.n_trials, TCFG.n_requests)
+            assert np.isfinite(lat).all() and (lat >= 0).all(), (scn, pol)
+            assert float(np.asarray(res.phase_time).min()) > 0.0, (scn, pol)
+            wl = np.asarray(res.window_loads)
+            assert wl.shape == (TCFG.n_trials, TCFG.n_windows,
+                                TCFG.n_servers)
+            # trace stragglers are part of the mask
+            assert bool(np.asarray(res.straggler_mask).any()), (scn, pol)
+
+
+def test_window_loads_show_straggler_queue_growth():
+    """Under permanent_slow + RR, the slowed servers' residual queues grow
+    over windows while healthy servers stay drained."""
+    cfg = dataclasses.replace(
+        TCFG, n_trials=10,
+        scenario=ScenarioConfig(name="permanent_slow"))
+    log = simulate.default_log_cfg(cfg)
+    res = simulate.run_trials(KEY, cfg, PolicyConfig(name="rr"), log)
+    wl = np.asarray(res.window_loads)          # (T, W, M)
+    mask = np.asarray(res.straggler_mask)      # (T, M)
+    strag_last = np.array([wl[t, -1, mask[t]].mean() for t in range(10)])
+    healthy_last = np.array([wl[t, -1, ~mask[t]].mean() for t in range(10)])
+    assert strag_last.mean() > 2 * healthy_last.mean()
+    # straggler residual grows monotonically window over window
+    strag_per_win = np.array([wl[:, w][mask].mean()
+                              for w in range(wl.shape[1])])
+    assert (np.diff(strag_per_win) > 0).all(), strag_per_win
+    hits = analysis.straggler_hits_over_time(res.chosen, res.straggler_mask,
+                                             cfg.window_size)
+    assert hits.shape == (cfg.n_windows,)
+
+
+def test_latency_analysis_helpers():
+    cfg = dataclasses.replace(TCFG, n_trials=6,
+                              scenario=ScenarioConfig(name="transient"))
+    log = simulate.default_log_cfg(cfg)
+    results = {p: simulate.run_trials(KEY, cfg, PolicyConfig(name=p), log)
+               for p in ("rr", "trh")}
+    ls = analysis.latency_stats(results["rr"].latencies)
+    assert ls["p50"] <= ls["p95"] <= ls["p99"] <= ls["max"]
+    xs, ys = analysis.latency_cdf(results["rr"].latencies, 32)
+    assert xs.shape == (32,) and ys.shape == (32,)
+    assert 0.0 <= ys[0] and abs(ys[-1] - 1.0) < 1e-9
+    assert (np.diff(ys) >= 0).all()
+    slow = analysis.slowdown_vs_baseline(results, "rr")
+    assert abs(slow["rr"]["p99_vs_rr"] - 1.0) < 1e-9
+    assert abs(slow["rr"]["makespan_vs_rr"] - 1.0) < 1e-9
