@@ -15,7 +15,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.kernels.flash_attention import attention_ref, flash_attention
-from repro.kernels.sched_select import sched_select, sched_select_ref
+from repro.kernels.sched_select import (sched_select, sched_select_ref,
+                                        sched_stream, sched_stream_ref)
 
 
 def _time(fn, *args, reps=3, **kw):
@@ -79,9 +80,45 @@ def sched_cases():
         assert match
 
 
+def sched_stream_cases():
+    """Temporal stream kernel: whole windowed trace (drain + completion
+    feedback) as one pallas_call, vs the scan oracle."""
+    print("\n== sched_stream kernel (temporal, packed (4,M) log in VMEM) ==")
+    print(f"{'case':>34s} {'match':>6s} {'us/call':>9s} {'ns/req':>8s}")
+    for (c, n_win, win, m, policy) in [(4, 8, 60, 100, "ect"),
+                                       (4, 8, 60, 100, "trh"),
+                                       (8, 4, 128, 256, "ect")]:
+        n = n_win * win
+        keys = jax.random.split(jax.random.key(2), 4)
+        objs = jax.random.randint(keys[0], (c, n), 0, 10000, jnp.int32)
+        lens = jax.random.uniform(keys[1], (c, n), minval=1.0, maxval=32.0)
+        valid = jnp.ones((c, n), bool)
+        rates = jax.random.uniform(keys[2], (c, n_win, m), minval=50.0,
+                                   maxval=400.0)
+        tables = jnp.stack([jnp.zeros((c, m)), jnp.full((c, m), 1.0 / m),
+                            jnp.zeros((c, m)), jnp.ones((c, m))], axis=1)
+        seeds = jnp.arange(c, dtype=jnp.uint32) * 31 + 5
+        kw = dict(n_servers=m, window_size=win, threshold=1.0, lam=64.0,
+                  window_dt=0.05, policy=policy, observe=True, renorm=True)
+        ch, lat, tab, wl = sched_stream(objs, lens, valid, tables, seeds,
+                                        rates, **kw)
+        rch, _, rtab, _ = sched_stream_ref(objs[0], lens[0], valid[0],
+                                           tables[0], seeds[0], rates[0],
+                                           **kw)
+        match = bool((np.asarray(ch[0]) == np.asarray(rch)).all()
+                     and (np.asarray(tab[0]) == np.asarray(rtab)).all())
+        us = _time(sched_stream, objs, lens, valid, tables, seeds, rates,
+                   **kw) * 1e6
+        tag = f"C{c} W{n_win}x{win} M{m} {policy}"
+        print(f"{tag:>34s} {'yes' if match else 'NO':>6s} {us:9.0f} "
+              f"{us * 1000 / (c * n):8.1f}")
+        assert match
+
+
 def run_all():
     flash_cases()
     sched_cases()
+    sched_stream_cases()
 
 
 if __name__ == "__main__":

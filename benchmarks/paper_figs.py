@@ -45,30 +45,67 @@ def _policies(threshold=5.0):
 
 
 def figs_12_17(cfg: SimConfig = QUICK, plot: bool = True) -> Dict[str, dict]:
-    """Load distribution per policy (Figs. 12-17)."""
+    """Headline summary per policy (Figs. 12-17 + latency promotion).
+
+    The paper ranks by load balance; the quantity balance ultimately
+    serves is request latency — so the summary LEADS with p99 latency
+    and makespan (ROADMAP "latency metrics everywhere"), with the
+    balance statistics as secondary columns.
+    """
     log = simulate.default_log_cfg(cfg)
     key = jax.random.key(0)
     out = {}
-    print("\n== Figs 12-17: per-OSS load distribution "
+    print("\n== Figs 12-17 headline: latency first, balance second "
           f"(M={cfg.n_servers}, R={cfg.n_requests}, T={cfg.n_trials}) ==")
-    print(f"{'policy':>10s} {'mean':>9s} {'std':>9s} {'cv':>7s} "
-          f"{'max':>10s} {'spread':>10s} {'jain':>6s} {'time_s':>7s}")
+    print(f"{'policy':>10s} {'p99_lat_s':>10s} {'makespan_s':>10s} "
+          f"{'p50_lat_s':>10s} | {'cv':>7s} {'max':>10s} {'jain':>6s} "
+          f"{'time_s':>7s}")
     for name, pol in _policies().items():
         t0 = time.time()
         res = simulate.run_trials(key, cfg, pol, log)
         jax.block_until_ready(res.server_loads)
         dt = time.time() - t0
         st = analysis.load_balance_stats(res.server_loads)
-        out[name] = {"stats": st,
+        ls = analysis.latency_stats(res.latencies)
+        mk = analysis.makespan(res)
+        out[name] = {"stats": st, "latency": ls, "makespan": mk,
                      "loads": analysis.mean_server_loads(res.server_loads)}
-        print(f"{name:>10s} {st['mean']:9.1f} {st['std']:9.1f} "
-              f"{st['cv']:7.3f} {st['max']:10.1f} {st['spread']:10.1f} "
-              f"{st['jain']:6.3f} {dt:7.2f}")
+        print(f"{name:>10s} {ls['p99']:10.2f} {mk:10.2f} {ls['p50']:10.2f} "
+              f"| {st['cv']:7.3f} {st['max']:10.1f} {st['jain']:6.3f} "
+              f"{dt:7.2f}")
     if plot:
         for name in ("rr", "mlml", "trh"):
             print(analysis.ascii_plot(np.sort(out[name]["loads"]),
                                       label=f"Fig. sorted loads — {name}"))
     return out
+
+
+def scenario_sweep_full(cfg: SimConfig = FULL) -> Dict[str, dict]:
+    """ROADMAP item: the full-scale temporal scenario sweep — 100 OSS x
+    2,000 requests x 100 trials per (scenario, policy) cell, all jitted.
+    Ranks every sweep policy by p99 latency / makespan per scenario."""
+    print(f"\n== FULL-scale scenario sweep (M={cfg.n_servers}, "
+          f"R={cfg.n_requests}, T={cfg.n_trials}) ==")
+    out = simulate.run_scenario_eval(seed=0, cfg=cfg)
+    print(f"{'scenario':>16s} {'policy':>8s} {'p99_lat_s':>10s} "
+          f"{'makespan_s':>10s} {'strag_hit%':>10s}")
+    table: Dict[str, dict] = {}
+    for scn, row in out.items():
+        ranked = {}
+        for pol, res in row.items():
+            ls = analysis.latency_stats(res.latencies)
+            ranked[pol] = {
+                "p99": ls["p99"],
+                "makespan": analysis.makespan(res),
+                "hit": analysis.straggler_summary(res)["hit_fraction"],
+            }
+            print(f"{scn:>16s} {pol:>8s} {ranked[pol]['p99']:10.2f} "
+                  f"{ranked[pol]['makespan']:10.2f} "
+                  f"{100 * ranked[pol]['hit']:10.2f}")
+        best = min(ranked, key=lambda p: ranked[p]["p99"])
+        print(f"{'':>16s} best p99: {best}")
+        table[scn] = ranked
+    return table
 
 
 def fig_18(cfg: SimConfig = None, plot: bool = True) -> Dict[str, dict]:
@@ -221,6 +258,11 @@ def run_all(full: bool = False):
     nltr_sensitivity(cfg)
     completion_time()
     fig_temporal()
+    if full:
+        # the paper-scale temporal sweep rides only on --full (it is the
+        # single most expensive section: 5 scenarios x 5 policies x 100
+        # jitted trials at 100 OSS / 2,000 requests)
+        scenario_sweep_full()
 
 
 if __name__ == "__main__":

@@ -1,11 +1,13 @@
 """Benchmark driver: one section per paper table/figure + kernels + roofline.
 
-    PYTHONPATH=src python -m benchmarks.run [--full]
+    PYTHONPATH=src python -m benchmarks.run [--full] [--trajectory]
 
 ``--full`` runs the paper's exact scale (100 OSS / 2,000 requests / 100
-trials); the default is a faster configuration with identical structure.
-The roofline section formats whatever ``dryrun_results.json`` the dry-run
-has produced so far.
+trials) and adds the full-scale temporal scenario sweep; the default is a
+faster configuration with identical structure.  ``--trajectory`` skips
+the benchmarks and renders the BENCH_sched.json history instead (stdout
+delta table + figure).  The roofline section formats whatever
+``dryrun_results.json`` the dry-run has produced so far.
 """
 
 from __future__ import annotations
@@ -15,6 +17,10 @@ import time
 
 
 def main() -> None:
+    if "--trajectory" in sys.argv:
+        from benchmarks import sched_perf
+        sched_perf.trajectory("BENCH_sched.json")
+        return
     full = "--full" in sys.argv
     t0 = time.time()
     print("=" * 72)

@@ -110,6 +110,67 @@ def _transient_results(n_trials: int) -> dict:
                            n_trials)["transient"]
 
 
+@functools.lru_cache(maxsize=None)   # run_all + emit_bench_point share it
+def kernel_vs_engine_throughput(n_servers: int = 100,
+                                n_requests: int = 2000,
+                                window_size: int = 100,
+                                reps: int = 3) -> Dict[str, float]:
+    """Scheduling throughput (requests scheduled/s): the Pallas temporal
+    kernel (whole stream = ONE pallas_call, packed log tensor in VMEM)
+    vs the lax.scan JAX engine, on the 100-OSS transient scenario.
+
+    On CPU the kernel runs in interpret mode, so the absolute numbers are
+    a lower bound — the structural point is that both backends schedule
+    the SAME trace from the same decision table (bit-exact for ect,
+    asserted here) and the kernel-backend wall time is tracked per run in
+    BENCH_sched.json.
+    """
+    import jax
+    import numpy as np
+    from repro.core import engine, simulate, statlog
+    from repro.core.simulate import ScenarioConfig, SimConfig
+
+    cfg = SimConfig(n_servers=n_servers, n_requests=n_requests, n_trials=1,
+                    window_size=window_size,
+                    scenario=ScenarioConfig(name="transient"))
+    scn = cfg.scenario
+    key = jax.random.key(0)
+    work = simulate.sample_workload(key, cfg)
+    trace = simulate.make_trace(jax.random.fold_in(key, 1), cfg, scn)
+    window_dt = simulate.resolve_window_dt(cfg, scn)
+    log_cfg = simulate.default_log_cfg(cfg)
+    pol = PolicyConfig(name="ect", threshold=0.05)
+    state = statlog.init_state(log_cfg, rates=trace.rates[0])
+
+    out: Dict[str, float] = {"n_servers": n_servers,
+                             "n_requests": n_requests}
+    chosen = {}
+    for backend in ("jax", "kernel"):
+        run = functools.partial(
+            engine.run_stream_jit, state, work, key, policy=pol,
+            log_cfg=log_cfg, window_size=window_size, trace=trace,
+            window_dt=window_dt, backend=backend)
+        res = run()
+        jax.block_until_ready(res.chosen)          # compile + warm
+        t0 = time.time()
+        for _ in range(reps):
+            res = run()
+        jax.block_until_ready(res.chosen)
+        dt = (time.time() - t0) / reps
+        chosen[backend] = np.asarray(res.chosen)
+        out[f"{backend}_s"] = dt
+        out[f"{backend}_req_s"] = n_requests / dt
+    out["bit_exact"] = bool((chosen["jax"] == chosen["kernel"]).all())
+    print(f"\n== kernel vs JAX engine scheduling throughput "
+          f"({n_servers} OSS x {n_requests} reqs, transient trace) ==")
+    print(f"{'backend':>8s} {'wall_s':>8s} {'req/s':>10s}")
+    for b in ("jax", "kernel"):
+        print(f"{b:>8s} {out[f'{b}_s']:8.3f} {out[f'{b}_req_s']:10.0f}")
+    print(f"  decisions bit-exact across backends: {out['bit_exact']}"
+          + ("" if out["bit_exact"] else "  <-- DIVERGED"))
+    return out
+
+
 def scenario_ranking(n_trials: int = 25) -> Dict[str, Dict[str, dict]]:
     """Policy ranking per scenario: p50/p95/p99 latency + makespan +
     straggler-hit fraction (jitted run_trials sweep)."""
@@ -151,9 +212,12 @@ def transient_latency_cdf(n_trials: int = 25) -> None:
 
 
 def emit_bench_point(path: str = "BENCH_sched.json",
-                     n_trials: int = 25) -> dict:
-    """Append one perf-trajectory point: the §Perf C phase time per policy
-    plus the transient-scenario p99 for the log-assisted policies.
+                     n_trials: int = 25,
+                     kernel_scale: int = 100) -> dict:
+    """Append one perf-trajectory point: the §Perf C phase time per policy,
+    the transient-scenario p99 for the log-assisted policies, and the
+    kernel-backend numbers (wall time of scheduling the 100-OSS transient
+    stream through the Pallas backend + req/s for both backends).
     Reuses this process's cached run_all results when available."""
     from repro.core import analysis
     point: Dict[str, object] = {"ts": time.time(), "metric_unit": "seconds"}
@@ -164,6 +228,11 @@ def emit_bench_point(path: str = "BENCH_sched.json",
     for pol, res in _transient_results(n_trials).items():
         point[f"transient_p99_{pol}"] = \
             analysis.latency_stats(res.latencies)["p99"]
+    thr = kernel_vs_engine_throughput(n_servers=kernel_scale)
+    point["kernel_backend_phase_s"] = thr["kernel_s"]
+    point["kernel_req_s"] = thr["kernel_req_s"]
+    point["engine_req_s"] = thr["jax_req_s"]
+    point["kernel_bit_exact"] = thr["bit_exact"]
     history = []
     if os.path.exists(path):
         try:
@@ -180,6 +249,94 @@ def emit_bench_point(path: str = "BENCH_sched.json",
           f"(trh phase {point['phase_s_trh']:.2f}s, "
           f"transient p99 {point['transient_p99_trh']:.2f}s)")
     return point
+
+
+def trajectory(path: str = "BENCH_sched.json",
+               fig_path: str = "BENCH_sched_trajectory.png") -> list:
+    """Perf trajectory across benchmark runs: stdout table of phase-time
+    deltas plus a plotted figure (matplotlib when available, ascii-plot
+    file otherwise).  Each `benchmarks/run.py` invocation appends one
+    point; this renders the history."""
+    from repro.core import analysis
+    if not os.path.exists(path):
+        print(f"[trajectory] {path} not found — run benchmarks first")
+        return []
+    with open(path) as f:
+        history = json.load(f)
+    if not isinstance(history, list):
+        history = [history]
+    if not history:
+        print(f"[trajectory] {path} is empty")
+        return history
+
+    cols = ("phase_s_rr", "phase_s_trh", "phase_s_ect",
+            "transient_p99_trh", "kernel_backend_phase_s")
+    print(f"\n== perf trajectory ({len(history)} runs, {path}) ==")
+    print(f"{'run':>4s} {'when':>16s} " +
+          " ".join(f"{c.replace('phase_s_', 'ph_'):>14s}" for c in cols))
+    prev = None
+    for i, pt in enumerate(history):
+        when = time.strftime("%m-%d %H:%M", time.localtime(pt.get("ts", 0)))
+        cells = []
+        for c in cols:
+            v = pt.get(c)
+            if v is None:
+                cells.append(f"{'—':>14s}")
+            elif prev is not None and isinstance(prev.get(c), (int, float)):
+                d = v - prev[c]
+                cells.append(f"{v:8.2f}{d:+6.2f}")
+            else:
+                cells.append(f"{v:8.2f}{'':>6s}")
+        print(f"{i:>4d} {when:>16s} " + " ".join(cells))
+        prev = pt
+
+    series = {c: [pt.get(c) for pt in history] for c in cols}
+    try:
+        import matplotlib
+        matplotlib.use("Agg")
+        import matplotlib.pyplot as plt
+        fig, ax = plt.subplots(figsize=(8, 4.5))
+        for c in cols:
+            ys = series[c]
+            if any(v is not None for v in ys):
+                ax.plot(range(len(ys)),
+                        [float("nan") if v is None else v for v in ys],
+                        marker="o", label=c)
+        ax.set_xlabel("benchmark run")
+        ax.set_ylabel("seconds")
+        ax.set_title("scheduler perf trajectory (BENCH_sched.json)")
+        ax.legend(fontsize=8)
+        fig.tight_layout()
+        fig.savefig(fig_path, dpi=120)
+        print(f"[trajectory] figure -> {fig_path}")
+    except ImportError:
+        txt_path = fig_path.rsplit(".", 1)[0] + ".txt"
+        with open(txt_path, "w") as f:
+            for c in cols:
+                ys = [v for v in series[c] if v is not None]
+                if len(ys) >= 2:
+                    f.write(analysis.ascii_plot(
+                        np.asarray(ys), label=f"{c} per run") + "\n")
+        print(f"[trajectory] matplotlib unavailable; ascii figure -> "
+              f"{txt_path}")
+    return history
+
+
+def run_smoke() -> None:
+    """CI benchmark smoke: a fast subset proving the host path, the jitted
+    sweep and the kernel backend all still run (sched_perf --smoke)."""
+    print("== sched_perf --smoke ==")
+    t0 = time.time()
+    r = phase_time(policy="rr", n_files=24)
+    e = phase_time(policy="ect", threshold=0.05, n_files=24)
+    print(f"  phase_s rr={r['phase_s']:.2f} ect={e['phase_s']:.2f} "
+          f"(24 files)")
+    assert e["phase_s"] <= r["phase_s"] * 1.05, (e, r)
+    thr = kernel_vs_engine_throughput(n_servers=24, n_requests=480,
+                                      window_size=60, reps=1)
+    assert thr["bit_exact"], "kernel/engine divergence"
+    _scenario_sweep(("transient",), ("rr", "ect"), 4)
+    print(f"[smoke] ok in {time.time() - t0:.1f}s")
 
 
 def run_all() -> None:
@@ -225,8 +382,16 @@ def run_all() -> None:
 
     scenario_ranking()
     transient_latency_cdf()
+    # keyword call matches emit_bench_point's exactly so the lru_cache hits
+    kernel_vs_engine_throughput(n_servers=100)
 
 
 if __name__ == "__main__":
-    run_all()
-    emit_bench_point()
+    import sys
+    if "--smoke" in sys.argv:
+        run_smoke()
+    elif "--trajectory" in sys.argv:
+        trajectory()
+    else:
+        run_all()
+        emit_bench_point()

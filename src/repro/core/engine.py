@@ -39,8 +39,11 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import policies as P
-from repro.core import statlog
+from repro.core import policy_core, statlog
 from repro.core.statlog import LogConfig, SchedState
+
+# Policies the Pallas backend (kernels/sched_select) implements in-VMEM.
+KERNEL_POLICIES = ("ect", "trh")
 
 
 class Workload(NamedTuple):
@@ -88,6 +91,9 @@ class ScheduleResult(NamedTuple):
     #                          (queue ahead + own bytes, at assignment time)
     window_loads: jax.Array  # (W, M) per-window post-drain load snapshots
     #                          (W=1 for run_window)
+    rng: Optional[jax.Array] = None  # final uint32 LCG state (rng="lcg"
+    #                          policies; None for the kernel backend which
+    #                          keeps its LCG in VMEM)
 
 
 def group_by_object_with_map(work: Workload) -> Tuple[Workload, jax.Array]:
@@ -128,7 +134,8 @@ def group_by_object(work: Workload) -> Workload:
 def run_window(state: SchedState, work: Workload, key: jax.Array, *,
                policy: P.PolicyConfig, log_cfg: LogConfig,
                group_steps: bool = True,
-               observe: bool = False) -> ScheduleResult:
+               observe: bool = False,
+               rng0: Optional[jax.Array] = None) -> ScheduleResult:
     """Schedule one time window's requests against the log.
 
     ``chosen``/``redirected`` come back in ORIGINAL request order (grouped
@@ -138,7 +145,12 @@ def run_window(state: SchedState, work: Workload, key: jax.Array, *,
     folds each request's estimated effective MB/s into ``ewma_lat`` right
     after its assignment — the completion-feedback path that lets ECT see
     slow servers.  Off by default so the static model (and the Pallas
-    kernel's minload semantics) stay bit-exact with the paper."""
+    kernel's minload semantics) stay bit-exact with the paper.
+
+    ``rng0`` seeds the kernel-compatible LCG stream (``rng="lcg"``
+    policies); the final state comes back in ``ScheduleResult.rng`` so
+    ``run_stream`` can carry it across windows exactly like the kernel
+    carries its VMEM rng across the whole stream."""
     orig_work = work
     req_to_step = None
     if group_steps:
@@ -146,6 +158,8 @@ def run_window(state: SchedState, work: Workload, key: jax.Array, *,
     r = work.n_requests
     m = state.n_servers
     plan = P.plan_window(policy, state, work.object_ids, work.lengths, work.valid)
+    if rng0 is None:
+        rng0 = jnp.zeros((), jnp.uint32)
 
     # Process in plan order; emit (orig_index, chosen) pairs and unpermute.
     obj = work.object_ids[plan.order]
@@ -153,10 +167,14 @@ def run_window(state: SchedState, work: Workload, key: jax.Array, *,
     val = work.valid[plan.order]
     keys = jax.random.split(key, r)
 
-    def body(st: SchedState, xs):
+    def body(carry, xs):
+        st, rng = carry
         pos, o, ln, v, k = xs
         default = (o % m).astype(jnp.int32)
-        target = P.select_target(policy, plan, st, pos, o, ln, k)
+        # NOTE: the LCG advances on padding rows too — the kernel's
+        # unconditional draw stream, required for bit-exact parity.
+        target, rng = P.select_target_rng(policy, plan, st, pos, o, ln, k,
+                                          rng)
         chosen = P.apply_threshold(policy, st, default, target, ln)
         st2 = statlog.apply_assignment(st, chosen, ln, log_cfg)
         # Estimated completion latency: everything queued ahead of (and
@@ -170,11 +188,11 @@ def run_window(state: SchedState, work: Workload, key: jax.Array, *,
                 st2, chosen, ln / jnp.maximum(lat, 1e-9), log_cfg)
         # padding rows leave the log untouched
         st = jax.tree.map(lambda a, b: jnp.where(v, b, a), st, st2)
-        return st, (chosen, chosen != default, jnp.where(v, lat, 0.0))
+        return (st, rng), (chosen, chosen != default, jnp.where(v, lat, 0.0))
 
     pos = jnp.arange(r, dtype=jnp.int32)
-    state, (chosen_sorted, redir_sorted, lat_sorted) = jax.lax.scan(
-        body, state, (pos, obj, lens, val, keys))
+    (state, rng), (chosen_sorted, redir_sorted, lat_sorted) = jax.lax.scan(
+        body, (state, rng0), (pos, obj, lens, val, keys))
     if log_cfg.renorm:
         state = statlog.renormalize(state)
 
@@ -190,7 +208,33 @@ def run_window(state: SchedState, work: Workload, key: jax.Array, *,
     probes = (jnp.sum(work.valid) * policy.probes_per_request).astype(jnp.int32)
     return ScheduleResult(state=state, chosen=chosen, probe_msgs=probes,
                           redirected=redirected, latencies=latencies,
-                          window_loads=state.loads[None])
+                          window_loads=state.loads[None], rng=rng)
+
+
+def _window_split(work: Workload, window_size: int):
+    """Pad the stream to a multiple of ``window_size`` and reshape to
+    (W, window_size) arrays (padding rows invalid)."""
+    r = work.n_requests
+    n_win = -(-r // window_size)
+    pad = n_win * window_size - r
+
+    def pad_to(a, fill=0):
+        return jnp.concatenate([a, jnp.full((pad,), fill, a.dtype)]) if pad else a
+
+    obj = pad_to(work.object_ids).reshape(n_win, window_size)
+    lens = pad_to(work.lengths).reshape(n_win, window_size)
+    val = pad_to(work.valid, False).reshape(n_win, window_size)
+    return n_win, obj, lens, val
+
+
+def _window_rates(state: SchedState, trace: Optional[ClusterTrace],
+                  n_win: int, window_dt: float) -> jax.Array:
+    """(W, M) service rates in effect at each window open."""
+    if trace is not None:
+        t_open = jnp.arange(n_win, dtype=jnp.float32) * window_dt
+        return jax.vmap(lambda t: rates_at(trace, t))(t_open)
+    # static model: keep whatever rates the state carries
+    return jnp.broadcast_to(state.rates, (n_win, state.n_servers))
 
 
 def run_stream(state: SchedState, work: Workload, key: jax.Array, *,
@@ -198,7 +242,8 @@ def run_stream(state: SchedState, work: Workload, key: jax.Array, *,
                group_steps: bool = True,
                trace: Optional[ClusterTrace] = None,
                window_dt: float = 0.0,
-               observe: Optional[bool] = None) -> ScheduleResult:
+               observe: Optional[bool] = None,
+               backend: str = "jax") -> ScheduleResult:
     """Split the request time series into windows and schedule each (§3.2).
 
     Pads the stream to a multiple of ``window_size``; padding is invalid.
@@ -215,41 +260,46 @@ def run_stream(state: SchedState, work: Workload, key: jax.Array, *,
     bit-identical to the no-trace path — the degenerate static scenario
     does this (the feedback would differ from the never-observing static
     model even with all-equal rates).
+
+    ``backend`` selects the execution substrate: ``"jax"`` (the lax.scan
+    engine, every policy) or ``"kernel"`` (the Pallas temporal kernel —
+    the whole stream as ONE ``pallas_call`` with the packed log tensor in
+    VMEM; policies in ``KERNEL_POLICIES``).  The two backends are
+    bit-exact for ``ect``; for ``trh`` pass ``PolicyConfig(rng="lcg")``
+    so the jax path replays the kernel's LCG stream.
     """
     if observe is None:
         observe = trace is not None
+    if backend == "kernel":
+        return _run_stream_kernel(state, work, key, policy=policy,
+                                  log_cfg=log_cfg, window_size=window_size,
+                                  group_steps=group_steps, trace=trace,
+                                  window_dt=window_dt, observe=observe)
+    if backend != "jax":
+        raise ValueError(f"backend must be 'jax' or 'kernel', got {backend!r}")
     r = work.n_requests
-    n_win = -(-r // window_size)
-    pad = n_win * window_size - r
-
-    def pad_to(a, fill=0):
-        return jnp.concatenate([a, jnp.full((pad,), fill, a.dtype)]) if pad else a
-
-    obj = pad_to(work.object_ids).reshape(n_win, window_size)
-    lens = pad_to(work.lengths).reshape(n_win, window_size)
-    val = pad_to(work.valid, False).reshape(n_win, window_size)
+    n_win, obj, lens, val = _window_split(work, window_size)
     keys = jax.random.split(key, n_win)
+    win_rates = _window_rates(state, trace, n_win, window_dt)
+    # Kernel-compatible LCG seed: both backends derive it identically
+    # from the stream key, then carry ONE rng across all windows.
+    rng0 = jax.random.bits(key, dtype=jnp.uint32)
 
-    if trace is not None:
-        t_open = jnp.arange(n_win, dtype=jnp.float32) * window_dt
-        win_rates = jax.vmap(lambda t: rates_at(trace, t))(t_open)
-    else:  # static model: keep whatever rates the state carries
-        win_rates = jnp.broadcast_to(state.rates, (n_win, state.n_servers))
-
-    def body(st, xs):
+    def body(carry, xs):
+        st, rng = carry
         o, ln, v, k, rates = xs
         st = st._replace(rates=rates)
         res = run_window(st, Workload(o, ln, v), k, policy=policy,
                          log_cfg=log_cfg, group_steps=group_steps,
-                         observe=observe)
+                         observe=observe, rng0=rng)
         st = res.state
         if window_dt:
             st = statlog.advance_time(st, jnp.float32(window_dt))
-        return st, (res.chosen, res.probe_msgs, res.redirected,
-                    res.latencies, st.loads)
+        return (st, res.rng), (res.chosen, res.probe_msgs, res.redirected,
+                               res.latencies, st.loads)
 
-    state, (chosen, probes, redirected, latencies, window_loads) = \
-        jax.lax.scan(body, state, (obj, lens, val, keys, win_rates))
+    (state, rng), (chosen, probes, redirected, latencies, window_loads) = \
+        jax.lax.scan(body, (state, rng0), (obj, lens, val, keys, win_rates))
     return ScheduleResult(
         state=state,
         chosen=chosen.reshape(-1)[:r],
@@ -257,15 +307,92 @@ def run_stream(state: SchedState, work: Workload, key: jax.Array, *,
         redirected=redirected.reshape(-1)[:r],
         latencies=latencies.reshape(-1)[:r],
         window_loads=window_loads,
+        rng=rng,
+    )
+
+
+def _run_stream_kernel(state: SchedState, work: Workload, key: jax.Array, *,
+                       policy: P.PolicyConfig, log_cfg: LogConfig,
+                       window_size: int, group_steps: bool,
+                       trace: Optional[ClusterTrace], window_dt: float,
+                       observe: bool) -> ScheduleResult:
+    """Pallas-backend stream dispatch: grouping / window planning stays on
+    the JAX side (same `group_by_object_with_map` as the jax backend, so
+    both backends see identical per-window inputs); the per-request
+    decision loop — selection, threshold guard, Eq. (1)-(3), completion
+    feedback, per-window renorm + drain — runs as one `pallas_call` with
+    the packed (4, M) log tensor pinned in VMEM."""
+    from repro.kernels.sched_select import ops as kops
+
+    if policy.name not in KERNEL_POLICIES:
+        raise ValueError(
+            f"backend='kernel' supports {KERNEL_POLICIES}, got {policy.name!r}"
+            " (window-sorting policies stay on the jax backend)")
+    r = work.n_requests
+    m = state.n_servers
+    n_win, obj, lens, val = _window_split(work, window_size)
+    if group_steps:
+        grouped, req_to_step = jax.vmap(group_by_object_with_map)(
+            Workload(obj, lens, val))
+        g_obj, g_lens, g_val = (grouped.object_ids, grouped.lengths,
+                                grouped.valid)
+    else:
+        g_obj, g_lens, g_val, req_to_step = obj, lens, val, None
+    win_rates = _window_rates(state, trace, n_win, window_dt)
+    seed = jax.random.bits(key, dtype=jnp.uint32)
+
+    choices, lats, table, wloads = kops.sched_stream(
+        g_obj.reshape(-1), g_lens.reshape(-1), g_val.reshape(-1),
+        state.log, seed, win_rates,
+        n_servers=m, window_size=window_size, threshold=policy.threshold,
+        lam=log_cfg.lam, alpha=log_cfg.ewma_alpha, window_dt=window_dt,
+        policy=policy.name, observe=observe, renorm=log_cfg.renorm)
+
+    chosen_w = choices.reshape(n_win, window_size)
+    lat_w = lats.reshape(n_win, window_size)
+    redir_w = (chosen_w != (g_obj % m).astype(jnp.int32)) & g_val
+    if req_to_step is not None:
+        take = jax.vmap(lambda a, idx: a[idx])
+        chosen_w = take(chosen_w, req_to_step)
+        lat_w = take(lat_w, req_to_step)
+        redir_w = take(redir_w, req_to_step)
+    lat_w = lat_w * val
+    redir_w = redir_w & val
+
+    # bookkeeping the kernel leaves to the host: per-step assignment
+    # counts, probe accounting (always 0 for kernel policies), clocks.
+    counts = jax.ops.segment_sum(g_val.reshape(-1).astype(jnp.int32),
+                                 choices, num_segments=m)
+    rates_last = win_rates[-1]
+    if window_dt:
+        vclock = state.vclock
+        for _ in range(n_win):   # sequential f32 adds: match advance_time
+            vclock = vclock + jnp.float32(window_dt)
+        free_at = vclock + table[policy_core.ROW_LOADS] / jnp.maximum(
+            rates_last, 1e-6)
+    else:
+        vclock, free_at = state.vclock, state.free_at
+    fstate = SchedState(log=table, n_assigned=state.n_assigned + counts,
+                        rates=rates_last, vclock=vclock, free_at=free_at)
+    probes = (jnp.sum(g_val) * policy.probes_per_request).astype(jnp.int32)
+    return ScheduleResult(
+        state=fstate,
+        chosen=chosen_w.reshape(-1)[:r],
+        probe_msgs=probes,
+        redirected=redir_w.reshape(-1)[:r],
+        latencies=lat_w.reshape(-1)[:r],
+        window_loads=wloads,
     )
 
 
 @functools.partial(jax.jit, static_argnames=("policy", "log_cfg",
                                              "window_size", "group_steps",
-                                             "window_dt", "observe"))
+                                             "window_dt", "observe",
+                                             "backend"))
 def run_stream_jit(state, work, key, *, policy, log_cfg, window_size,
                    group_steps=True, trace=None, window_dt=0.0,
-                   observe=None):
+                   observe=None, backend="jax"):
     return run_stream(state, work, key, policy=policy, log_cfg=log_cfg,
                       window_size=window_size, group_steps=group_steps,
-                      trace=trace, window_dt=window_dt, observe=observe)
+                      trace=trace, window_dt=window_dt, observe=observe,
+                      backend=backend)

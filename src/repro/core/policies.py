@@ -41,13 +41,16 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import statlog
+from repro.core import policy_core, statlog
 from repro.core.statlog import LogConfig, SchedState
 
 POLICIES = ("rr", "mlml", "trh", "nltr", "two_choice", "ect")
 
-# Number of probe RPCs each policy issues per scheduled request.  This is
-# the quantity the paper's log design eliminates (§1, §5).
+# Baseline probe RPCs per scheduled request (paper defaults).  This is
+# the quantity the paper's log design eliminates (§1, §5).  The
+# authoritative per-config count is ``PolicyConfig.probes_per_request``,
+# which derives from ``probe_choices`` so the engine and the host twin
+# can never drift apart (cross-checked in tests/test_policies.py).
 PROBES_PER_REQUEST = {
     "rr": 0,
     "mlml": 0,
@@ -56,6 +59,8 @@ PROBES_PER_REQUEST = {
     "ect": 0,
     "two_choice": 2,
 }
+
+RNG_IMPLS = ("jax", "lcg")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -67,12 +72,19 @@ class PolicyConfig:
     nltr_n: int = 2             # n of nLTR; K = 2**n sections
     # two_choice only: number of candidate servers probed (paper uses 2).
     probe_choices: int = 2
+    # Randomness source for the two-random draws: "jax" (threefry keys,
+    # the default and the PR-1-compatible behaviour) or "lcg" (the Pallas
+    # kernel's in-VMEM LCG, `policy_core.two_random_draws`) — the engine's
+    # backend="kernel" parity mode.  Deterministic policies ignore it.
+    rng: str = "jax"
 
     def __post_init__(self):
         if self.name not in POLICIES:
             raise ValueError(f"unknown policy {self.name!r}; choose from {POLICIES}")
         if self.name == "nltr" and not (1 <= self.nltr_n <= 6):
             raise ValueError("nltr_n must be in [1, 6]")
+        if self.rng not in RNG_IMPLS:
+            raise ValueError(f"rng must be one of {RNG_IMPLS}")
 
     @property
     def k_sections(self) -> int:
@@ -80,7 +92,10 @@ class PolicyConfig:
 
     @property
     def probes_per_request(self) -> int:
-        return PROBES_PER_REQUEST[self.name]
+        """Probe RPCs per request — derived from ``probe_choices`` (one
+        probe per candidate server) so engine accounting and the host
+        twin's ``probe_messages`` counter agree by construction."""
+        return self.probe_choices if self.name == "two_choice" else 0
 
 
 class WindowPlan(NamedTuple):
@@ -214,32 +229,63 @@ def select_target(cfg: PolicyConfig, plan: WindowPlan, state: SchedState,
         cand = jnp.stack(cand)
         return cand[jnp.argmin(state.loads[cand])].astype(jnp.int32)
     if cfg.name == "ect":
-        rate = _ect_rates(state.ewma_lat)
-        ect = (state.loads + length) / rate
+        # Scored on the client-ESTIMATED rates row (observations only),
+        # never the true trace rates — the stale-view contract.
+        ect = policy_core.ect_scores(state.loads, state.est_rates, length)
         return jnp.argmin(ect).astype(jnp.int32)
     raise AssertionError(cfg.name)
 
 
-def _ect_rates(ewma: jax.Array) -> jax.Array:
-    """Observed MB/s; unobserved servers get the best seen rate (optimistic
-    initialization -> exploration, beyond-paper ECT extension)."""
-    default = jnp.maximum(jnp.max(ewma), 1.0)
-    return jnp.where(ewma > 0, ewma, default)
+def select_target_rng(cfg: PolicyConfig, plan: WindowPlan, state: SchedState,
+                      pos: jax.Array, object_id: jax.Array, length: jax.Array,
+                      key: jax.Array, rng: jax.Array
+                      ) -> tuple[jax.Array, jax.Array]:
+    """Like :func:`select_target`, but threading the kernel-compatible
+    uint32 LCG state.  With ``cfg.rng == "lcg"`` the two-random policies
+    consume `policy_core.two_random_draws` exactly as the Pallas kernel
+    does (the draws advance on EVERY request, valid or padding, matching
+    the kernel's unconditional stream); otherwise the jax key is used and
+    ``rng`` passes through untouched."""
+    if cfg.rng == "lcg" and cfg.name in ("trh", "nltr", "two_choice"):
+        m = state.n_servers
+        if cfg.name == "trh":
+            half = max(m // 2, 1)
+            i1, i2, rng = policy_core.two_random_draws(rng, half)
+            s1 = plan.sorted_servers[i1]
+            s2 = plan.sorted_servers[i2]
+            target = jnp.where(state.loads[s1] <= state.loads[s2], s1,
+                               s2).astype(jnp.int32)
+            return target, rng
+        if cfg.name == "nltr":
+            sec = plan.req_section[pos]
+            lo = sec * plan.sec_size
+            i1, i2, rng = policy_core.two_random_draws(rng, plan.sec_size)
+            s1 = plan.sorted_servers[lo + i1]
+            s2 = plan.sorted_servers[lo + i2]
+            target = jnp.where(state.loads[s1] <= state.loads[s2], s1,
+                               s2).astype(jnp.int32)
+            return target, rng
+        # two_choice: default + (probe_choices-1) LCG-random candidates
+        default = (object_id % m).astype(jnp.int32)
+        cand = [default]
+        for _ in range(cfg.probe_choices - 1):
+            rng = policy_core.lcg_step(rng)
+            cand.append(policy_core.lcg_mod(rng, m))
+        cand = jnp.stack(cand)
+        return cand[jnp.argmin(state.loads[cand])].astype(jnp.int32), rng
+    return select_target(cfg, plan, state, pos, object_id, length, key), rng
 
 
 def apply_threshold(cfg: PolicyConfig, state: SchedState, default: jax.Array,
                     target: jax.Array, length: jax.Array) -> jax.Array:
     """Paper's redirect guard: only redirect when the benefit exceeds the
     user threshold (§3.4.1 prose).  For the rate-aware ECT extension the
-    benefit is in expected seconds, not bytes."""
+    benefit is in expected seconds (on the ESTIMATED rates), not bytes."""
     if cfg.name == "rr":
         return default
-    if cfg.name == "ect":
-        rate = _ect_rates(state.ewma_lat)
-        benefit = ((state.loads[default] + length) / rate[default]
-                   - (state.loads[target] + length) / rate[target])
-    else:
-        benefit = state.loads[default] - state.loads[target]
+    benefit = policy_core.redirect_benefit(cfg.name, state.loads,
+                                           state.est_rates, default, target,
+                                           length)
     return jnp.where(benefit > cfg.threshold, target, default).astype(jnp.int32)
 
 
@@ -311,10 +357,10 @@ class HostScheduler:
         return self.log.loads[server]
 
     def _ect_rates(self) -> np.ndarray:
-        """Optimistic-default observed service rates (see _ect_rates)."""
-        ewma = self.log.ewma_lat
-        default = max(float(ewma.max()), 1.0)
-        return np.where(ewma > 0, ewma, default)
+        """Client-estimated service rates: the packed table's est row,
+        maintained by ``HostStatLog.observe_completion`` via the shared
+        ``policy_core.observe_update`` (observations only — stale view)."""
+        return self.log.est_rates
 
     def _two_random(self, lo: int, size: int) -> int:
         size = max(size, 1)
@@ -368,8 +414,8 @@ class HostScheduler:
             cand = [c for c in cand if c not in self._masked] or cand
             target = min(cand, key=self._live_load)
         elif cfg.name == "ect":
-            rate = self._ect_rates()
-            ect = (log.loads + length_mb) / rate
+            ect = policy_core.ect_scores(log.loads, self._ect_rates(),
+                                         length_mb, xp=np)
             if self._masked:
                 ect = ect.copy()
                 ect[list(self._masked)] = np.inf
@@ -381,12 +427,9 @@ class HostScheduler:
             alive = [s for s in range(m) if s not in self._masked]
             target = min(alive, key=self._live_load)
         if cfg.name != "rr" and default not in self._masked:
-            if cfg.name == "ect":
-                rate = self._ect_rates()
-                benefit = ((log.loads[default] + length_mb) / rate[default]
-                           - (log.loads[target] + length_mb) / rate[target])
-            else:
-                benefit = log.loads[default] - log.loads[target]
+            benefit = policy_core.redirect_benefit(
+                cfg.name, log.loads, self._ect_rates(), default, target,
+                length_mb, xp=np)
             chosen = target if benefit > cfg.threshold else default
         else:
             chosen = target

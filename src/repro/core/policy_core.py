@@ -1,0 +1,244 @@
+"""Single source of truth for the scheduler's decision math.
+
+Every layer of the stack — the jitted JAX engine (`core/engine.py` via
+`core/statlog.py` / `core/policies.py`), the numpy host twin on the real
+I/O request path (`HostStatLog` / `HostScheduler`, used by `io/client`),
+and the Pallas kernel (`kernels/sched_select`) — schedules against the
+same packed **log tensor**:
+
+    row 0  ``loads``      expected outstanding MB per server (Eq. 1)
+    row 1  ``probs``      selection probability, sums to 1 (Eqs. 2-3)
+    row 2  ``ewma_lat``   EWMA of *observed* service rate, MB/s (0 = unseen)
+    row 3  ``est_rates``  client-estimated service rate — derived ONLY from
+                          completion observations (``ect_rates`` of row 2),
+                          never from the cluster's true rates.  Stale by
+                          construction: when a server's true rate changes,
+                          this row lags until completions reveal it.
+
+one ``(4, M)`` float table (`N_ROWS` x servers).  ``SchedState.log``
+stores it as a jnp array, ``HostStatLog.table`` as a numpy array whose
+rows are views, and the kernel pins it in a ``(4, M_pad)`` VMEM scratch
+for an entire request stream.
+
+The functions here are the *decision core*: target selection scores, the
+paper's redirect-threshold guard, the Eq. (1)-(3) log updates, completion
+observation, per-window renormalization and queue drain.  They are
+parameterized over the array namespace (``xp = jnp`` or ``numpy``) so the
+JAX engine and the host twin execute literally the same code; the kernel
+mirrors the same formulas with one-hot lane writes (no scatter) and is
+held bit-exact by the parity tests in ``tests/test_kernels.py``.
+
+True rates (`SchedState.rates` / `HostStatLog.rates`) are deliberately
+NOT part of the table: they belong to the cluster, not the client's log.
+Only :func:`drain_loads` (queue drain between windows — the simulator's
+ground-truth step) and latency *reporting* consume them.  Scheduling
+decisions (ECT scores, threshold guards) read ``est_rates``.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# Packed log-tensor rows (DESIGN.md §8).
+ROW_LOADS, ROW_PROBS, ROW_EWMA, ROW_EST = 0, 1, 2, 3
+N_ROWS = 4
+ROW_NAMES = ("loads", "probs", "ewma_lat", "est_rates")
+
+# The in-kernel LCG (numerical recipes constants) — also used by the JAX
+# engine when ``PolicyConfig.rng == "lcg"`` so kernel and engine consume
+# an identical randomness stream (the bit-exactness contract).
+LCG_A = 1664525
+LCG_C = 1013904223
+_MASK32 = 0xFFFFFFFF
+
+
+def pack(loads, probs, ewma_lat, est_rates, xp=jnp):
+    """Stack the four rows into one (4, M) table."""
+    return xp.stack([loads, probs, ewma_lat, est_rates])
+
+
+def init_table(m: int, xp=jnp, dtype=None):
+    """Fresh log: zero loads, round-robin prior p_i = 1/M (paper §3.3.2),
+    no observations, optimistic unit estimated rates (= ect_rates(0))."""
+    dtype = dtype or (jnp.float32 if xp is jnp else np.float64)
+    t = xp.zeros((N_ROWS, m), dtype)
+    if xp is np:
+        t[ROW_PROBS] = 1.0 / m
+        t[ROW_EST] = 1.0
+        return t
+    return t.at[ROW_PROBS].set(1.0 / m).at[ROW_EST].set(1.0)
+
+
+# ---------------------------------------------------------------------------
+# Shared LCG (kernel randomness, mirrored by the engine's rng="lcg" mode)
+# ---------------------------------------------------------------------------
+
+
+def lcg_step(rng, xp=jnp):
+    """One LCG step on a uint32 state."""
+    if xp is np:
+        return (int(rng) * LCG_A + LCG_C) & _MASK32
+    return rng * jnp.uint32(LCG_A) + jnp.uint32(LCG_C)
+
+
+def lcg_mod(rng, n: int, xp=jnp):
+    """Map an LCG state to [0, n): drop the low byte (weak low bits),
+    mask to non-negative int32, take the remainder."""
+    if xp is np:
+        return ((int(rng) >> 8) & 0x7FFFFFFF) % n
+    return jax.lax.rem((rng >> jnp.uint32(8)).astype(jnp.int32)
+                       & jnp.int32(0x7FFFFFFF), n)
+
+
+def two_random_draws(rng, n: int, xp=jnp):
+    """Two consecutive LCG draws in [0, n); returns (d1, d2, new_rng).
+
+    This is the exact draw sequence of the kernel's ``two_random`` and
+    ``trh`` policies — the engine's rng="lcg" mode replays it bit-for-bit.
+    """
+    r1 = lcg_step(rng, xp)
+    r2 = lcg_step(r1, xp)
+    return lcg_mod(r1, n, xp), lcg_mod(r2, n, xp), r2
+
+
+# ---------------------------------------------------------------------------
+# Decision core: scores, target selection, threshold guard
+# ---------------------------------------------------------------------------
+
+
+def ect_rates(ewma_lat, xp=jnp):
+    """Client-estimated service rates (the ``est_rates`` row) from the
+    observation EWMA alone.  Unobserved servers get the best seen rate
+    (optimistic initialization -> exploration); an empty log estimates
+    1 MB/s everywhere (the static model where MB and seconds coincide).
+
+    By construction this never reads the true ``rates`` — the stale-view
+    contract (DESIGN.md §8), property-tested in tests/test_statlog.py.
+    """
+    default = xp.maximum(xp.max(ewma_lat), 1.0)
+    return xp.where(ewma_lat > 0, ewma_lat, default)
+
+
+def ect_scores(loads, est_rates, length, xp=jnp):
+    """Expected completion time per server: (load_i + len) / est_rate_i.
+    Scored on the client's ESTIMATED rates, never the true ones."""
+    return (loads + length) / est_rates
+
+
+def redirect_benefit(policy_name: str, loads, est_rates, default, target,
+                     length, xp=jnp):
+    """Paper's §3.4.1 redirect guard benefit: MB of load for the load-based
+    policies, expected seconds for the rate-aware ECT extension."""
+    if policy_name == "ect":
+        return ((loads[default] + length) / est_rates[default]
+                - (loads[target] + length) / est_rates[target])
+    return loads[default] - loads[target]
+
+
+def prob_ranks(probs, xp=jnp):
+    """Stable descending rank of each server by selection probability:
+    ``rank_i = |{j : p_j > p_i}| + |{j < i : p_j == p_i}|``.
+
+    Matches ``argsort(-probs)`` with stable ties exactly: the server at
+    sorted position k is the one with rank k.  This form needs no sort /
+    gather, so the kernel can evaluate it on VMEM lanes; the engine uses
+    argsort and the equivalence is asserted in tests.
+    """
+    m = probs.shape[-1]
+    gt = probs[None, :] > probs[:, None]          # [i, j] = p_j > p_i
+    if xp is np:
+        eq = probs[None, :] == probs[:, None]
+        before = np.arange(m)[None, :] < np.arange(m)[:, None]
+        return (gt.sum(-1) + (eq & before).sum(-1)).astype(np.int64)
+    eq = probs[None, :] == probs[:, None]
+    before = jnp.arange(m)[None, :] < jnp.arange(m)[:, None]
+    return (jnp.sum(gt, -1) + jnp.sum(eq & before, -1)).astype(jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# Eq. (1)-(3) updates, observation, window maintenance
+# ---------------------------------------------------------------------------
+
+
+def assignment_update(loads, probs, server, length, lam: float, m: int,
+                      xp=jnp):
+    """Eq. (1)-(3): book ``length`` MB on ``server``; decay its selection
+    probability and spread the lost mass over the other M-1 servers.
+
+    The jnp form uses one-hot vector writes (`where`) instead of scatter
+    — the exact formulation the Pallas kernel executes on VMEM lanes, so
+    XLA lowers both layers through the same elementwise ops and the
+    engine<->kernel trace stays bit-identical (scatter + scalar-exp
+    lowering was observed to differ by 1 ulp inside fused loop bodies).
+    """
+    if xp is np:
+        loads = loads.copy()
+        probs = probs.copy()
+        loads[server] += length                              # Eq. (1)
+        p_i = probs[server]
+        decayed = p_i * np.exp(-loads[server] / lam)         # Eq. (2)
+        delta = (p_i - decayed) / (m - 1)                    # Eq. (3)
+        probs += delta
+        probs[server] = decayed
+        return loads, probs
+    onehot = jnp.arange(loads.shape[-1]) == server
+    loads = jnp.where(onehot, loads + length, loads)         # Eq. (1)
+    l_i = loads[server]
+    p_i = probs[server]
+    decayed = p_i * jnp.exp(-l_i / lam)                      # Eq. (2)
+    delta = (p_i - decayed) / (m - 1)                        # Eq. (3)
+    probs = jnp.where(onehot, decayed, probs + delta)
+    return loads, probs
+
+
+def observe_update(ewma_lat, server, mb_per_s, alpha: float, xp=jnp):
+    """Fold one observed service rate into the EWMA row and re-derive the
+    estimated-rate row.  Returns (ewma_lat, est_rates).  The est row is a
+    pure function of observations — the only way the client ever learns
+    about a server's speed (stale-view contract)."""
+    if xp is np:
+        ewma_lat = ewma_lat.copy()
+        old = ewma_lat[server]
+        ewma_lat[server] = (mb_per_s if old == 0.0
+                            else (1 - alpha) * old + alpha * mb_per_s)
+    else:
+        old = ewma_lat[server]
+        new = jnp.where(old == 0.0, mb_per_s,
+                        (1 - alpha) * old + alpha * mb_per_s)
+        ewma_lat = ewma_lat.at[server].set(new)
+    return ewma_lat, ect_rates(ewma_lat, xp)
+
+
+def renormalize_probs(probs, xp=jnp):
+    """Re-project the probability row onto the simplex (float-drift guard;
+    run once per window by every layer that renormalizes).
+
+    The jnp form pads the reduction to the kernel's 128-lane width before
+    summing: appended exact zeros never change the sum's value, but they
+    make XLA pick the same reduction tree as the Pallas kernel's padded
+    VMEM row — the last bit of the engine<->kernel parity contract."""
+    if xp is np:
+        p = np.clip(probs, 0.0, None)
+        return p / p.sum()
+    p = jnp.clip(probs, 0.0)
+    m = p.shape[-1]
+    m_pad = max(-(-m // 128) * 128, 128)
+    total = jnp.sum(jnp.pad(p, (0, m_pad - m))) if m_pad != m else jnp.sum(p)
+    return p / total
+
+
+def drain_loads(loads, rates, dt, xp=jnp):
+    """Temporal model: drain each server's outstanding queue at its TRUE
+    service rate for ``dt`` virtual seconds, clipped at empty.  The one
+    place the simulator's ground-truth rates touch the log (queue physics,
+    not a scheduling decision)."""
+    rates = xp.maximum(rates, 1e-6)
+    return xp.maximum(loads - rates * dt, 0.0)
+
+
+def estimated_latency(loads, rates, server, xp=jnp):
+    """Seconds until a request just queued on ``server`` completes, at the
+    given (true) service rates — the simulator's latency report."""
+    return loads[server] / xp.maximum(rates[server], 1e-6)

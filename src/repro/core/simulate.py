@@ -109,6 +109,10 @@ class SimConfig:
     client_model: str = "shared_log"  # shared_log | per_client
     # temporal scenario (None = the seed's static-load model, no trace)
     scenario: Optional[ScenarioConfig] = None
+    # scheduling substrate: "jax" (lax.scan engine, every policy) or
+    # "kernel" (the Pallas temporal kernel — ect/trh, shared_log model;
+    # trials run under lax.map since the stream IS one pallas_call).
+    backend: str = "jax"
     # size-class boundaries (MB) per §4
     small_lo: float = 0.25
     small_hi: float = 4.0
@@ -118,6 +122,10 @@ class SimConfig:
     def __post_init__(self):
         assert self.workload in SIZE_CLASSES
         assert self.client_model in ("shared_log", "per_client")
+        assert self.backend in ("jax", "kernel")
+        if self.backend == "kernel":
+            assert self.client_model == "shared_log", \
+                "kernel backend models one shared log"
 
     @property
     def n_windows(self) -> int:
@@ -216,7 +224,8 @@ def absorb_initial_loads(state: SchedState, loads: jax.Array,
     m = state.n_servers
     probs = jnp.exp(-loads / log_cfg.lam) / m
     probs = probs / jnp.sum(probs)
-    return state._replace(loads=loads, probs=probs.astype(jnp.float32))
+    return state.with_rows(loads=loads.astype(jnp.float32),
+                           probs=probs.astype(jnp.float32))
 
 
 def resolve_window_dt(cfg: SimConfig, scn: ScenarioConfig) -> float:
@@ -306,7 +315,8 @@ def _run_shared_log(key: jax.Array, cfg: SimConfig, policy: PolicyConfig,
     res = engine.run_stream(state, work, k_sched, policy=policy,
                             log_cfg=log_cfg, window_size=cfg.window_size,
                             group_steps=True, trace=trace,
-                            window_dt=window_dt, observe=observe)
+                            window_dt=window_dt, observe=observe,
+                            backend=cfg.backend)
     written = jax.ops.segment_sum(work.lengths, res.chosen,
                                   num_segments=cfg.n_servers)
     n_assigned = jax.ops.segment_sum(jnp.ones_like(res.chosen), res.chosen,
@@ -393,9 +403,18 @@ def _run_per_client(key: jax.Array, cfg: SimConfig, policy: PolicyConfig,
 @functools.partial(jax.jit, static_argnames=("cfg", "policy", "log_cfg"))
 def run_trials(key: jax.Array, cfg: SimConfig, policy: PolicyConfig,
                log_cfg: LogConfig) -> TrialResult:
-    """Run ``cfg.n_trials`` independent trials (vmapped + jitted)."""
+    """Run ``cfg.n_trials`` independent trials (vmapped + jitted).
+
+    The kernel backend runs trials under ``lax.map`` instead of ``vmap``:
+    each trial's stream is already ONE pallas_call, so batching would
+    only fold the trial axis into the kernel grid.  Decisions, latencies
+    and loads are bit-exact across backends; the derived ``phase_time``
+    reduction may differ by 1 ulp (vmap vs map fusion of the metrics
+    layer, outside the decision path)."""
     keys = jax.random.split(key, cfg.n_trials)
     fn = _run_shared_log if cfg.client_model == "shared_log" else _run_per_client
+    if cfg.backend == "kernel":
+        return jax.lax.map(lambda k: fn(k, cfg, policy, log_cfg), keys)
     return jax.vmap(lambda k: fn(k, cfg, policy, log_cfg))(keys)
 
 

@@ -12,12 +12,20 @@ exponent, which underflows after a single multi-MB assignment.  ``lam``
 defaults to a scale on the order of the mean request size; ``lam -> 0+``
 recovers the paper's literal greedy behaviour.
 
-Two implementations share these formulas:
+Since PR 2 the log is ONE packed ``(4, M)`` tensor — rows ``loads /
+probs / ewma_lat / est_rates`` (`repro.core.policy_core` defines the
+layout and all update formulas).  The same representation backs all
+three scheduling layers:
 
-* a pure-JAX functional form (``SchedState`` + ``apply_assignment``) used
-  by the jitted scheduling engine / simulator, and
-* ``HostStatLog``, a mutable numpy twin used on the request hot path of
-  the real I/O client (``repro.io.client``), cross-validated in tests.
+* ``SchedState.log`` — jnp array carried through the jitted engine;
+* ``HostStatLog.table`` — numpy array whose rows are views, used on the
+  request hot path of the real I/O client (``repro.io.client``);
+* the Pallas kernel's VMEM scratch (``repro.kernels.sched_select``).
+
+The client's view is stale by construction: ``rates`` (true, trace-
+driven, used only to drain queues and report latencies) is NOT part of
+the table; the ``est_rates`` row is derived purely from completion
+observations and is what ECT schedules on in every layer.
 """
 
 from __future__ import annotations
@@ -29,24 +37,27 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import policy_core
+from repro.core.policy_core import (N_ROWS, ROW_EST, ROW_EWMA, ROW_LOADS,
+                                    ROW_PROBS)
+
 
 class SchedState(NamedTuple):
-    """Server statistic table (jnp arrays, one row per OSS).
+    """Scheduling state: the packed log tensor + true-cluster fields.
 
-    The temporal extension (DESIGN.md §Temporal-model) adds per-server
-    service *rates* and virtual completion-time clocks so the jitted
-    engine can drain queues between time windows and feed completion
-    observations back into ``ewma_lat`` (making slow — not merely loaded
-    — servers visible to the ECT policy in the JAX path).  With
-    ``rates == 1`` and ``advance_time`` never called, the state degrades
-    exactly to the paper's static-load model.
+    ``log`` is the client's whole statistic table — the few KB the paper
+    keeps resident in client memory.  The temporal extension (DESIGN.md
+    §Temporal-model) adds per-server TRUE service ``rates`` and virtual
+    completion-time clocks so the jitted engine can drain queues between
+    time windows; those are simulator ground truth, not client knowledge,
+    which is why they live outside the table.  With ``rates == 1`` and
+    ``advance_time`` never called, the state degrades exactly to the
+    paper's static-load model.
     """
 
-    loads: jax.Array        # (M,) expected outstanding bytes (MB) per server
-    probs: jax.Array        # (M,) selection probability, sums to 1
+    log: jax.Array          # (4, M) packed table (policy_core layout)
     n_assigned: jax.Array   # (M,) int32 — requests scheduled per server
-    ewma_lat: jax.Array     # (M,) observed MB/s EWMA (ECT extension; 0 = unseen)
-    rates: jax.Array        # (M,) current true service rate, MB per virtual s
+    rates: jax.Array        # (M,) current TRUE service rate, MB per virtual s
     vclock: jax.Array       # ()  virtual time since stream start, seconds
     free_at: jax.Array      # (M,) virtual completion-time clock: when each
     #                          server's outstanding queue drains (vclock
@@ -55,8 +66,36 @@ class SchedState(NamedTuple):
     #                          is stale between drains); no policy reads it.
 
     @property
+    def loads(self) -> jax.Array:
+        return self.log[..., ROW_LOADS, :]
+
+    @property
+    def probs(self) -> jax.Array:
+        return self.log[..., ROW_PROBS, :]
+
+    @property
+    def ewma_lat(self) -> jax.Array:
+        return self.log[..., ROW_EWMA, :]
+
+    @property
+    def est_rates(self) -> jax.Array:
+        """Client-estimated service rates — observations only, never the
+        true ``rates`` (the stale-view contract)."""
+        return self.log[..., ROW_EST, :]
+
+    @property
     def n_servers(self) -> int:
-        return self.loads.shape[-1]
+        return self.log.shape[-1]
+
+    def with_rows(self, *, loads=None, probs=None, ewma_lat=None,
+                  est_rates=None) -> "SchedState":
+        """Functionally replace individual rows of the packed table."""
+        log = self.log
+        for row, val in ((ROW_LOADS, loads), (ROW_PROBS, probs),
+                         (ROW_EWMA, ewma_lat), (ROW_EST, est_rates)):
+            if val is not None:
+                log = log.at[..., row, :].set(val)
+        return self._replace(log=log)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -76,14 +115,13 @@ def init_state(cfg: LogConfig, init_loads: Optional[jax.Array] = None,
     ``rates`` defaults to 1 MB/s everywhere — the static-load degenerate
     model where "seconds" and "MB" coincide."""
     m = cfg.n_servers
-    loads = jnp.zeros((m,), jnp.float32) if init_loads is None else init_loads.astype(jnp.float32)
-    probs = jnp.full((m,), 1.0 / m, jnp.float32)
+    log = policy_core.init_table(m, xp=jnp)
+    if init_loads is not None:
+        log = log.at[ROW_LOADS].set(init_loads.astype(jnp.float32))
     rates = jnp.ones((m,), jnp.float32) if rates is None else rates.astype(jnp.float32)
     return SchedState(
-        loads=loads,
-        probs=probs,
+        log=log,
         n_assigned=jnp.zeros((m,), jnp.int32),
-        ewma_lat=jnp.zeros((m,), jnp.float32),
         rates=rates,
         vclock=jnp.zeros((), jnp.float32),
         free_at=jnp.zeros((m,), jnp.float32),
@@ -94,61 +132,58 @@ def apply_assignment(state: SchedState, server: jax.Array, length: jax.Array,
                      cfg: LogConfig) -> SchedState:
     """Update the log after scheduling ``length`` MB onto ``server``.
 
-    Faithful to Eqs. (1)-(3): the decayed probability mass of the chosen
-    server is redistributed evenly over the other M-1 servers, keeping
-    sum(p) == 1 exactly (up to float error; see ``renormalize``).
+    Faithful to Eqs. (1)-(3) via the shared decision core: the decayed
+    probability mass of the chosen server is redistributed evenly over
+    the other M-1 servers, keeping sum(p) == 1 exactly (up to float
+    error; see ``renormalize``).
     """
-    m = state.loads.shape[-1]
-    loads = state.loads.at[server].add(length)           # Eq. (1)
-    l_i = loads[server]                                  # updated load of i
-    p_i = state.probs[server]
-    decayed = p_i * jnp.exp(-l_i / cfg.lam)              # Eq. (2)
-    delta = (p_i - decayed) / (m - 1)                    # Eq. (3)
-    probs = state.probs + delta
-    probs = probs.at[server].set(decayed)
+    loads, probs = policy_core.assignment_update(
+        state.loads, state.probs, server, length, cfg.lam, state.n_servers)
     n_assigned = state.n_assigned.at[server].add(1)
-    return state._replace(loads=loads, probs=probs, n_assigned=n_assigned)
+    return state.with_rows(loads=loads, probs=probs)._replace(
+        n_assigned=n_assigned)
 
 
 def observe_completion(state: SchedState, server: jax.Array, mb_per_s: jax.Array,
                        cfg: LogConfig) -> SchedState:
     """ECT extension (beyond paper): fold an observed service rate into the
-    log. A server that is *slow* (not merely loaded) becomes visible here."""
-    old = state.ewma_lat[server]
-    new = jnp.where(old == 0.0, mb_per_s, (1 - cfg.ewma_alpha) * old + cfg.ewma_alpha * mb_per_s)
-    return state._replace(ewma_lat=state.ewma_lat.at[server].set(new))
+    log.  A server that is *slow* (not merely loaded) becomes visible here
+    — and ONLY here: this is the single path that writes the client's
+    ``est_rates`` row."""
+    ewma, est = policy_core.observe_update(state.ewma_lat, server, mb_per_s,
+                                           cfg.ewma_alpha)
+    return state.with_rows(ewma_lat=ewma, est_rates=est)
 
 
 def advance_time(state: SchedState, dt: jax.Array) -> SchedState:
     """Temporal model: advance the virtual clock by ``dt`` seconds.
 
-    Each server drains its outstanding queue at its *current* service rate
-    (piecewise-constant between :class:`~repro.core.engine.ClusterTrace`
+    Each server drains its outstanding queue at its *current* TRUE service
+    rate (piecewise-constant between :class:`~repro.core.engine.ClusterTrace`
     events), clipped at empty; the per-server completion-time clock
     ``free_at`` is re-derived from the residual queue.  ``dt == 0`` is the
     exact identity on non-negative loads, which is what makes the
     degenerate (static) trace reproduce the paper's original model
     bit-for-bit.  jit-compatible; used inside the engine's window scan.
     """
-    rates = jnp.maximum(state.rates, 1e-6)
-    loads = jnp.maximum(state.loads - rates * dt, 0.0)
+    loads = policy_core.drain_loads(state.loads, state.rates, dt)
     vclock = state.vclock + dt
-    free_at = vclock + loads / rates
-    return state._replace(loads=loads, vclock=vclock, free_at=free_at)
+    free_at = vclock + loads / jnp.maximum(state.rates, 1e-6)
+    return state.with_rows(loads=loads)._replace(vclock=vclock,
+                                                 free_at=free_at)
 
 
 def estimated_latency(state: SchedState, server: jax.Array) -> jax.Array:
     """Seconds until a request just queued on ``server`` completes: the
     whole outstanding queue (which includes that request, Eq. (1) already
-    applied) divided by the server's current service rate."""
-    return state.loads[server] / jnp.maximum(state.rates[server], 1e-6)
+    applied) divided by the server's current TRUE service rate."""
+    return policy_core.estimated_latency(state.loads, state.rates, server)
 
 
 def renormalize(state: SchedState) -> SchedState:
     """Re-project probs onto the simplex (guards float drift; analytic sum
     is already 1 — see tests/test_statlog.py property tests)."""
-    p = jnp.clip(state.probs, 0.0)
-    return state._replace(probs=p / jnp.sum(p))
+    return state.with_rows(probs=policy_core.renormalize_probs(state.probs))
 
 
 # ---------------------------------------------------------------------------
@@ -161,21 +196,58 @@ class HostStatLog:
 
     Kept deliberately tiny: the whole point of the paper is that the
     client's scheduling state is a few KB resident in local memory —
-    no RPC, no probing.
+    no RPC, no probing.  ``table`` is the SAME packed (4, M) layout as
+    ``SchedState.log`` (rows are numpy views, so in-place edits like
+    ``log.loads[s] = x`` hit the table directly), and every update calls
+    the shared ``policy_core`` formulas with ``xp=numpy``.
     """
 
     def __init__(self, cfg: LogConfig, init_loads: Optional[np.ndarray] = None):
         self.cfg = cfg
         m = cfg.n_servers
-        self.loads = np.zeros(m, np.float64) if init_loads is None else np.asarray(init_loads, np.float64).copy()
-        self.probs = np.full(m, 1.0 / m, np.float64)
+        self.table = policy_core.init_table(m, xp=np)     # (4, M) float64
+        if init_loads is not None:
+            self.table[ROW_LOADS] = np.asarray(init_loads, np.float64)
         self.n_assigned = np.zeros(m, np.int64)
-        self.ewma_lat = np.zeros(m, np.float64)
-        self.rates = np.ones(m, np.float64)   # MB per virtual second
+        self.rates = np.ones(m, np.float64)   # TRUE MB per virtual second
         self.vclock = 0.0
         self.free_at = np.zeros(m, np.float64)
         # I/O request table (Fig. 8, left): (object_id, offset, length) rows.
         self.request_log: list[tuple[int, int, float]] = []
+
+    # -- packed-table row views ---------------------------------------------
+    @property
+    def loads(self) -> np.ndarray:
+        return self.table[ROW_LOADS]
+
+    @loads.setter
+    def loads(self, v) -> None:
+        self.table[ROW_LOADS] = np.asarray(v, np.float64)
+
+    @property
+    def probs(self) -> np.ndarray:
+        return self.table[ROW_PROBS]
+
+    @probs.setter
+    def probs(self, v) -> None:
+        self.table[ROW_PROBS] = np.asarray(v, np.float64)
+
+    @property
+    def ewma_lat(self) -> np.ndarray:
+        return self.table[ROW_EWMA]
+
+    @ewma_lat.setter
+    def ewma_lat(self, v) -> None:
+        self.table[ROW_EWMA] = np.asarray(v, np.float64)
+
+    @property
+    def est_rates(self) -> np.ndarray:
+        """Client-estimated rates: observations only (stale view)."""
+        return self.table[ROW_EST]
+
+    @est_rates.setter
+    def est_rates(self, v) -> None:
+        self.table[ROW_EST] = np.asarray(v, np.float64)
 
     @property
     def n_servers(self) -> int:
@@ -185,19 +257,18 @@ class HostStatLog:
         self.request_log.append((object_id, offset, length_mb))
 
     def apply_assignment(self, server: int, length_mb: float) -> None:
-        m = self.cfg.n_servers
-        self.loads[server] += length_mb                          # Eq. (1)
-        p_i = self.probs[server]
-        decayed = p_i * np.exp(-self.loads[server] / self.cfg.lam)  # Eq. (2)
-        delta = (p_i - decayed) / (m - 1)                        # Eq. (3)
-        self.probs += delta
-        self.probs[server] = decayed
+        loads, probs = policy_core.assignment_update(
+            self.loads, self.probs, server, length_mb, self.cfg.lam,
+            self.cfg.n_servers, xp=np)
+        self.table[ROW_LOADS] = loads
+        self.table[ROW_PROBS] = probs
         self.n_assigned[server] += 1
 
     def observe_completion(self, server: int, mb_per_s: float) -> None:
-        a = self.cfg.ewma_alpha
-        old = self.ewma_lat[server]
-        self.ewma_lat[server] = mb_per_s if old == 0.0 else (1 - a) * old + a * mb_per_s
+        ewma, est = policy_core.observe_update(
+            self.ewma_lat, server, mb_per_s, self.cfg.ewma_alpha, xp=np)
+        self.table[ROW_EWMA] = ewma
+        self.table[ROW_EST] = est
 
     def complete(self, server: int, length_mb: float) -> None:
         """Bytes drained from a server's outstanding queue (write finished)."""
@@ -208,34 +279,33 @@ class HostStatLog:
 
     def advance_time(self, dt: float) -> None:
         """Numpy twin of :func:`advance_time`: drain queues at the current
-        per-server rates and advance the virtual clock."""
-        rates = np.maximum(self.rates, 1e-6)
-        self.loads = np.maximum(self.loads - rates * dt, 0.0)
+        TRUE per-server rates and advance the virtual clock."""
+        self.table[ROW_LOADS] = policy_core.drain_loads(self.loads,
+                                                        self.rates, dt, xp=np)
         self.vclock += dt
-        self.free_at = self.vclock + self.loads / rates
+        self.free_at = self.vclock + self.loads / np.maximum(self.rates, 1e-6)
 
     def estimated_latency(self, server: int) -> float:
-        return float(self.loads[server] / max(self.rates[server], 1e-6))
+        return float(policy_core.estimated_latency(self.loads, self.rates,
+                                                   server, xp=np))
 
     def renormalize(self) -> None:
-        p = np.clip(self.probs, 0.0, None)
-        self.probs = p / p.sum()
+        self.table[ROW_PROBS] = policy_core.renormalize_probs(self.probs,
+                                                              xp=np)
 
     def absorb_loads(self, loads: Optional[np.ndarray] = None) -> None:
         """Seed probabilities from known loads: p_i ∝ (1/M)·e^{-l_i/λ}
         (vectorized Eq. (2) fixed point — how a client that has observed
         the cluster for a while would start; see simulate.absorb_initial_loads)."""
         if loads is not None:
-            self.loads = np.asarray(loads, np.float64).copy()
+            self.table[ROW_LOADS] = np.asarray(loads, np.float64)
         p = np.exp(-self.loads / self.cfg.lam)
-        self.probs = p / p.sum()
+        self.table[ROW_PROBS] = p / p.sum()
 
     def snapshot(self) -> SchedState:
         return SchedState(
-            loads=jnp.asarray(self.loads, jnp.float32),
-            probs=jnp.asarray(self.probs, jnp.float32),
+            log=jnp.asarray(self.table, jnp.float32),
             n_assigned=jnp.asarray(self.n_assigned, jnp.int32),
-            ewma_lat=jnp.asarray(self.ewma_lat, jnp.float32),
             rates=jnp.asarray(self.rates, jnp.float32),
             vclock=jnp.asarray(self.vclock, jnp.float32),
             free_at=jnp.asarray(self.free_at, jnp.float32),

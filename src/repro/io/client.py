@@ -1,13 +1,19 @@
 """Client-side I/O scheduler client (paper Fig. 5, left box).
 
 ``IOClient`` is the thing that runs on a compute node: it holds the
-client-side server statistic log (:class:`~repro.core.statlog.HostStatLog`),
-a scheduling policy (:class:`~repro.core.policies.HostScheduler`), and a
-handle to the object store.  Every file write is striped into objects,
-scheduled as one *time window* through the log (zero probe messages for the
-log-assisted policies), written — possibly redirected away from the default
-home, recorded in the home's redirect table — and observed back into the
-log (completion rates feed the beyond-paper ECT policy).
+client-side server statistic log (:class:`~repro.core.statlog.HostStatLog`
+— the packed ``(4, M)`` log tensor of `repro.core.policy_core`, the SAME
+representation the jitted engine carries and the Pallas kernel pins in
+VMEM), a scheduling policy (:class:`~repro.core.policies.HostScheduler`),
+and a handle to the object store.  Every file write is striped into
+objects, scheduled as one *time window* through the log (zero probe
+messages for the log-assisted policies), written — possibly redirected
+away from the default home, recorded in the home's redirect table — and
+observed back into the log: completion rates feed the ``ewma_lat`` /
+``est_rates`` rows, the ONLY channel through which the client learns
+about server speed (the stale-view contract, DESIGN.md §8).  ECT here
+therefore ranks servers by the same client-estimated latency numbers as
+the engine and the kernel backend.
 
 Fault tolerance: a write that hits a failed server masks that server in the
 scheduler and retries on the next-best target (up to ``max_retries``), which
@@ -256,11 +262,18 @@ class IOClient:
             self._pool.shutdown(wait=True)
 
     # ----------------------------------------------------------------- stats
+    @property
+    def log_table(self) -> np.ndarray:
+        """Snapshot of the packed (4, M) log tensor (loads / probs /
+        ewma_lat / est_rates) — the client's whole scheduling state."""
+        return self.log.table.copy()
+
     def stats(self) -> Dict[str, float]:
         if not self.records:
             return {"writes": 0}
         mbs = np.array([r.mb for r in self.records])
         secs = np.array([r.seconds for r in self.records])
+        est = self.log.est_rates
         return {
             "writes": len(self.records),
             "total_mb": float(mbs.sum()),
@@ -271,4 +284,8 @@ class IOClient:
             "probe_messages": float(self.probe_messages),
             "retries": float(sum(r.retries for r in self.records)),
             "failed_writes": float(self.failed_writes),
+            # stale-view summary: the client's own rate estimates
+            "est_rate_min_mb_s": float(est.min()),
+            "est_rate_max_mb_s": float(est.max()),
+            "est_slowest_server": int(np.argmin(est)),
         }

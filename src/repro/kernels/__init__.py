@@ -4,7 +4,12 @@
   (causal / sliding-window / chunked-local), the fused form of
   ``repro.models.attention.attend_blocked``.
 * ``sched_select``    — the paper's per-request scheduling loop with the
-  server statistic table resident in VMEM (log streaming, zero probes).
+  packed (4, M) statistic table (policy_core layout) resident in VMEM
+  (log streaming, zero probes).  Its temporal form ``sched_stream`` runs
+  an entire windowed ``engine.run_stream`` trace — selection, threshold
+  guard, Eq. (1)-(3), completion feedback, per-window renorm + queue
+  drain — as ONE pallas_call, bit-exact with the JAX engine
+  (``engine.run_stream(backend="kernel")``).
 
 Each kernel ships ``kernel.py`` (pl.pallas_call + BlockSpec), ``ops.py``
 (jit'd wrapper, auto-interpret on CPU) and ``ref.py`` (pure-jnp oracle);

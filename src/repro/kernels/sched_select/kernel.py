@@ -2,26 +2,43 @@
 
 This is the TPU-native adaptation of the paper's core insight (DESIGN.md):
 *replace remote probing with local state*.  Scheduling a request stream
-against an (M,)-server statistic table is a sequential-dependence loop
-whose working set (loads + probs, a few KB) is reused every iteration —
-the kernel pins the table in VMEM scratch for the whole stream and emits
-one assignment per request, instead of bouncing the carry through XLA's
-while-loop machinery (HBM round trips per decision).
+against an M-server statistic table is a sequential-dependence loop whose
+working set — the packed ``(4, M)`` log tensor of `repro.core.policy_core`
+(rows ``loads / probs / ewma_lat / est_rates``) — is reused every
+iteration: the kernel pins the whole table in one VMEM scratch for the
+entire stream and emits one assignment per request, instead of bouncing
+the carry through XLA's while-loop machinery (HBM round trips per
+decision).
 
 Grid = independent clients (each compute node runs its own log; there is
 no cross-client gossip, exactly as in the paper §3.3).
 
-Policies (selected statically):
+The TEMPORAL form (`_sched_stream_kernel`) runs a whole `run_stream`
+trace as one ``pallas_call``: the stream is split into windows; per
+window the kernel snapshots the probability ranking (TRH's plan), loops
+the window's requests (selection → threshold guard → Eq. (1)-(3) one-hot
+updates → completion feedback into the ewma/est rows), then renormalizes
+the probability row and drains each server's queue at the window's TRUE
+service rates (``advance_time`` semantics; rates streamed in as a
+``(W, M)`` input).  Policies (selected statically):
 
 * ``minload``    — argmin of current load (greedy; ECT with unit rates);
-* ``two_random`` — power-of-two-choices from the log (no probe messages;
-  the in-kernel LCG supplies the randomness).
+* ``two_random`` — power-of-two-choices over ALL servers (no probe
+  messages; the in-VMEM LCG supplies the randomness);
+* ``ect``        — argmin expected completion time ``(load+len)/est_rate``
+  on the client-ESTIMATED rate row (stale view — observations only);
+* ``trh``        — Two Random from Top Half: two LCG draws over the
+  lightest M/2 servers of the probability ranking (paper Alg. 2).
 
-Both apply the paper's redirect-threshold guard against the round-robin
-default ``object_id mod M`` and the Eq. (1)-(3) log updates with one-hot
-*vector* writes (no scatter — TPU lanes update masked).  MLML/TRH/nLTR
-need per-window sorts and stay in the JAX engine; the kernel covers the
-per-request decision hot path.  ``ref.py`` is the bit-exact jnp oracle.
+All policies apply the paper's redirect-threshold guard against the
+round-robin default ``object_id mod M`` and the Eq. (1)-(3) updates with
+one-hot *vector* writes (no scatter — TPU lanes update masked).  TRH's
+ranking uses the sort-free stable-rank identity
+(`policy_core.prob_ranks`): rank_i = |{p_j > p_i}| + |{j<i : p_j = p_i}|,
+an O(M^2) lane-parallel compare that equals ``argsort(-probs)`` exactly.
+MLML/nLTR need per-window request sorts and stay in the JAX engine.
+``ref.py`` is the bit-exact jnp oracle; `engine.run_stream(backend=...)`
+parity is asserted in tests/test_kernels.py.
 """
 
 from __future__ import annotations
@@ -33,100 +50,249 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 import jax.experimental.pallas.tpu as pltpu
 
+from repro.core.policy_core import (LCG_A, LCG_C, N_ROWS, ROW_EST, ROW_EWMA,
+                                    ROW_LOADS, ROW_PROBS)
 
-def _sched_kernel(objs_ref, lens_ref, init_loads_ref, seed_ref,
-                  choices_ref, final_loads_ref, loads_ref, probs_ref, *,
-                  n_requests: int, n_servers: int, m_pad: int,
-                  threshold: float, lam: float, policy: str):
-    # --- init VMEM-resident table -----------------------------------------
+_BIG = 3.4e38  # padding-lane load: never selected, never drained
+
+
+def _lcg(rng):
+    return rng * jnp.uint32(LCG_A) + jnp.uint32(LCG_C)
+
+
+def _lcg_mod(rng, n: int):
+    return jax.lax.rem((rng >> jnp.uint32(8)).astype(jnp.int32)
+                       & jnp.int32(0x7FFFFFFF), n)
+
+
+def _sched_stream_kernel(objs_ref, lens_ref, valid_ref, table_ref, seed_ref,
+                         rates_ref, choices_ref, lats_ref, final_table_ref,
+                         wloads_ref, tbl, *, n_windows: int, window_size: int,
+                         n_servers: int, m_pad: int, threshold: float,
+                         lam: float, alpha: float, window_dt: float,
+                         policy: str, observe: bool, renorm: bool):
+    m = n_servers
     lane = jax.lax.broadcasted_iota(jnp.int32, (1, m_pad), 1)
-    valid = lane < n_servers
-    big = jnp.float32(3.4e38)
-    loads_ref[...] = jnp.where(valid, init_loads_ref[...], big)
-    probs_ref[...] = jnp.where(valid, 1.0 / n_servers, 0.0)
+    lv = lane < m                               # valid (non-padding) lanes
 
-    def body(i, rng):
-        obj = objs_ref[0, i]
-        ln = lens_ref[0, i]
-        loads = loads_ref[...]                      # (1, m_pad)
-        default = jax.lax.rem(obj, n_servers)
+    # --- pin the packed log tensor in VMEM scratch -------------------------
+    intab = table_ref[...]                      # (1, 4, m_pad)
+    tbl[ROW_LOADS:ROW_LOADS + 1, :] = jnp.where(lv, intab[:, ROW_LOADS, :],
+                                                _BIG)
+    tbl[ROW_PROBS:ROW_PROBS + 1, :] = jnp.where(lv, intab[:, ROW_PROBS, :],
+                                                0.0)
+    tbl[ROW_EWMA:ROW_EWMA + 1, :] = jnp.where(lv, intab[:, ROW_EWMA, :], 0.0)
+    tbl[ROW_EST:ROW_EST + 1, :] = jnp.where(lv, intab[:, ROW_EST, :], 1.0)
 
-        if policy == "minload":
-            target = jnp.argmin(loads[0, :]).astype(jnp.int32)
-            new_rng = rng
-        elif policy == "two_random":
-            r1 = rng * jnp.uint32(1664525) + jnp.uint32(1013904223)
-            r2 = r1 * jnp.uint32(1664525) + jnp.uint32(1013904223)
-            new_rng = r2
-            c1 = jax.lax.rem((r1 >> jnp.uint32(8)).astype(jnp.int32)
-                             & jnp.int32(0x7FFFFFFF), n_servers)
-            c2 = jax.lax.rem((r2 >> jnp.uint32(8)).astype(jnp.int32)
-                             & jnp.int32(0x7FFFFFFF), n_servers)
-            l1 = jnp.sum(jnp.where(lane == c1, loads, 0.0))
-            l2 = jnp.sum(jnp.where(lane == c2, loads, 0.0))
-            target = jnp.where(l1 <= l2, c1, c2).astype(jnp.int32)
-        else:  # pragma: no cover
-            raise ValueError(policy)
+    def pick(row, onehot):
+        """Extract row[onehot] without gather (one-hot masked sum)."""
+        return jnp.sum(jnp.where(onehot, row, 0.0))
 
-        l_def = jnp.sum(jnp.where(lane == default, loads, 0.0))
-        l_tgt = jnp.sum(jnp.where(lane == target, loads, 0.0))
-        choose = jnp.where(l_def - l_tgt > threshold, target,
-                           default).astype(jnp.int32)
+    def window_body(w, rng):
+        cur_rates = jnp.where(
+            lv, rates_ref[0, pl.ds(w, 1), :], 1.0)          # (1, m_pad)
 
-        onehot = lane == choose
-        # Eq. (1): l <- l' + Len
-        new_loads = jnp.where(onehot, loads + ln, loads)
-        loads_ref[...] = new_loads
-        # Eq. (2)-(3): decay chosen prob, spread the mass over the rest
-        probs = probs_ref[...]
-        p_i = jnp.sum(jnp.where(onehot, probs, 0.0))
-        l_i = jnp.sum(jnp.where(onehot, new_loads, 0.0))
-        decayed = p_i * jnp.exp(-l_i / lam)
-        delta = (p_i - decayed) / (n_servers - 1)
-        probs_ref[...] = jnp.where(
-            onehot, decayed, jnp.where(valid, probs + delta, 0.0))
+        if policy == "trh":
+            # Window-start plan: stable descending probability rank
+            # (== argsort(-probs); see policy_core.prob_ranks).  Padding
+            # lanes (p = 0, largest indices) always rank >= M.
+            p = tbl[ROW_PROBS:ROW_PROBS + 1, :]
+            pj = jnp.broadcast_to(p, (m_pad, m_pad))         # [i,j] = p_j
+            pi = jnp.broadcast_to(jnp.transpose(p), (m_pad, m_pad))
+            jpos = jax.lax.broadcasted_iota(jnp.int32, (m_pad, m_pad), 1)
+            ipos = jax.lax.broadcasted_iota(jnp.int32, (m_pad, m_pad), 0)
+            cnt = ((pj > pi) | ((pj == pi) & (jpos < ipos))).astype(jnp.int32)
+            rank = jnp.transpose(jnp.sum(cnt, axis=1, keepdims=True))
+        else:
+            rank = lane                                      # unused
 
-        choices_ref[0, pl.ds(i, 1)] = choose.reshape(1)
-        return new_rng
+        def rank_to_server(r):
+            """Server id at sorted position r (rank is a permutation)."""
+            return jnp.sum(jnp.where(rank == r, lane, 0)).astype(jnp.int32)
+
+        def req_body(j, rng):
+            i = w * window_size + j
+            obj = objs_ref[0, i]
+            ln = lens_ref[0, i]
+            v = valid_ref[0, i] != 0
+            loads = tbl[ROW_LOADS:ROW_LOADS + 1, :]
+            probs = tbl[ROW_PROBS:ROW_PROBS + 1, :]
+            est = tbl[ROW_EST:ROW_EST + 1, :]
+            default = jax.lax.rem(obj, m)
+
+            # -- target selection (policy_core decision math) --------------
+            if policy == "minload":
+                target = jnp.argmin(loads[0, :]).astype(jnp.int32)
+            elif policy == "ect":
+                scores = (loads + ln) / est
+                target = jnp.argmin(scores[0, :]).astype(jnp.int32)
+            elif policy in ("two_random", "trh"):
+                r1 = _lcg(rng)
+                r2 = _lcg(r1)
+                rng = r2
+                if policy == "two_random":
+                    c1 = _lcg_mod(r1, m)
+                    c2 = _lcg_mod(r2, m)
+                else:  # trh: two positions in the lightest half
+                    half = max(m // 2, 1)
+                    c1 = rank_to_server(_lcg_mod(r1, half))
+                    c2 = rank_to_server(_lcg_mod(r2, half))
+                l1 = pick(loads, lane == c1)
+                l2 = pick(loads, lane == c2)
+                target = jnp.where(l1 <= l2, c1, c2).astype(jnp.int32)
+            else:  # pragma: no cover
+                raise ValueError(policy)
+
+            # -- redirect-threshold guard (§3.4.1) -------------------------
+            l_def = pick(loads, lane == default)
+            l_tgt = pick(loads, lane == target)
+            if policy == "ect":
+                # rate-aware benefit in expected seconds, on EST rates
+                r_def = pick(est, lane == default)
+                r_tgt = pick(est, lane == target)
+                benefit = (l_def + ln) / r_def - (l_tgt + ln) / r_tgt
+            else:
+                benefit = l_def - l_tgt
+            choose = jnp.where(benefit > threshold, target,
+                               default).astype(jnp.int32)
+
+            # -- Eq. (1)-(3) one-hot updates (masked on padding rows) ------
+            onehot = lane == choose
+            upd = onehot & v
+            new_loads = jnp.where(upd, loads + ln, loads)    # Eq. (1)
+            tbl[ROW_LOADS:ROW_LOADS + 1, :] = new_loads
+            p_i = pick(probs, onehot)
+            l_i = pick(new_loads, onehot)
+            decayed = p_i * jnp.exp(-l_i / lam)              # Eq. (2)
+            delta = (p_i - decayed) / (m - 1)                # Eq. (3)
+            new_probs = jnp.where(onehot, decayed,
+                                  jnp.where(lv, probs + delta, 0.0))
+            tbl[ROW_PROBS:ROW_PROBS + 1, :] = jnp.where(v, new_probs, probs)
+
+            # -- estimated completion latency + completion feedback --------
+            l_after = pick(new_loads, onehot)
+            rate_c = pick(cur_rates, onehot)                 # TRUE rate
+            lat = l_after / jnp.maximum(rate_c, 1e-6)
+            choices_ref[0, pl.ds(i, 1)] = choose.reshape(1)
+            lats_ref[0, pl.ds(i, 1)] = jnp.where(v, lat, 0.0).reshape(1)
+            if observe:
+                # effective MB/s this request will see -> ewma row; est
+                # row re-derived from observations ONLY (stale view).
+                mbps = ln / jnp.maximum(lat, 1e-9)
+                ewma = tbl[ROW_EWMA:ROW_EWMA + 1, :]
+                old = pick(ewma, onehot)
+                new = jnp.where(old == 0.0, mbps,
+                                (1 - alpha) * old + alpha * mbps)
+                new_ewma = jnp.where(upd, new, ewma)
+                tbl[ROW_EWMA:ROW_EWMA + 1, :] = new_ewma
+                dflt = jnp.maximum(jnp.max(new_ewma), 1.0)
+                tbl[ROW_EST:ROW_EST + 1, :] = jnp.where(new_ewma > 0,
+                                                        new_ewma, dflt)
+            return rng
+
+        rng = jax.lax.fori_loop(0, window_size, req_body, rng, unroll=False)
+
+        # -- window close: renormalize probs, drain queues (advance_time) --
+        if renorm:
+            p = jnp.clip(tbl[ROW_PROBS:ROW_PROBS + 1, :], 0.0)
+            tbl[ROW_PROBS:ROW_PROBS + 1, :] = p / jnp.sum(p)
+        if window_dt:
+            loads = tbl[ROW_LOADS:ROW_LOADS + 1, :]
+            drained = jnp.maximum(
+                loads - jnp.maximum(cur_rates, 1e-6) * window_dt, 0.0)
+            tbl[ROW_LOADS:ROW_LOADS + 1, :] = jnp.where(lv, drained, _BIG)
+        wloads_ref[0, pl.ds(w, 1), :] = jnp.where(
+            lv, tbl[ROW_LOADS:ROW_LOADS + 1, :], 0.0)
+        return rng
 
     seed = seed_ref[0, 0].astype(jnp.uint32)
-    jax.lax.fori_loop(0, n_requests, body, seed, unroll=False)
-    final_loads_ref[...] = jnp.where(valid, loads_ref[...], 0.0)
+    jax.lax.fori_loop(0, n_windows, window_body, seed, unroll=False)
+    out = tbl[...]
+    zero_pad = jnp.broadcast_to(~lv, (N_ROWS, m_pad))
+    final_table_ref[...] = jnp.where(zero_pad, 0.0, out)[None]
 
 
-def sched_select_call(object_ids: jax.Array, lengths: jax.Array,
-                      init_loads: jax.Array, seeds: jax.Array, *,
-                      n_servers: int, threshold: float, lam: float,
-                      policy: str, interpret: bool = False):
-    """object_ids/lengths: (C, N); init_loads: (C, M_pad); seeds: (C, 1).
+def sched_stream_call(object_ids: jax.Array, lengths: jax.Array,
+                      valid: jax.Array, tables: jax.Array, seeds: jax.Array,
+                      win_rates: jax.Array, *, n_servers: int,
+                      window_size: int, threshold: float, lam: float,
+                      alpha: float, window_dt: float, policy: str,
+                      observe: bool, renorm: bool, interpret: bool = False):
+    """Temporal stream kernel over C independent clients.
 
-    Returns (choices (C, N) int32, final_loads (C, M_pad) f32).
+    object_ids/lengths/valid: (C, N) with N = W * window_size;
+    tables: (C, 4, M_pad) packed log tensors; seeds: (C, 1) uint32;
+    win_rates: (C, W, M_pad) TRUE service rates per window.
+
+    Returns (choices (C, N) int32, latencies (C, N) f32,
+    final_tables (C, 4, M_pad) f32, window_loads (C, W, M_pad) f32).
     """
     c, n = object_ids.shape
-    m_pad = init_loads.shape[1]
+    m_pad = tables.shape[-1]
+    n_win = win_rates.shape[1]
+    assert n == n_win * window_size, (n, n_win, window_size)
     kernel = functools.partial(
-        _sched_kernel, n_requests=n, n_servers=n_servers, m_pad=m_pad,
-        threshold=threshold, lam=lam, policy=policy)
+        _sched_stream_kernel, n_windows=n_win, window_size=window_size,
+        n_servers=n_servers, m_pad=m_pad, threshold=threshold, lam=lam,
+        alpha=alpha, window_dt=window_dt, policy=policy, observe=observe,
+        renorm=renorm)
     return pl.pallas_call(
         kernel,
         grid=(c,),
         in_specs=[
             pl.BlockSpec((1, n), lambda i: (i, 0)),
             pl.BlockSpec((1, n), lambda i: (i, 0)),
-            pl.BlockSpec((1, m_pad), lambda i: (i, 0)),
+            pl.BlockSpec((1, n), lambda i: (i, 0)),
+            pl.BlockSpec((1, N_ROWS, m_pad), lambda i: (i, 0, 0)),
             pl.BlockSpec((1, 1), lambda i: (i, 0)),
+            pl.BlockSpec((1, n_win, m_pad), lambda i: (i, 0, 0)),
         ],
         out_specs=[
             pl.BlockSpec((1, n), lambda i: (i, 0)),
-            pl.BlockSpec((1, m_pad), lambda i: (i, 0)),
+            pl.BlockSpec((1, n), lambda i: (i, 0)),
+            pl.BlockSpec((1, N_ROWS, m_pad), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, n_win, m_pad), lambda i: (i, 0, 0)),
         ],
         out_shape=[
             jax.ShapeDtypeStruct((c, n), jnp.int32),
-            jax.ShapeDtypeStruct((c, m_pad), jnp.float32),
+            jax.ShapeDtypeStruct((c, n), jnp.float32),
+            jax.ShapeDtypeStruct((c, N_ROWS, m_pad), jnp.float32),
+            jax.ShapeDtypeStruct((c, n_win, m_pad), jnp.float32),
         ],
         scratch_shapes=[
-            pltpu.VMEM((1, m_pad), jnp.float32),   # loads table
-            pltpu.VMEM((1, m_pad), jnp.float32),   # probs table
+            pltpu.VMEM((N_ROWS, m_pad), jnp.float32),   # the packed log
         ],
         interpret=interpret,
-    )(object_ids, lengths, init_loads, seeds)
+    )(object_ids, lengths, valid, tables, seeds, win_rates)
+
+
+def sched_select_call(object_ids: jax.Array, lengths: jax.Array,
+                      init_loads: jax.Array, seeds: jax.Array, *,
+                      n_servers: int, threshold: float, lam: float,
+                      policy: str, interpret: bool = False):
+    """Legacy single-window entry (paper's static-load model).
+
+    object_ids/lengths: (C, N); init_loads: (C, M_pad); seeds: (C, 1).
+    Returns (choices (C, N) int32, final_loads (C, M_pad) f32).  This is
+    the temporal kernel degenerated to one window: uniform probability
+    prior, no observations, no drain, no renormalization — bit-identical
+    to the pre-refactor kernel.
+    """
+    c, n = object_ids.shape
+    m_pad = init_loads.shape[1]
+    m = n_servers
+    probs = jnp.full((c, m_pad), 1.0 / m, jnp.float32)
+    tables = jnp.stack([
+        init_loads.astype(jnp.float32),
+        probs,
+        jnp.zeros((c, m_pad), jnp.float32),
+        jnp.ones((c, m_pad), jnp.float32),
+    ], axis=1)                                    # (C, 4, m_pad)
+    valid = jnp.ones((c, n), jnp.int32)
+    rates = jnp.ones((c, 1, m_pad), jnp.float32)  # one window, unit rates
+    choices, _, final_tables, _ = sched_stream_call(
+        object_ids, lengths, valid, tables, seeds, rates, n_servers=m,
+        window_size=n, threshold=threshold, lam=lam, alpha=0.25,
+        window_dt=0.0, policy=policy, observe=False, renorm=False,
+        interpret=interpret)
+    return choices, final_tables[:, ROW_LOADS, :]

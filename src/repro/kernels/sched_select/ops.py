@@ -1,4 +1,14 @@
-"""Jit'd wrapper for the sched_select kernel (auto-interpret on CPU)."""
+"""Jit'd wrappers for the sched_select kernels (auto-interpret on CPU).
+
+Two entry points:
+
+* :func:`sched_select` — the legacy single-window static-load form
+  (minload / two_random), kept bit-identical to the seed kernel;
+* :func:`sched_stream` — the temporal stream form: a whole
+  ``engine.run_stream`` trace (windows, drain, completion feedback) as
+  ONE ``pallas_call`` over the packed ``(4, M)`` log tensor.  This is
+  what ``engine.run_stream(backend="kernel")`` dispatches to.
+"""
 
 from __future__ import annotations
 
@@ -8,13 +18,20 @@ from typing import Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.sched_select.kernel import sched_select_call
+from repro.kernels.sched_select.kernel import (sched_select_call,
+                                               sched_stream_call)
 
-POLICIES = ("minload", "two_random")
+POLICIES = ("minload", "two_random", "ect", "trh")
+# policies available through the legacy static entry point
+STATIC_POLICIES = ("minload", "two_random")
 
 
 def _pad_servers(m: int) -> int:
     return max(-(-m // 128) * 128, 128)
+
+
+def _auto_interpret(interpret: Optional[bool]) -> bool:
+    return jax.default_backend() == "cpu" if interpret is None else interpret
 
 
 @functools.partial(jax.jit, static_argnames=("n_servers", "threshold",
@@ -25,16 +42,15 @@ def sched_select(object_ids: jax.Array, lengths: jax.Array,
                  policy: str = "minload",
                  interpret: Optional[bool] = None
                  ) -> Tuple[jax.Array, jax.Array]:
-    """Schedule request streams for C independent clients.
+    """Schedule request streams for C independent clients (static model).
 
     object_ids/lengths: (C, N); init_loads: (C, M) true server loads known
     to each client's log; seeds: (C,) uint32.  Returns (choices (C, N),
     final_loads (C, M)).
     """
-    if policy not in POLICIES:
-        raise ValueError(f"kernel policy must be one of {POLICIES}")
-    if interpret is None:
-        interpret = jax.default_backend() == "cpu"
+    if policy not in STATIC_POLICIES:
+        raise ValueError(f"kernel policy must be one of {STATIC_POLICIES}")
+    interpret = _auto_interpret(interpret)
     c, n = object_ids.shape
     m = init_loads.shape[1]
     m_pad = _pad_servers(m)
@@ -46,3 +62,59 @@ def sched_select(object_ids: jax.Array, lengths: jax.Array,
         n_servers=n_servers, threshold=threshold, lam=lam, policy=policy,
         interpret=interpret)
     return choices, final_loads[:, :m]
+
+
+@functools.partial(jax.jit, static_argnames=("n_servers", "window_size",
+                                             "threshold", "lam", "alpha",
+                                             "window_dt", "policy",
+                                             "observe", "renorm",
+                                             "interpret"))
+def sched_stream(object_ids: jax.Array, lengths: jax.Array,
+                 valid: jax.Array, table: jax.Array, seed: jax.Array,
+                 win_rates: jax.Array, *, n_servers: int, window_size: int,
+                 threshold: float = 0.0, lam: float = 32.0,
+                 alpha: float = 0.25, window_dt: float = 0.0,
+                 policy: str = "ect", observe: bool = True,
+                 renorm: bool = True, interpret: Optional[bool] = None
+                 ) -> Tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
+    """Temporal kernel: one client's whole windowed stream in VMEM.
+
+    object_ids/lengths/valid: (N,) with N = W * window_size (padding rows
+    ``valid == False``); table: the (4, M) packed log tensor
+    (`SchedState.log`); seed: () uint32 LCG state; win_rates: (W, M) TRUE
+    service rates at each window open (drain + latency reporting — the
+    decision path only ever reads the table's est row).
+
+    Returns (choices (N,), latencies (N,), final_table (4, M),
+    window_loads (W, M) post-drain snapshots).
+
+    Batched form: pass (C, N) / (C, 4, M) / (C,) / (C, W, M) arrays and
+    every output gains the leading client axis (grid = clients).
+    """
+    if policy not in POLICIES:
+        raise ValueError(f"kernel policy must be one of {POLICIES}")
+    interpret = _auto_interpret(interpret)
+    single = object_ids.ndim == 1
+    if single:
+        object_ids, lengths, valid = (object_ids[None], lengths[None],
+                                      valid[None])
+        table, seed, win_rates = table[None], seed[None], win_rates[None]
+    c, n = object_ids.shape
+    m = table.shape[-1]
+    n_win = win_rates.shape[1]
+    m_pad = _pad_servers(m)
+    pad = ((0, 0), (0, 0), (0, m_pad - m))
+    tables_p = jnp.pad(table.astype(jnp.float32), pad)
+    rates_p = jnp.pad(win_rates.astype(jnp.float32), pad)
+    choices, lats, ftab, wloads = sched_stream_call(
+        object_ids.astype(jnp.int32), lengths.astype(jnp.float32),
+        valid.astype(jnp.int32), tables_p,
+        seed.reshape(c, 1).astype(jnp.uint32), rates_p,
+        n_servers=n_servers, window_size=window_size, threshold=threshold,
+        lam=lam, alpha=alpha, window_dt=window_dt, policy=policy,
+        observe=observe, renorm=renorm, interpret=interpret)
+    ftab = ftab[:, :, :m]
+    wloads = wloads[:, :, :m]
+    if single:
+        return choices[0], lats[0], ftab[0], wloads[0]
+    return choices, lats, ftab, wloads

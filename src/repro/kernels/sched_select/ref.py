@@ -1,8 +1,10 @@
-"""Pure-jnp oracle for the sched_select kernel (bit-identical math).
+"""Pure-jnp oracles for the sched_select kernels (bit-identical math).
 
 Replays the same LCG, selection, threshold guard and Eq. (1)-(3) updates
 with a ``lax.scan`` carry — the exact state-passing formulation the kernel
-replaces with VMEM-resident streaming.
+replaces with VMEM-resident streaming.  ``sched_stream_ref`` mirrors the
+temporal kernel (windows, drain, completion feedback, TRH rank plan) on
+the packed (4, M) log tensor of `repro.core.policy_core`.
 """
 
 from __future__ import annotations
@@ -12,6 +14,9 @@ from typing import Tuple
 
 import jax
 import jax.numpy as jnp
+
+from repro.core.policy_core import (ROW_EST, ROW_EWMA, ROW_LOADS, ROW_PROBS,
+                                    prob_ranks, renormalize_probs)
 
 
 def _lcg(rng: jax.Array) -> jax.Array:
@@ -65,3 +70,106 @@ def sched_select_ref(object_ids: jax.Array, lengths: jax.Array,
         step, (loads0, probs0, seed.astype(jnp.uint32)),
         (object_ids, lengths))
     return choices, jnp.where(valid, loads, 0.0)
+
+
+def sched_stream_ref(object_ids: jax.Array, lengths: jax.Array,
+                     valid: jax.Array, table: jax.Array, seed: jax.Array,
+                     win_rates: jax.Array, *, n_servers: int,
+                     window_size: int, threshold: float, lam: float,
+                     alpha: float = 0.25, window_dt: float = 0.0,
+                     policy: str = "ect", observe: bool = True,
+                     renorm: bool = True
+                     ) -> Tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
+    """Single-client oracle for the temporal stream kernel.
+
+    Same signature semantics as ``ops.sched_stream`` (single-client form):
+    object_ids/lengths/valid (N,), table (4, M) packed log tensor, seed ()
+    uint32, win_rates (W, M).  Scan-carried replay of the identical
+    per-request decision math, per-window renormalization and drain.
+    """
+    m = n_servers
+    n_win = win_rates.shape[0]
+    obj_w = object_ids.reshape(n_win, window_size)
+    len_w = lengths.reshape(n_win, window_size)
+    val_w = valid.reshape(n_win, window_size)
+
+    loads0 = table[ROW_LOADS].astype(jnp.float32)
+    probs0 = table[ROW_PROBS].astype(jnp.float32)
+    ewma0 = table[ROW_EWMA].astype(jnp.float32)
+    est0 = table[ROW_EST].astype(jnp.float32)
+    lane = jnp.arange(m)
+
+    def window(carry, xs):
+        loads, probs, ewma, est, rng = carry
+        obj, lens, val, rates = xs
+        # window-start plan: stable descending probability ranking
+        ranks = prob_ranks(probs)                    # rank of each server
+        order = jnp.argsort(ranks)                   # server at position k
+
+        def step(c, x):
+            loads, probs, ewma, est, rng = c
+            o, ln, v = x
+            default = jax.lax.rem(o, m)
+            if policy == "minload":
+                target = jnp.argmin(loads).astype(jnp.int32)
+            elif policy == "ect":
+                target = jnp.argmin((loads + ln) / est).astype(jnp.int32)
+            elif policy in ("two_random", "trh"):
+                r1 = _lcg(rng)
+                r2 = _lcg(r1)
+                rng = r2
+                if policy == "two_random":
+                    c1, c2 = _rand_server(r1, m), _rand_server(r2, m)
+                else:
+                    half = max(m // 2, 1)
+                    c1 = order[_rand_server(r1, half)].astype(jnp.int32)
+                    c2 = order[_rand_server(r2, half)].astype(jnp.int32)
+                target = jnp.where(loads[c1] <= loads[c2], c1,
+                                   c2).astype(jnp.int32)
+            else:
+                raise ValueError(policy)
+            if policy == "ect":
+                benefit = ((loads[default] + ln) / est[default]
+                           - (loads[target] + ln) / est[target])
+            else:
+                benefit = loads[default] - loads[target]
+            choose = jnp.where(benefit > threshold, target,
+                               default).astype(jnp.int32)
+            onehot = lane == choose
+            upd = onehot & v
+            new_loads = jnp.where(upd, loads + ln, loads)
+            # one-hot masked sums, exactly as the kernel extracts lanes
+            p_i = jnp.sum(jnp.where(onehot, probs, 0.0))
+            l_i = jnp.sum(jnp.where(onehot, new_loads, 0.0))
+            decayed = p_i * jnp.exp(-l_i / lam)
+            delta = (p_i - decayed) / (m - 1)
+            new_probs = jnp.where(onehot, decayed, probs + delta)
+            probs = jnp.where(v, new_probs, probs)
+            loads = new_loads
+            lat = loads[choose] / jnp.maximum(rates[choose], 1e-6)
+            if observe:
+                mbps = ln / jnp.maximum(lat, 1e-9)
+                old = ewma[choose]
+                new = jnp.where(old == 0.0, mbps,
+                                (1 - alpha) * old + alpha * mbps)
+                ewma = jnp.where(upd, jnp.where(onehot, new, ewma), ewma)
+                dflt = jnp.maximum(jnp.max(ewma), 1.0)
+                est = jnp.where(v, jnp.where(ewma > 0, ewma, dflt), est)
+            return (loads, probs, ewma, est, rng), \
+                (choose, jnp.where(v, lat, 0.0))
+
+        (loads, probs, ewma, est, rng), (ch, lt) = jax.lax.scan(
+            step, (loads, probs, ewma, est, rng), (obj, lens, val))
+        if renorm:
+            # shared core: pads the reduction to the kernel's lane width
+            probs = renormalize_probs(probs)
+        if window_dt:
+            loads = jnp.maximum(
+                loads - jnp.maximum(rates, 1e-6) * window_dt, 0.0)
+        return (loads, probs, ewma, est, rng), (ch, lt, loads)
+
+    carry0 = (loads0, probs0, ewma0, est0, seed.astype(jnp.uint32))
+    (loads, probs, ewma, est, _), (choices, lats, wloads) = jax.lax.scan(
+        window, carry0, (obj_w, len_w, val_w, win_rates.astype(jnp.float32)))
+    final = jnp.stack([loads, probs, ewma, est])
+    return choices.reshape(-1), lats.reshape(-1), final, wloads

@@ -122,3 +122,141 @@ def test_sched_select_conserves_bytes():
     ch, fl = sched_select(objs, lens, init, jnp.asarray([9], jnp.uint32),
                           n_servers=m, policy="two_random")
     assert float(fl.sum()) == pytest.approx(n * 2.5, rel=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# Temporal stream kernel: kernel == ref == engine (bit-exact, interpret)
+# ---------------------------------------------------------------------------
+
+from repro.core import engine, statlog  # noqa: E402
+from repro.core.engine import ClusterTrace, Workload  # noqa: E402
+from repro.core.policies import PolicyConfig  # noqa: E402
+from repro.core.statlog import LogConfig  # noqa: E402
+from repro.kernels.sched_select import sched_stream, sched_stream_ref  # noqa: E402
+
+
+def _transient_trace(m, base=200.0, slow_ids=(3, 5), factor=8.0,
+                     onset=0.05, recover=0.15):
+    slow = np.full(m, base, np.float32)
+    slow[list(slow_ids)] = base / factor
+    return ClusterTrace(
+        times=jnp.asarray([0.0, onset, recover], jnp.float32),
+        rates=jnp.asarray(np.stack([np.full(m, base, np.float32), slow,
+                                    np.full(m, base, np.float32)])))
+
+
+def _stream_case(m, r, seed=0):
+    rng = np.random.default_rng(seed)
+    return Workload(jnp.asarray(rng.integers(0, 8 * m, r), jnp.int32),
+                    jnp.asarray(rng.uniform(1.0, 20.0, r), jnp.float32),
+                    jnp.ones((r,), bool))
+
+
+STREAM_CASES = [
+    # (M, R, window, policy, threshold) — M deliberately NOT 128-aligned;
+    # R=250/window=60 exercises a padded (partially invalid) last window.
+    (100, 240, 60, "ect", 0.05),
+    (100, 240, 60, "trh", 4.0),
+    (37, 250, 60, "ect", 0.05),
+    (37, 250, 60, "trh", 4.0),
+    (130, 120, 40, "ect", 0.05),
+    (3, 64, 16, "trh", 0.0),
+]
+
+
+@pytest.mark.parametrize("case", STREAM_CASES)
+def test_stream_kernel_engine_parity_transient(case):
+    """ect/trh run in-kernel with per-window drain and match the JAX
+    engine BIT-EXACTLY over a transient-straggler trace (grouped steps,
+    completion feedback, per-window renorm — the whole temporal path)."""
+    m, r, win, policy, thr = case
+    trace = _transient_trace(m, slow_ids=(min(3, m - 1),))
+    cfg = LogConfig(n_servers=m, lam=50.0)
+    state = statlog.init_state(cfg, rates=trace.rates[0])
+    work = _stream_case(m, r, seed=hash(case) % 2**31)
+    pol = PolicyConfig(name=policy, threshold=thr,
+                       rng="lcg" if policy == "trh" else "jax")
+    a = engine.run_stream(state, work, jax.random.key(2), policy=pol,
+                          log_cfg=cfg, window_size=win, trace=trace,
+                          window_dt=0.04, backend="jax")
+    b = engine.run_stream(state, work, jax.random.key(2), policy=pol,
+                          log_cfg=cfg, window_size=win, trace=trace,
+                          window_dt=0.04, backend="kernel")
+    for f in ("chosen", "latencies", "redirected", "window_loads"):
+        np.testing.assert_array_equal(np.asarray(getattr(a, f)),
+                                      np.asarray(getattr(b, f)), err_msg=f)
+    np.testing.assert_array_equal(np.asarray(a.state.log),
+                                  np.asarray(b.state.log))
+    np.testing.assert_array_equal(np.asarray(a.state.n_assigned),
+                                  np.asarray(b.state.n_assigned))
+
+
+@pytest.mark.parametrize("policy", ["ect", "trh", "minload", "two_random"])
+def test_stream_kernel_matches_ref_oracle(policy):
+    """Kernel == scan oracle on the packed table, padded windows, odd M."""
+    m, n_win, win = 37, 4, 32
+    rng = np.random.default_rng(7)
+    n = n_win * win
+    obj = jnp.asarray(rng.integers(0, 500, n), jnp.int32)
+    lens = jnp.asarray(rng.uniform(1, 8, n), jnp.float32)
+    valid = jnp.asarray(rng.random(n) > 0.2)
+    rates = jnp.asarray(rng.uniform(50, 300, (n_win, m)), jnp.float32)
+    state = statlog.init_state(LogConfig(n_servers=m, lam=20.0))
+    seed = jnp.uint32(12345)
+    kw = dict(n_servers=m, window_size=win, threshold=2.0, lam=20.0,
+              window_dt=0.01, policy=policy, observe=True, renorm=True)
+    ch, lat, tab, wl = sched_stream(obj, lens, valid, state.log, seed,
+                                    rates, **kw)
+    rch, rlat, rtab, rwl = sched_stream_ref(obj, lens, valid, state.log,
+                                            seed, rates, **kw)
+    np.testing.assert_array_equal(np.asarray(ch), np.asarray(rch))
+    np.testing.assert_array_equal(np.asarray(lat), np.asarray(rlat))
+    np.testing.assert_array_equal(np.asarray(tab), np.asarray(rtab))
+    np.testing.assert_array_equal(np.asarray(wl), np.asarray(rwl))
+
+
+def test_stream_kernel_degenerate_static_matches_legacy_minload():
+    """With a degenerate static setup (one window, unit rates, no drain,
+    no feedback, no renorm) the stream kernel reproduces the legacy
+    static kernel bit-for-bit."""
+    c, n, m = 2, 50, 24
+    keys = jax.random.split(jax.random.key(5), 3)
+    objs = jax.random.randint(keys[0], (c, n), 0, 999, dtype=jnp.int32)
+    lens = jax.random.uniform(keys[1], (c, n), minval=1.0, maxval=30.0)
+    init = jax.random.uniform(keys[2], (c, m), maxval=50.0)
+    seeds = jnp.arange(c, dtype=jnp.uint32) * 7 + 3
+    for policy in ("minload", "two_random"):
+        ch_old, fl_old = sched_select(objs, lens, init, seeds, n_servers=m,
+                                      threshold=2.0, policy=policy)
+        for i in range(c):
+            table = jnp.stack([init[i], jnp.full((m,), 1.0 / m),
+                               jnp.zeros((m,)), jnp.ones((m,))])
+            ch, _, tab, _ = sched_stream(
+                objs[i], lens[i], jnp.ones((n,), bool), table, seeds[i],
+                jnp.ones((1, m), jnp.float32), n_servers=m, window_size=n,
+                threshold=2.0, lam=32.0, window_dt=0.0, policy=policy,
+                observe=False, renorm=False)
+            np.testing.assert_array_equal(np.asarray(ch_old[i]),
+                                          np.asarray(ch))
+            np.testing.assert_allclose(np.asarray(fl_old[i]),
+                                       np.asarray(tab[0]), atol=1e-3)
+
+
+def test_stream_kernel_avoids_transient_straggler():
+    """Behavioural check: during the slow phase of a transient trace, ECT
+    (kernel backend) steers work away from the straggler."""
+    m, r, win = 24, 360, 60
+    trace = _transient_trace(m, slow_ids=(5,), onset=0.02, recover=0.5,
+                             factor=16.0)
+    cfg = LogConfig(n_servers=m, lam=50.0)
+    state = statlog.init_state(cfg, rates=trace.rates[0])
+    work = _stream_case(m, r, seed=11)
+    res = engine.run_stream(state, work, jax.random.key(0),
+                            policy=PolicyConfig(name="ect", threshold=0.05),
+                            log_cfg=cfg, window_size=win, trace=trace,
+                            window_dt=0.1, backend="kernel")
+    chosen = np.asarray(res.chosen)
+    # slow phase covers windows 1..2 (onset 2% .. recovery 50% of 0.6s)
+    mid = chosen[win:3 * win]
+    frac_mid = float((mid == 5).sum()) / len(mid)
+    assert frac_mid < 1.0 / m, frac_mid  # well under the uniform share

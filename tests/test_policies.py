@@ -98,9 +98,13 @@ def test_ect_uses_observed_rates():
     m = 3
     cfg = LogConfig(n_servers=m)
     state = statlog.init_state(cfg)
-    # same loads everywhere, but server 2 observed 10x faster
-    state = state._replace(loads=jnp.asarray([10.0, 10.0, 10.0]),
-                           ewma_lat=jnp.asarray([1.0, 1.0, 10.0]))
+    # same loads everywhere, but server 2 observed 10x faster.  ECT reads
+    # the est_rates row, which only observations write (stale-view
+    # contract) — so seed it through observe_completion.
+    state = state.with_rows(loads=jnp.asarray([10.0, 10.0, 10.0]))
+    for srv, rate in ((0, 1.0), (1, 1.0), (2, 10.0)):
+        state = statlog.observe_completion(state, jnp.asarray(srv),
+                                           jnp.asarray(rate), cfg)
     work = Workload(jnp.asarray([0], jnp.int32), jnp.asarray([1.0]),
                     jnp.ones((1,), bool))
     res = engine.run_window(state, work, jax.random.key(0),
@@ -202,6 +206,96 @@ def test_ect_completion_feedback_parity_jax_vs_host():
     for s in (2, 5):
         assert ewma[s] <= base / 8.0 + 1e-3
         np.testing.assert_allclose(ewma[s], host_ewma[s], rtol=1e-3)
+
+
+def test_probe_accounting_derives_from_probe_choices():
+    """Satellite fix: engine probe accounting and the host twin's counter
+    both derive from PolicyConfig.probe_choices — no more hard-coded 2."""
+    from repro.core.policies import PROBES_PER_REQUEST
+    n, m = 10, 8
+    obj = list(range(n))            # unique objects: no grouping merges
+    lens = [1.0] * n
+    for k in (2, 3, 5):
+        pol = PolicyConfig(name="two_choice", probe_choices=k)
+        assert pol.probes_per_request == k
+        res = _run_jax("two_choice", obj, lens, m=m)._replace()  # warm
+        res = engine.run_window(
+            statlog.init_state(LogConfig(n_servers=m)),
+            Workload(jnp.asarray(obj, jnp.int32),
+                     jnp.asarray(lens, jnp.float32), jnp.ones((n,), bool)),
+            jax.random.key(0), policy=pol,
+            log_cfg=LogConfig(n_servers=m))
+        assert int(res.probe_msgs) == n * k
+        host = HostScheduler(pol, HostStatLog(LogConfig(n_servers=m)))
+        host.begin_window(lens)
+        for o, ln in zip(obj, lens):
+            host.schedule(o, ln)
+        assert host.probe_messages == n * k
+    # log-assisted policies never probe, whatever probe_choices says
+    for name in ("rr", "mlml", "trh", "nltr", "ect"):
+        assert PolicyConfig(name=name,
+                            probe_choices=7).probes_per_request == 0
+        assert PROBES_PER_REQUEST[name] == 0
+    # the paper-default config still matches the documented table
+    assert PolicyConfig(name="two_choice").probes_per_request == \
+        PROBES_PER_REQUEST["two_choice"]
+
+
+def test_est_row_lags_true_rate_and_layers_agree():
+    """Acceptance: when a straggler's TRUE rate drops mid-stream, the
+    client-estimated row lags it (stale by construction), and the kernel,
+    engine, and host client all rank servers identically on est_rates."""
+    from repro.core.engine import ClusterTrace
+    from repro.io.client import IOClient, IOClientConfig
+    from repro.io.objectstore import SimulatedCluster
+    from repro.io import striping
+
+    m, base, slow_f = 8, 100.0, 10.0
+    strag = 2
+    slow = np.full(m, base, np.float32)
+    slow[strag] = base / slow_f
+    # rate drops a quarter of the way in and STAYS slow
+    trace = ClusterTrace(times=jnp.asarray([0.0, 1.0], jnp.float32),
+                         rates=jnp.asarray(np.stack(
+                             [np.full(m, base, np.float32), slow])))
+    log_cfg = LogConfig(n_servers=m, lam=64.0)
+    rng = np.random.default_rng(3)
+    n = 64
+    lens = rng.integers(2, 9, n).astype(np.float64)
+    obj = [striping.object_id_for(f, 0) % m for f in range(n)]
+    work = Workload(jnp.asarray(obj, jnp.int32),
+                    jnp.asarray(lens, jnp.float32), jnp.ones((n,), bool))
+    pol = PolicyConfig(name="ect", threshold=0.01)
+    state = statlog.init_state(log_cfg, rates=trace.rates[0])
+    kw = dict(policy=pol, log_cfg=log_cfg, window_size=8,
+              group_steps=False, trace=trace, window_dt=0.5)
+    eng = engine.run_stream(state, work, jax.random.key(0), backend="jax",
+                            **kw)
+    ker = engine.run_stream(state, work, jax.random.key(0),
+                            backend="kernel", **kw)
+
+    # host path: IOClient over the queueing cluster on the same trace
+    sim = SimulatedCluster(m, base_rate_mb_s=base, trace=trace)
+    cli = IOClient(sim, IOClientConfig(policy=pol,
+                                       stripe_size=16 * striping.MB,
+                                       lam_mb=64.0))
+    for f in range(n):
+        cli.write_file(f, size_mb=float(lens[f]))
+        sim.advance_time(0.0625)            # writes spread over the trace
+
+    true_rate = base / slow_f
+    for est in (np.asarray(eng.state.est_rates),
+                np.asarray(ker.state.est_rates),
+                cli.log.est_rates):
+        # the estimated row LAGS the true drop: below the healthy rate
+        # (the drop is visible) but still above the true slow rate (the
+        # EWMA hasn't fully converged — stale by construction)...
+        assert true_rate < est[strag] < base, est
+        # ...and every layer ranks the straggler slowest on est_rates
+        assert int(np.argmin(est)) == strag, est
+    # engine and kernel see BIT-IDENTICAL estimated rows
+    np.testing.assert_array_equal(np.asarray(eng.state.est_rates),
+                                  np.asarray(ker.state.est_rates))
 
 
 def test_masking_failed_servers():
