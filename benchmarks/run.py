@@ -5,9 +5,12 @@
 ``--full`` runs the paper's exact scale (100 OSS / 2,000 requests / 100
 trials) and adds the full-scale temporal scenario sweep; the default is a
 faster configuration with identical structure.  ``--trajectory`` skips
-the benchmarks and renders the BENCH_sched.json history instead (stdout
-delta table + figure).  The roofline section formats whatever
-``dryrun_results.json`` the dry-run has produced so far.
+the benchmarks and renders the BENCH_sched.json history instead: the
+phase-time/p99 delta table, the scheduling-throughput table
+(``engine_req_s`` / ``kernel_req_s`` / ``kernel_batch_req_s``, flagging
+runs where a kernel path fell behind the engine) and a two-panel
+figure.  The roofline section formats whatever ``dryrun_results.json``
+the dry-run has produced so far.
 """
 
 from __future__ import annotations

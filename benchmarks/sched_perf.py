@@ -110,6 +110,23 @@ def _transient_results(n_trials: int) -> dict:
                            n_trials)["transient"]
 
 
+def _median_time(run, reps: int):
+    """Median wall time of ``reps`` timed calls, warmup (compile) run
+    excluded — single-shot numbers flipped kernel/engine winners between
+    benchmark runs, so every tracked throughput is a median.  Returns
+    ``(median_s, warmup_result)`` so callers needing the outputs (e.g.
+    for bit-exactness checks) don't pay for an extra untimed run."""
+    import jax
+    warm = run()
+    jax.block_until_ready(warm)                # compile + warm, untimed
+    times = []
+    for _ in range(max(reps, 1)):
+        t0 = time.time()
+        jax.block_until_ready(run())
+        times.append(time.time() - t0)
+    return float(np.median(times)), warm
+
+
 @functools.lru_cache(maxsize=None)   # run_all + emit_bench_point share it
 def kernel_vs_engine_throughput(n_servers: int = 100,
                                 n_requests: int = 2000,
@@ -119,6 +136,8 @@ def kernel_vs_engine_throughput(n_servers: int = 100,
     kernel (whole stream = ONE pallas_call, packed log tensor in VMEM)
     vs the lax.scan JAX engine, on the 100-OSS transient scenario.
 
+    Reported wall times are the MEDIAN of ``reps`` runs (warmup
+    excluded); the repeat count rides along in the emitted bench point.
     On CPU the kernel runs in interpret mode, so the absolute numbers are
     a lower bound — the structural point is that both backends schedule
     the SAME trace from the same decision table (bit-exact for ect,
@@ -126,7 +145,6 @@ def kernel_vs_engine_throughput(n_servers: int = 100,
     BENCH_sched.json.
     """
     import jax
-    import numpy as np
     from repro.core import engine, simulate, statlog
     from repro.core.simulate import ScenarioConfig, SimConfig
 
@@ -143,31 +161,85 @@ def kernel_vs_engine_throughput(n_servers: int = 100,
     state = statlog.init_state(log_cfg, rates=trace.rates[0])
 
     out: Dict[str, float] = {"n_servers": n_servers,
-                             "n_requests": n_requests}
+                             "n_requests": n_requests, "reps": reps}
     chosen = {}
     for backend in ("jax", "kernel"):
         run = functools.partial(
             engine.run_stream_jit, state, work, key, policy=pol,
             log_cfg=log_cfg, window_size=window_size, trace=trace,
             window_dt=window_dt, backend=backend)
-        res = run()
-        jax.block_until_ready(res.chosen)          # compile + warm
-        t0 = time.time()
-        for _ in range(reps):
-            res = run()
-        jax.block_until_ready(res.chosen)
-        dt = (time.time() - t0) / reps
-        chosen[backend] = np.asarray(res.chosen)
+        dt, warm = _median_time(lambda: run().chosen, reps)
+        chosen[backend] = np.asarray(warm)
         out[f"{backend}_s"] = dt
         out[f"{backend}_req_s"] = n_requests / dt
     out["bit_exact"] = bool((chosen["jax"] == chosen["kernel"]).all())
     print(f"\n== kernel vs JAX engine scheduling throughput "
-          f"({n_servers} OSS x {n_requests} reqs, transient trace) ==")
+          f"({n_servers} OSS x {n_requests} reqs, transient trace, "
+          f"median of {reps}) ==")
     print(f"{'backend':>8s} {'wall_s':>8s} {'req/s':>10s}")
     for b in ("jax", "kernel"):
         print(f"{b:>8s} {out[f'{b}_s']:8.3f} {out[f'{b}_req_s']:10.0f}")
     print(f"  decisions bit-exact across backends: {out['bit_exact']}"
           + ("" if out["bit_exact"] else "  <-- DIVERGED"))
+    return out
+
+
+@functools.lru_cache(maxsize=None)   # run_all + emit_bench_point share it
+def kernel_batch_throughput(n_servers: int = 100, n_requests: int = 2000,
+                            window_size: int = 100, n_trials: int = 100,
+                            reps: int = 3,
+                            check_bit_exact: bool = True) -> Dict[str, float]:
+    """Trial-grid kernel throughput (DESIGN.md §9): the WHOLE Monte-Carlo
+    sweep — ``n_trials`` independent transient-scenario streams — as ONE
+    pallas_call (`simulate.run_trials(backend='kernel')`), vs. the same
+    sweep mapped trial-by-trial through the sequential kernel path.
+
+    ``kernel_batch_req_s`` is aggregate (trials x requests) / median
+    wall seconds; ``batch_bit_exact`` asserts every per-trial decision,
+    latency and load of the grid kernel equals the ``lax.map`` path —
+    the tentpole contract of the trial-grid form."""
+    import jax
+    from repro.core import simulate
+    from repro.core.simulate import ScenarioConfig, SimConfig
+
+    cfg = SimConfig(n_servers=n_servers, n_requests=n_requests,
+                    n_trials=n_trials, window_size=window_size,
+                    backend="kernel",
+                    scenario=ScenarioConfig(name="transient"))
+    log_cfg = simulate.default_log_cfg(cfg)
+    pol = PolicyConfig(name="ect", threshold=0.05)
+    key = jax.random.key(0)
+
+    dt, _ = _median_time(
+        lambda: simulate.run_trials(key, cfg, pol, log_cfg).chosen, reps)
+    out: Dict[str, float] = {
+        "n_servers": n_servers, "n_requests": n_requests,
+        "n_trials": n_trials, "reps": reps,
+        "batch_s": dt,
+        "kernel_batch_req_s": n_trials * n_requests / dt,
+    }
+    if check_bit_exact:
+        batch = simulate.run_trials(key, cfg, pol, log_cfg)
+        keys = jax.random.split(key, n_trials)
+        seq = jax.jit(lambda ks: jax.lax.map(
+            lambda k: simulate._run_shared_log(k, cfg, pol, log_cfg), ks)
+        )(keys)
+        out["batch_bit_exact"] = bool(
+            (np.asarray(batch.chosen) == np.asarray(seq.chosen)).all()
+            and (np.asarray(batch.latencies)
+                 == np.asarray(seq.latencies)).all()
+            and (np.asarray(batch.server_loads)
+                 == np.asarray(seq.server_loads)).all()
+            and (np.asarray(batch.phase_time)
+                 == np.asarray(seq.phase_time)).all())
+    print(f"\n== trial-grid kernel sweep throughput ({n_servers} OSS x "
+          f"{n_requests} reqs x {n_trials} trials, median of {reps}) ==")
+    print(f"  one pallas_call for the whole sweep: {dt:8.3f}s  "
+          f"{out['kernel_batch_req_s']:10.0f} req/s aggregate")
+    if check_bit_exact:
+        print(f"  per-trial decisions/latencies/loads bit-exact vs "
+              f"sequential kernel path: {out['batch_bit_exact']}"
+              + ("" if out["batch_bit_exact"] else "  <-- DIVERGED"))
     return out
 
 
@@ -213,12 +285,16 @@ def transient_latency_cdf(n_trials: int = 25) -> None:
 
 def emit_bench_point(path: str = "BENCH_sched.json",
                      n_trials: int = 25,
-                     kernel_scale: int = 100) -> dict:
+                     kernel_scale: int = 100,
+                     batch_trials: int = 100) -> dict:
     """Append one perf-trajectory point: the §Perf C phase time per policy,
-    the transient-scenario p99 for the log-assisted policies, and the
+    the transient-scenario p99 for the log-assisted policies, the
     kernel-backend numbers (wall time of scheduling the 100-OSS transient
-    stream through the Pallas backend + req/s for both backends).
-    Reuses this process's cached run_all results when available."""
+    stream through the Pallas backend + req/s for both backends), and the
+    trial-grid sweep throughput (`kernel_batch_req_s`: the full
+    100 OSS x 2000 req x ``batch_trials`` sweep as ONE pallas_call).
+    All throughput cells are medians of ``reps`` repeats (recorded in
+    the point).  Reuses this process's cached run_all results."""
     from repro.core import analysis
     point: Dict[str, object] = {"ts": time.time(), "metric_unit": "seconds"}
     # call signatures mirror run_all's rows so the lru_cache hits
@@ -233,6 +309,12 @@ def emit_bench_point(path: str = "BENCH_sched.json",
     point["kernel_req_s"] = thr["kernel_req_s"]
     point["engine_req_s"] = thr["jax_req_s"]
     point["kernel_bit_exact"] = thr["bit_exact"]
+    point["bench_reps"] = thr["reps"]
+    bat = kernel_batch_throughput(n_servers=kernel_scale,
+                                  n_trials=batch_trials)
+    point["kernel_batch_req_s"] = bat["kernel_batch_req_s"]
+    point["kernel_batch_trials"] = bat["n_trials"]
+    point["kernel_batch_bit_exact"] = bat.get("batch_bit_exact")
     history = []
     if os.path.exists(path):
         try:
@@ -271,6 +353,10 @@ def trajectory(path: str = "BENCH_sched.json",
 
     cols = ("phase_s_rr", "phase_s_trh", "phase_s_ect",
             "transient_p99_trh", "kernel_backend_phase_s")
+    # scheduling throughput series (req/s — higher is better); the
+    # delta table flags any run where a kernel path fell behind the
+    # engine (the regression the trial-grid kernel exists to prevent)
+    thr_cols = ("engine_req_s", "kernel_req_s", "kernel_batch_req_s")
     print(f"\n== perf trajectory ({len(history)} runs, {path}) ==")
     print(f"{'run':>4s} {'when':>16s} " +
           " ".join(f"{c.replace('phase_s_', 'ph_'):>14s}" for c in cols))
@@ -290,30 +376,56 @@ def trajectory(path: str = "BENCH_sched.json",
         print(f"{i:>4d} {when:>16s} " + " ".join(cells))
         prev = pt
 
+    print(f"\n{'run':>4s} " + " ".join(f"{c:>20s}" for c in thr_cols)
+          + "  kernel vs engine")
+    for i, pt in enumerate(history):
+        eng = pt.get("engine_req_s")
+        cells = []
+        behind = []
+        for c in thr_cols:
+            v = pt.get(c)
+            cells.append(f"{'—':>20s}" if v is None else f"{v:20.0f}")
+            if (v is not None and eng is not None and c != "engine_req_s"
+                    and v < eng):
+                behind.append(c.replace("_req_s", ""))
+        flag = ("  <-- " + ", ".join(behind) + " BEHIND engine"
+                if behind else "")
+        print(f"{i:>4d} " + " ".join(cells) + flag)
+
     series = {c: [pt.get(c) for pt in history] for c in cols}
+    thr_series = {c: [pt.get(c) for pt in history] for c in thr_cols}
     try:
         import matplotlib
         matplotlib.use("Agg")
         import matplotlib.pyplot as plt
-        fig, ax = plt.subplots(figsize=(8, 4.5))
+        fig, (ax, ax2) = plt.subplots(2, 1, figsize=(8, 7), sharex=True)
         for c in cols:
             ys = series[c]
             if any(v is not None for v in ys):
                 ax.plot(range(len(ys)),
                         [float("nan") if v is None else v for v in ys],
                         marker="o", label=c)
-        ax.set_xlabel("benchmark run")
         ax.set_ylabel("seconds")
         ax.set_title("scheduler perf trajectory (BENCH_sched.json)")
         ax.legend(fontsize=8)
+        for c in thr_cols:
+            ys = thr_series[c]
+            if any(v is not None for v in ys):
+                ax2.plot(range(len(ys)),
+                         [float("nan") if v is None else v for v in ys],
+                         marker="s", label=c)
+        ax2.set_xlabel("benchmark run")
+        ax2.set_ylabel("req/s (higher is better)")
+        ax2.legend(fontsize=8)
         fig.tight_layout()
         fig.savefig(fig_path, dpi=120)
         print(f"[trajectory] figure -> {fig_path}")
     except ImportError:
         txt_path = fig_path.rsplit(".", 1)[0] + ".txt"
         with open(txt_path, "w") as f:
-            for c in cols:
-                ys = [v for v in series[c] if v is not None]
+            for c in cols + thr_cols:
+                ys = [v for v in {**series, **thr_series}[c]
+                      if v is not None]
                 if len(ys) >= 2:
                     f.write(analysis.ascii_plot(
                         np.asarray(ys), label=f"{c} per run") + "\n")
@@ -324,7 +436,8 @@ def trajectory(path: str = "BENCH_sched.json",
 
 def run_smoke() -> None:
     """CI benchmark smoke: a fast subset proving the host path, the jitted
-    sweep and the kernel backend all still run (sched_perf --smoke)."""
+    sweep, the kernel backend AND the trial-grid dispatch all still run
+    (sched_perf --smoke)."""
     print("== sched_perf --smoke ==")
     t0 = time.time()
     r = phase_time(policy="rr", n_files=24)
@@ -335,6 +448,11 @@ def run_smoke() -> None:
     thr = kernel_vs_engine_throughput(n_servers=24, n_requests=480,
                                       window_size=60, reps=1)
     assert thr["bit_exact"], "kernel/engine divergence"
+    # trial-grid dispatch: T=10 is NOT a multiple of the default tile
+    # (8), so the smoke also covers the inert-padded-trial path pre-merge
+    bat = kernel_batch_throughput(n_servers=24, n_requests=480,
+                                  window_size=60, n_trials=10, reps=1)
+    assert bat["batch_bit_exact"], "trial-grid/sequential divergence"
     _scenario_sweep(("transient",), ("rr", "ect"), 4)
     print(f"[smoke] ok in {time.time() - t0:.1f}s")
 
@@ -382,8 +500,9 @@ def run_all() -> None:
 
     scenario_ranking()
     transient_latency_cdf()
-    # keyword call matches emit_bench_point's exactly so the lru_cache hits
+    # keyword calls match emit_bench_point's exactly so the lru_cache hits
     kernel_vs_engine_throughput(n_servers=100)
+    kernel_batch_throughput(n_servers=100, n_trials=100)
 
 
 if __name__ == "__main__":

@@ -281,25 +281,30 @@ def run_stream(state: SchedState, work: Workload, key: jax.Array, *,
     n_win, obj, lens, val = _window_split(work, window_size)
     keys = jax.random.split(key, n_win)
     win_rates = _window_rates(state, trace, n_win, window_dt)
+    # Drain decrements materialize OUTSIDE the scan body (scan xs) so the
+    # in-body drain is a bare subtract — no FMA-contractable product, the
+    # §9 bit-exactness contract shared with the kernel backend.
+    win_dec = policy_core.window_decrements(win_rates, window_dt)
     # Kernel-compatible LCG seed: both backends derive it identically
     # from the stream key, then carry ONE rng across all windows.
     rng0 = jax.random.bits(key, dtype=jnp.uint32)
 
     def body(carry, xs):
         st, rng = carry
-        o, ln, v, k, rates = xs
+        o, ln, v, k, rates, dec = xs
         st = st._replace(rates=rates)
         res = run_window(st, Workload(o, ln, v), k, policy=policy,
                          log_cfg=log_cfg, group_steps=group_steps,
                          observe=observe, rng0=rng)
         st = res.state
         if window_dt:
-            st = statlog.advance_time(st, jnp.float32(window_dt))
+            st = statlog.advance_time(st, jnp.float32(window_dt), dec=dec)
         return (st, res.rng), (res.chosen, res.probe_msgs, res.redirected,
                                res.latencies, st.loads)
 
     (state, rng), (chosen, probes, redirected, latencies, window_loads) = \
-        jax.lax.scan(body, (state, rng0), (obj, lens, val, keys, win_rates))
+        jax.lax.scan(body, (state, rng0),
+                     (obj, lens, val, keys, win_rates, win_dec))
     return ScheduleResult(
         state=state,
         chosen=chosen.reshape(-1)[:r],
@@ -348,6 +353,28 @@ def _run_stream_kernel(state: SchedState, work: Workload, key: jax.Array, *,
         lam=log_cfg.lam, alpha=log_cfg.ewma_alpha, window_dt=window_dt,
         policy=policy.name, observe=observe, renorm=log_cfg.renorm)
 
+    return _kernel_bookkeeping(state, choices, lats, table, wloads, g_obj,
+                               g_val, val, req_to_step, win_rates[-1],
+                               policy=policy, window_dt=window_dt,
+                               n_win=n_win, window_size=window_size, r=r)
+
+
+def _kernel_bookkeeping(state: SchedState, choices, lats, table, wloads,
+                        g_obj, g_val, val, req_to_step, rates_last, *,
+                        policy: P.PolicyConfig, window_dt: float, n_win: int,
+                        window_size: int, r: int) -> ScheduleResult:
+    """Host-side bookkeeping the kernel leaves behind, for ONE stream:
+    redirect derivation, grouped-step -> request scatter, per-server
+    assignment counts, probe accounting (always 0 for kernel policies)
+    and the vclock/free_at replay.  Shared by the sequential kernel path
+    and (vmapped) `run_stream_batch`, so batch-vs-sequential parity is
+    structural rather than maintained in two copies.
+
+    choices/lats: (N,) over grouped steps; g_obj/g_val/val (and
+    req_to_step when grouping): (n_win, window_size); table: (4, M);
+    wloads: (n_win, M); rates_last: (M,) rates at the last window.
+    """
+    m = table.shape[-1]
     chosen_w = choices.reshape(n_win, window_size)
     lat_w = lats.reshape(n_win, window_size)
     redir_w = (chosen_w != (g_obj % m).astype(jnp.int32)) & g_val
@@ -359,11 +386,8 @@ def _run_stream_kernel(state: SchedState, work: Workload, key: jax.Array, *,
     lat_w = lat_w * val
     redir_w = redir_w & val
 
-    # bookkeeping the kernel leaves to the host: per-step assignment
-    # counts, probe accounting (always 0 for kernel policies), clocks.
     counts = jax.ops.segment_sum(g_val.reshape(-1).astype(jnp.int32),
                                  choices, num_segments=m)
-    rates_last = win_rates[-1]
     if window_dt:
         vclock = state.vclock
         for _ in range(n_win):   # sequential f32 adds: match advance_time
@@ -396,3 +420,95 @@ def run_stream_jit(state, work, key, *, policy, log_cfg, window_size,
                       window_size=window_size, group_steps=group_steps,
                       trace=trace, window_dt=window_dt, observe=observe,
                       backend=backend)
+
+
+def run_stream_batch(states: SchedState, works: Workload, keys: jax.Array, *,
+                     policy: P.PolicyConfig, log_cfg: LogConfig,
+                     window_size: int, group_steps: bool = True,
+                     traces: Optional[ClusterTrace] = None,
+                     window_dt: float = 0.0,
+                     observe: Optional[bool] = None,
+                     trial_tile: Optional[int] = None
+                     ) -> Tuple[ScheduleResult, jax.Array]:
+    """Trial-grid dispatch: T whole `run_stream` traces as ONE pallas_call.
+
+    ``states`` / ``works`` / ``keys`` / ``traces`` carry a leading trial
+    axis T (build them with ``jax.vmap`` over per-trial constructors —
+    `simulate.run_trials(backend="kernel")` does exactly that).  The
+    JAX-side prep is the per-trial `run_stream` prep vmapped (window
+    split, `group_by_object_with_map` step formation, per-window trace
+    rates), so every trial sees bit-identical inputs to the sequential
+    path; the scheduling itself runs on the trial-grid kernel
+    (`kernels.sched_select.ops.sched_stream_batch`,
+    ``grid = ceil(T / trial_tile)``, trials vectorized over VMEM
+    sublanes).
+
+    Returns ``(result, metrics)``: ``result`` is a ScheduleResult whose
+    fields all carry the leading trial axis, bit-exact per trial vs.
+    `run_stream(backend="kernel")` under ``lax.map``; ``metrics`` is the
+    kernel's fused in-VMEM reduction, ``(T, N_METRICS)`` f32 in
+    `policy_core.MET_*` order (makespan / nearest-rank p99 / latency
+    sum / latency max / valid count over the scheduled steps) — the
+    headline sweep numbers without an HBM round-trip of the latency
+    blocks.
+    """
+    from repro.kernels.sched_select import ops as kops
+
+    if policy.name not in KERNEL_POLICIES:
+        raise ValueError(
+            f"run_stream_batch supports {KERNEL_POLICIES}, got "
+            f"{policy.name!r} (window-sorting policies stay on the jax "
+            "backend)")
+    if observe is None:
+        observe = traces is not None
+    if trial_tile is None:
+        trial_tile = kops.DEFAULT_TRIAL_TILE
+    t = works.object_ids.shape[0]
+    r = works.object_ids.shape[1]
+    m = states.n_servers
+
+    n_win = -(-works.object_ids.shape[1] // window_size)
+
+    def prep(state, work, key):
+        _, obj, lens, val = _window_split(work, window_size)
+        if group_steps:
+            grouped, req_to_step = jax.vmap(group_by_object_with_map)(
+                Workload(obj, lens, val))
+            g_obj, g_lens, g_val = (grouped.object_ids, grouped.lengths,
+                                    grouped.valid)
+        else:
+            g_obj, g_lens, g_val, req_to_step = obj, lens, val, None
+        seed = jax.random.bits(key, dtype=jnp.uint32)
+        return (g_obj.reshape(-1), g_lens.reshape(-1), g_val.reshape(-1),
+                seed, val, req_to_step)
+
+    g_obj, g_lens, g_val, seeds, val, req_to_step = \
+        jax.vmap(prep)(states, works, keys)
+    if traces is not None:
+        win_rates = jax.vmap(
+            lambda tr: _window_rates(None, tr, n_win, window_dt)
+        )(traces)
+    else:
+        win_rates = jax.vmap(
+            lambda st: _window_rates(st, None, n_win, window_dt)
+        )(states)
+
+    choices, lats, tables, wloads, metrics = kops.sched_stream_batch(
+        g_obj, g_lens, g_val, states.log, seeds, win_rates,
+        n_servers=m, window_size=window_size, threshold=policy.threshold,
+        lam=log_cfg.lam, alpha=log_cfg.ewma_alpha, window_dt=window_dt,
+        policy=policy.name, observe=observe, renorm=log_cfg.renorm,
+        trial_tile=trial_tile)
+
+    # host-side bookkeeping: the SAME single-stream helper as the
+    # sequential kernel path, vmapped over trials (every op in it is
+    # exact — gathers, bool masks, integer segment sums, elementwise f32
+    # adds — so batching cannot drift it).
+    result = jax.vmap(functools.partial(
+        _kernel_bookkeeping, policy=policy, window_dt=window_dt,
+        n_win=n_win, window_size=window_size, r=r)
+    )(states, choices, lats, tables, wloads,
+      g_obj.reshape(t, n_win, window_size),
+      g_val.reshape(t, n_win, window_size), val, req_to_step,
+      win_rates[:, -1])
+    return result, metrics

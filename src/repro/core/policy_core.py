@@ -46,6 +46,16 @@ ROW_LOADS, ROW_PROBS, ROW_EWMA, ROW_EST = 0, 1, 2, 3
 N_ROWS = 4
 ROW_NAMES = ("loads", "probs", "ewma_lat", "est_rates")
 
+# Fused per-trial stream metrics (DESIGN.md §9): reduced in-VMEM by the
+# trial-grid kernel while the latency block is still resident, so the
+# headline sweep metrics never round-trip through HBM.  Lane layout of
+# the kernel's (T, MET_PAD) metrics output; `stream_metrics` below is
+# the bit-exact host/engine twin.
+MET_MAKESPAN, MET_P99, MET_LAT_SUM, MET_LAT_MAX, MET_N_VALID = 0, 1, 2, 3, 4
+N_METRICS = 5
+MET_NAMES = ("makespan", "p99_lat", "lat_sum", "lat_max", "n_valid")
+MET_PAD = 128          # kernel metrics row padded to one f32 lane tile
+
 # The in-kernel LCG (numerical recipes constants) — also used by the JAX
 # engine when ``PolicyConfig.rng == "lcg"`` so kernel and engine consume
 # an identical randomness stream (the bit-exactness contract).
@@ -59,16 +69,23 @@ def pack(loads, probs, ewma_lat, est_rates, xp=jnp):
     return xp.stack([loads, probs, ewma_lat, est_rates])
 
 
-def init_table(m: int, xp=jnp, dtype=None):
+def init_table(m: int, xp=jnp, dtype=None, batch=None):
     """Fresh log: zero loads, round-robin prior p_i = 1/M (paper §3.3.2),
-    no observations, optimistic unit estimated rates (= ect_rates(0))."""
+    no observations, optimistic unit estimated rates (= ect_rates(0)).
+
+    ``batch`` adds a leading trial axis — a ``(batch, 4, M)`` stack of
+    independent fresh logs, the layout the trial-grid kernel slices per
+    program instance (also used to pad a trial batch up to the grid
+    tile with inert-but-finite tables)."""
+    shape = (N_ROWS, m) if batch is None else (batch, N_ROWS, m)
     dtype = dtype or (jnp.float32 if xp is jnp else np.float64)
-    t = xp.zeros((N_ROWS, m), dtype)
+    t = xp.zeros(shape, dtype)
     if xp is np:
-        t[ROW_PROBS] = 1.0 / m
-        t[ROW_EST] = 1.0
+        t[..., ROW_PROBS, :] = 1.0 / m
+        t[..., ROW_EST, :] = 1.0
         return t
-    return t.at[ROW_PROBS].set(1.0 / m).at[ROW_EST].set(1.0)
+    return (t.at[..., ROW_PROBS, :].set(1.0 / m)
+            .at[..., ROW_EST, :].set(1.0))
 
 
 # ---------------------------------------------------------------------------
@@ -172,14 +189,22 @@ def assignment_update(loads, probs, server, length, lam: float, m: int,
     XLA lowers both layers through the same elementwise ops and the
     engine<->kernel trace stays bit-identical (scatter + scalar-exp
     lowering was observed to differ by 1 ulp inside fused loop bodies).
+
+    Eq. (3)'s redistributed mass is computed as ``p_i * (1 - e) / (M-1)``
+    rather than the algebraically equal ``(p_i - p_i * e) / (M-1)``: the
+    latter is a mul-feeding-sub that XLA/LLVM contracts into an FMA in
+    some lowering contexts and not others (observed tile-dependent in the
+    trial-grid kernel — DESIGN.md §9), while here every product feeds a
+    select or a divide, which nothing contracts.
     """
     if xp is np:
         loads = loads.copy()
         probs = probs.copy()
         loads[server] += length                              # Eq. (1)
         p_i = probs[server]
-        decayed = p_i * np.exp(-loads[server] / lam)         # Eq. (2)
-        delta = (p_i - decayed) / (m - 1)                    # Eq. (3)
+        e = np.exp(-loads[server] / lam)
+        decayed = p_i * e                                    # Eq. (2)
+        delta = p_i * (1.0 - e) / (m - 1)                    # Eq. (3)
         probs += delta
         probs[server] = decayed
         return loads, probs
@@ -187,8 +212,9 @@ def assignment_update(loads, probs, server, length, lam: float, m: int,
     loads = jnp.where(onehot, loads + length, loads)         # Eq. (1)
     l_i = loads[server]
     p_i = probs[server]
-    decayed = p_i * jnp.exp(-l_i / lam)                      # Eq. (2)
-    delta = (p_i - decayed) / (m - 1)                        # Eq. (3)
+    e = jnp.exp(-l_i / lam)
+    decayed = p_i * e                                        # Eq. (2)
+    delta = p_i * (1.0 - e) / (m - 1)                        # Eq. (3)
     probs = jnp.where(onehot, decayed, probs + delta)
     return loads, probs
 
@@ -211,34 +237,154 @@ def observe_update(ewma_lat, server, mb_per_s, alpha: float, xp=jnp):
     return ewma_lat, ect_rates(ewma_lat, xp)
 
 
+def lane_sum(x, xp=jnp):
+    """Deterministic last-axis sum: an EXPLICIT pairwise halving tree
+    (pad to the next power of two with exact zeros, then repeatedly add
+    the upper half onto the lower).  ``jnp.sum``'s reduction tree is a
+    backend/shape-dependent lowering choice — the trial-grid kernel's
+    ``(t_tile, 128)`` row sum was observed to associate differently from
+    the engine's ``(M,)`` sum, a 1-ulp drift per window that breaks the
+    §9 parity contract.  Explicit adds are fixed HLO ops no backend may
+    reassociate, and leading halvings over all-zero upper halves are
+    exact identities, so any zero-padded width yields the same bits.
+    Returns shape (..., 1)."""
+    if xp is np:
+        return x.sum(axis=-1, keepdims=True)
+    m = x.shape[-1]
+    size = 1
+    while size < m:
+        size *= 2
+    if size != m:
+        pad = [(0, 0)] * (x.ndim - 1) + [(0, size - m)]
+        x = jnp.pad(x, pad)
+    while x.shape[-1] > 1:
+        h = x.shape[-1] // 2
+        x = x[..., :h] + x[..., h:]
+    return x
+
+
 def renormalize_probs(probs, xp=jnp):
     """Re-project the probability row onto the simplex (float-drift guard;
     run once per window by every layer that renormalizes).
 
-    The jnp form pads the reduction to the kernel's 128-lane width before
-    summing: appended exact zeros never change the sum's value, but they
-    make XLA pick the same reduction tree as the Pallas kernel's padded
-    VMEM row — the last bit of the engine<->kernel parity contract."""
+    The reduction runs through :func:`lane_sum` so the engine, the oracle
+    and the (tiled) kernel all associate the sum identically — the last
+    bit of the engine<->kernel parity contract."""
     if xp is np:
         p = np.clip(probs, 0.0, None)
-        return p / p.sum()
+        return p / p.sum(axis=-1, keepdims=True)
     p = jnp.clip(probs, 0.0)
-    m = p.shape[-1]
-    m_pad = max(-(-m // 128) * 128, 128)
-    total = jnp.sum(jnp.pad(p, (0, m_pad - m))) if m_pad != m else jnp.sum(p)
-    return p / total
+    return p / lane_sum(p)
 
 
-def drain_loads(loads, rates, dt, xp=jnp):
+def window_decrements(rates, dt, xp=jnp):
+    """Per-window drain decrement ``max(rates, 1e-6) * dt`` — computed
+    ONCE, outside the fused loop body that subtracts it.
+
+    This materialization is a correctness contract, not a micro-opt
+    (DESIGN.md §9): when the product sits next to the subtraction inside
+    one fused computation, XLA/LLVM may contract ``loads - rates * dt``
+    into an FMA — and whether it does was observed to depend on the
+    lowering context (the scan-body engine and the t_tile = 1 kernel
+    fused; the trial-tiled kernel did not), a 1-ulp drift that breaks
+    the engine<->kernel bit-exactness contract.  A decrement that enters
+    the loop as a materialized array (scan ``xs`` row / pallas operand)
+    leaves only a bare subtract inside the body, which every backend
+    rounds identically."""
+    return xp.maximum(rates, 1e-6) * dt
+
+
+def drain_loads(loads, rates, dt, xp=jnp, dec=None):
     """Temporal model: drain each server's outstanding queue at its TRUE
     service rate for ``dt`` virtual seconds, clipped at empty.  The one
     place the simulator's ground-truth rates touch the log (queue physics,
-    not a scheduling decision)."""
-    rates = xp.maximum(rates, 1e-6)
-    return xp.maximum(loads - rates * dt, 0.0)
+    not a scheduling decision).
+
+    ``dec`` is the precomputed :func:`window_decrements` row; pass it
+    whenever the drain runs inside a fused loop body (see that helper's
+    FMA-contraction note).  ``dec=None`` computes it inline — fine for
+    the numpy host twin and one-shot jnp calls."""
+    if dec is None:
+        dec = window_decrements(rates, dt, xp)
+    return xp.maximum(loads - dec, 0.0)
 
 
 def estimated_latency(loads, rates, server, xp=jnp):
     """Seconds until a request just queued on ``server`` completes, at the
     given (true) service rates — the simulator's latency report."""
     return loads[server] / xp.maximum(rates[server], 1e-6)
+
+
+# ---------------------------------------------------------------------------
+# Fused stream metrics — the trial-grid kernel's in-VMEM reduction twin
+# ---------------------------------------------------------------------------
+
+P99_Q = 0.99          # nearest-rank quantile the kernel reduces in-VMEM
+P99_BISECT_ITERS = 48  # f32 bisection steps (converges to lane adjacency)
+
+
+def nearest_rank_p99(lats, valid, xp=jnp):
+    """Nearest-rank p99 of the valid latencies via value bisection — the
+    EXACT float algorithm the kernel runs on its VMEM-resident latency
+    block (DESIGN.md §9): ``P99_BISECT_ITERS`` halvings of ``[-1, max]``
+    keeping ``count(lats <= lo) < k <= count(lats <= hi)`` with
+    ``k = ceil(0.99 * n_valid)``, then the smallest element above ``lo``.
+    Supports a leading batch axis; all arithmetic is f32 so the kernel
+    and this twin agree bit-for-bit.
+    """
+    lats = lats.astype(jnp.float32) if xp is jnp else lats.astype(np.float32)
+    validf = valid.astype(lats.dtype)
+    nval = xp.sum(validf, axis=-1, keepdims=True)
+    k = xp.ceil(lats.dtype.type(P99_Q) * nval) if xp is np \
+        else xp.ceil(jnp.float32(P99_Q) * nval)
+    lo = xp.full(nval.shape, -1.0, lats.dtype)
+    hi = xp.max(xp.where(valid, lats, 0.0), axis=-1, keepdims=True)
+    for _ in range(P99_BISECT_ITERS):
+        mid = lats.dtype.type(0.5) * (lo + hi) if xp is np \
+            else jnp.float32(0.5) * (lo + hi)
+        cnt = xp.sum(xp.where(valid & (lats <= mid), validf, 0.0 * validf),
+                     axis=-1, keepdims=True)
+        go_hi = cnt >= k
+        lo, hi = xp.where(go_hi, lo, mid), xp.where(go_hi, mid, hi)
+    big = lats.dtype.type(3.4e38)
+    p99 = xp.min(xp.where(valid & (lats > lo), lats, big),
+                 axis=-1, keepdims=True)
+    return xp.where(nval > 0, p99, 0.0 * p99)
+
+
+def stream_metrics(lats, valid, window_dt: float, window_size: int, xp=jnp):
+    """Per-trial fused metrics over a scheduled stream, in the EXACT
+    accumulation order of the trial-grid kernel (request order for the
+    order-sensitive ``lat_sum``; ``makespan``/``lat_max``/``n_valid`` are
+    order-free reductions; ``p99_lat`` via :func:`nearest_rank_p99`).
+
+    ``lats``/``valid``: (..., N) per-step latencies and validity with
+    ``N = W * window_size``; completion of step ``i`` is
+    ``(i // window_size) * window_dt + lat_i`` (the simulator's
+    window-open clock).  Returns (..., N_METRICS) f32 in ``MET_*`` order.
+    """
+    lats = lats.astype(jnp.float32 if xp is jnp else np.float32)
+    latv = xp.where(valid, lats, 0.0 * lats)
+    n = lats.shape[-1]
+    idx = xp.arange(n, dtype=np.int32 if xp is np else jnp.int32)
+    # f32 cast BEFORE the multiply — the kernel's wopen = f32(w) * f32(dt)
+    w_open = (idx // window_size).astype(lats.dtype) * lats.dtype.type(
+        window_dt) if xp is np else \
+        (idx // window_size).astype(jnp.float32) * jnp.float32(window_dt)
+    makespan = xp.max(xp.where(valid, w_open + lats, 0.0 * lats),
+                      axis=-1, keepdims=True)
+    lat_max = xp.max(latv, axis=-1, keepdims=True)
+    n_valid = xp.sum(xp.where(valid, xp.ones_like(latv), 0.0 * latv),
+                     axis=-1, keepdims=True)
+    if xp is np:
+        lat_sum = np.zeros(latv.shape[:-1] + (1,), np.float32)
+        for i in range(n):                       # sequential f32 adds —
+            lat_sum = lat_sum + latv[..., i:i + 1]   # the kernel's order
+    else:
+        lat_sum = jax.lax.fori_loop(
+            0, n, lambda i, s: s + jax.lax.dynamic_slice_in_dim(latv, i, 1,
+                                                                axis=-1),
+            jnp.zeros(latv.shape[:-1] + (1,), jnp.float32))
+    p99 = nearest_rank_p99(lats, valid, xp)
+    return xp.concatenate([makespan, p99, lat_sum, lat_max, n_valid],
+                          axis=-1)

@@ -110,9 +110,12 @@ class SimConfig:
     # temporal scenario (None = the seed's static-load model, no trace)
     scenario: Optional[ScenarioConfig] = None
     # scheduling substrate: "jax" (lax.scan engine, every policy) or
-    # "kernel" (the Pallas temporal kernel — ect/trh, shared_log model;
-    # trials run under lax.map since the stream IS one pallas_call).
+    # "kernel" (the Pallas trial-grid kernel — ect/trh, shared_log model;
+    # ALL trials run as ONE pallas_call, grid = trial tiles; DESIGN.md §9).
     backend: str = "jax"
+    # trials per kernel program instance (kernel backend; None = the
+    # kernels package default, the native f32 sublane count 8)
+    trial_tile: Optional[int] = None
     # size-class boundaries (MB) per §4
     small_lo: float = 0.25
     small_hi: float = 4.0
@@ -120,12 +123,29 @@ class SimConfig:
     large_hi: float = 1024.0
 
     def __post_init__(self):
-        assert self.workload in SIZE_CLASSES
-        assert self.client_model in ("shared_log", "per_client")
-        assert self.backend in ("jax", "kernel")
-        if self.backend == "kernel":
-            assert self.client_model == "shared_log", \
-                "kernel backend models one shared log"
+        # real exceptions, not asserts: `python -O` strips asserts, and a
+        # mis-built sweep config must fail loudly either way.
+        if self.workload not in SIZE_CLASSES:
+            raise ValueError(
+                f"workload={self.workload!r} is not one of {SIZE_CLASSES}")
+        if self.client_model not in ("shared_log", "per_client"):
+            raise ValueError(
+                f"client_model={self.client_model!r} must be 'shared_log' "
+                "or 'per_client'")
+        if self.backend not in ("jax", "kernel"):
+            raise ValueError(
+                f"backend={self.backend!r} must be 'jax' or 'kernel'")
+        if self.backend == "kernel" and self.client_model != "shared_log":
+            raise ValueError(
+                "backend='kernel' models one shared log, got "
+                f"client_model={self.client_model!r} (n_clients="
+                f"{self.n_clients}); use backend='jax' for the "
+                "per-client contention study")
+        if self.trial_tile is not None and self.trial_tile < 1:
+            raise ValueError(
+                f"trial_tile={self.trial_tile!r} must be a positive trial"
+                " count per kernel program instance (or None for the"
+                " kernels-package default)")
 
     @property
     def n_windows(self) -> int:
@@ -294,47 +314,117 @@ def trace_straggler_mask(trace: ClusterTrace, scn: ScenarioConfig) -> jax.Array:
     return jnp.any(trace.rates < scn.base_rate_mb_s * (1.0 - 1e-6), axis=0)
 
 
-def _run_shared_log(key: jax.Array, cfg: SimConfig, policy: PolicyConfig,
-                    log_cfg: LogConfig) -> TrialResult:
+def _trial_setup(key: jax.Array, cfg: SimConfig, log_cfg: LogConfig):
+    """Per-trial simulation inputs: (init_loads, straggler_mask, work,
+    state, trace) — shared verbatim by the sequential and the trial-grid
+    paths so both schedule bit-identical streams."""
     k_load, k_work, k_sched = jax.random.split(key, 3)
     init, strag_mask = initial_loads(k_load, cfg)
     work = sample_workload(k_work, cfg)
     state = statlog.init_state(log_cfg)
     state = absorb_initial_loads(state, init, log_cfg)
-    trace, window_dt = None, 0.0
+    trace = None
     if cfg.scenario is not None:
         # fold_in keeps the 3-way split above byte-identical to the static
         # path, so the degenerate trace reproduces it bit-for-bit.
         trace = make_trace(jax.random.fold_in(key, 0x7e3), cfg, cfg.scenario)
-        window_dt = resolve_window_dt(cfg, cfg.scenario)
         state = state._replace(rates=trace.rates[0])
-    # the degenerate static scenario must stay bit-identical to the
-    # no-trace path for EVERY policy, so its completion feedback is off
-    # (the static model never observes)
-    observe = cfg.scenario is not None and cfg.scenario.name != "static"
-    res = engine.run_stream(state, work, k_sched, policy=policy,
-                            log_cfg=log_cfg, window_size=cfg.window_size,
-                            group_steps=True, trace=trace,
-                            window_dt=window_dt, observe=observe,
-                            backend=cfg.backend)
-    written = jax.ops.segment_sum(work.lengths, res.chosen,
+    return init, strag_mask, work, state, trace, k_sched
+
+
+def _trial_result(cfg: SimConfig, window_dt: float, init, strag_mask, work,
+                  trace, chosen, probe_msgs, redirected, latencies,
+                  window_loads,
+                  phase_time: Optional[jax.Array] = None) -> TrialResult:
+    """Fold one scheduled stream into the TrialResult bookkeeping.
+
+    ``phase_time`` overrides the host-side makespan reduction — the
+    trial-grid path passes the kernel's fused in-VMEM metric (bit-equal:
+    ``max`` is order-free and grouped steps share their duplicates'
+    latency)."""
+    written = jax.ops.segment_sum(work.lengths, chosen,
                                   num_segments=cfg.n_servers)
-    n_assigned = jax.ops.segment_sum(jnp.ones_like(res.chosen), res.chosen,
+    n_assigned = jax.ops.segment_sum(jnp.ones_like(chosen), chosen,
                                      num_segments=cfg.n_servers)
     if cfg.scenario is not None:
         strag_mask = strag_mask | trace_straggler_mask(trace, cfg.scenario)
-    hits = jnp.sum(strag_mask[res.chosen])
-    # completion estimate = window open time + queueing latency
-    w_open = (jnp.arange(cfg.n_requests) // cfg.window_size) * window_dt
-    completion = w_open.astype(jnp.float32) + res.latencies
+    hits = jnp.sum(strag_mask[chosen])
+    if phase_time is None:
+        # completion estimate = window open time + queueing latency
+        w_open = (jnp.arange(cfg.n_requests) // cfg.window_size) * window_dt
+        completion = w_open.astype(jnp.float32) + latencies
+        phase_time = jnp.max(completion)
     return TrialResult(server_loads=init + written, n_assigned=n_assigned,
-                       chosen=res.chosen, probe_msgs=res.probe_msgs,
+                       chosen=chosen, probe_msgs=probe_msgs,
                        straggler_hits=hits,
-                       redirected=jnp.sum(res.redirected),
+                       redirected=jnp.sum(redirected),
                        init_loads=init, straggler_mask=strag_mask,
-                       latencies=res.latencies,
-                       phase_time=jnp.max(completion),
-                       window_loads=res.window_loads)
+                       latencies=latencies,
+                       phase_time=phase_time,
+                       window_loads=window_loads)
+
+
+def _observe(cfg: SimConfig) -> bool:
+    # the degenerate static scenario must stay bit-identical to the
+    # no-trace path for EVERY policy, so its completion feedback is off
+    # (the static model never observes)
+    return cfg.scenario is not None and cfg.scenario.name != "static"
+
+
+def _run_shared_log(key: jax.Array, cfg: SimConfig, policy: PolicyConfig,
+                    log_cfg: LogConfig) -> TrialResult:
+    init, strag_mask, work, state, trace, k_sched = _trial_setup(key, cfg,
+                                                                 log_cfg)
+    window_dt = (resolve_window_dt(cfg, cfg.scenario)
+                 if cfg.scenario is not None else 0.0)
+    res = engine.run_stream(state, work, k_sched, policy=policy,
+                            log_cfg=log_cfg, window_size=cfg.window_size,
+                            group_steps=True, trace=trace,
+                            window_dt=window_dt, observe=_observe(cfg),
+                            backend=cfg.backend)
+    return _trial_result(cfg, window_dt, init, strag_mask, work, trace,
+                         res.chosen, res.probe_msgs, res.redirected,
+                         res.latencies, res.window_loads)
+
+
+def _run_shared_log_batch(keys: jax.Array, cfg: SimConfig,
+                          policy: PolicyConfig,
+                          log_cfg: LogConfig) -> TrialResult:
+    """Trial-grid path (DESIGN.md §9): every trial's whole windowed stream
+    scheduled by ONE pallas_call (`engine.run_stream_batch`).
+
+    Setup and bookkeeping run under ``lax.map`` — NOT ``vmap`` — on
+    purpose: mapping traces the per-trial computation at the exact
+    shapes of the sequential path, so sampled workloads, absorbed
+    initial tables and per-server sums are bit-identical to
+    ``lax.map(_run_shared_log)`` (vmapped elementwise ops may pick
+    different reduction/contraction lowerings at batched shapes; the
+    heavy work — scheduling — is the batched kernel either way).  The
+    per-trial makespan comes from the kernel's fused metrics row instead
+    of a host-side reduction over the latency block."""
+    from repro.core.policy_core import MET_MAKESPAN
+
+    window_dt = (resolve_window_dt(cfg, cfg.scenario)
+                 if cfg.scenario is not None else 0.0)
+    init, strag_mask, works, states, traces, k_sched = jax.lax.map(
+        lambda k: _trial_setup(k, cfg, log_cfg), keys)
+    res, metrics = engine.run_stream_batch(
+        states, works, k_sched, policy=policy, log_cfg=log_cfg,
+        window_size=cfg.window_size, group_steps=True, traces=traces,
+        window_dt=window_dt, observe=_observe(cfg),
+        trial_tile=cfg.trial_tile)
+
+    def post(xs):
+        (init_i, strag_i, work_i, trace_i, chosen_i, probes_i, redir_i,
+         lat_i, wl_i, mk_i) = xs
+        return _trial_result(cfg, window_dt, init_i, strag_i, work_i,
+                             trace_i, chosen_i, probes_i, redir_i, lat_i,
+                             wl_i, phase_time=mk_i)
+
+    return jax.lax.map(post, (init, strag_mask, works, traces, res.chosen,
+                              res.probe_msgs, res.redirected, res.latencies,
+                              res.window_loads,
+                              metrics[:, MET_MAKESPAN]))
 
 
 def _run_per_client(key: jax.Array, cfg: SimConfig, policy: PolicyConfig,
@@ -405,16 +495,15 @@ def run_trials(key: jax.Array, cfg: SimConfig, policy: PolicyConfig,
                log_cfg: LogConfig) -> TrialResult:
     """Run ``cfg.n_trials`` independent trials (vmapped + jitted).
 
-    The kernel backend runs trials under ``lax.map`` instead of ``vmap``:
-    each trial's stream is already ONE pallas_call, so batching would
-    only fold the trial axis into the kernel grid.  Decisions, latencies
-    and loads are bit-exact across backends; the derived ``phase_time``
-    reduction may differ by 1 ulp (vmap vs map fusion of the metrics
-    layer, outside the decision path)."""
+    The kernel backend runs the WHOLE sweep as one trial-grid pallas_call
+    (`engine.run_stream_batch`, grid = trial tiles, per-trial makespan
+    fused in-VMEM — DESIGN.md §9); decisions, latencies, loads and
+    phase_time are bit-exact vs. mapping the sequential kernel path
+    trial by trial (asserted in tests/test_kernels.py)."""
     keys = jax.random.split(key, cfg.n_trials)
-    fn = _run_shared_log if cfg.client_model == "shared_log" else _run_per_client
     if cfg.backend == "kernel":
-        return jax.lax.map(lambda k: fn(k, cfg, policy, log_cfg), keys)
+        return _run_shared_log_batch(keys, cfg, policy, log_cfg)
+    fn = _run_shared_log if cfg.client_model == "shared_log" else _run_per_client
     return jax.vmap(lambda k: fn(k, cfg, policy, log_cfg))(keys)
 
 

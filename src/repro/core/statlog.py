@@ -155,7 +155,8 @@ def observe_completion(state: SchedState, server: jax.Array, mb_per_s: jax.Array
     return state.with_rows(ewma_lat=ewma, est_rates=est)
 
 
-def advance_time(state: SchedState, dt: jax.Array) -> SchedState:
+def advance_time(state: SchedState, dt: jax.Array,
+                 dec: Optional[jax.Array] = None) -> SchedState:
     """Temporal model: advance the virtual clock by ``dt`` seconds.
 
     Each server drains its outstanding queue at its *current* TRUE service
@@ -164,9 +165,13 @@ def advance_time(state: SchedState, dt: jax.Array) -> SchedState:
     ``free_at`` is re-derived from the residual queue.  ``dt == 0`` is the
     exact identity on non-negative loads, which is what makes the
     degenerate (static) trace reproduce the paper's original model
-    bit-for-bit.  jit-compatible; used inside the engine's window scan.
+    bit-for-bit.  jit-compatible; used inside the engine's window scan —
+    which passes ``dec``, the precomputed
+    :func:`~repro.core.policy_core.window_decrements` row, so no
+    FMA-contractable ``rates * dt`` product exists inside the fused scan
+    body (the §9 bit-exactness contract).
     """
-    loads = policy_core.drain_loads(state.loads, state.rates, dt)
+    loads = policy_core.drain_loads(state.loads, state.rates, dt, dec=dec)
     vclock = state.vclock + dt
     free_at = vclock + loads / jnp.maximum(state.rates, 1e-6)
     return state.with_rows(loads=loads)._replace(vclock=vclock,

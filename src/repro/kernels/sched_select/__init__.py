@@ -1,4 +1,6 @@
 from repro.kernels.sched_select.ops import sched_select  # noqa: F401
 from repro.kernels.sched_select.ops import sched_stream  # noqa: F401
+from repro.kernels.sched_select.ops import sched_stream_batch  # noqa: F401
 from repro.kernels.sched_select.ref import sched_select_ref  # noqa: F401
 from repro.kernels.sched_select.ref import sched_stream_ref  # noqa: F401
+from repro.kernels.sched_select.ref import sched_stream_batch_ref  # noqa: F401

@@ -10,17 +10,26 @@ entire stream and emits one assignment per request, instead of bouncing
 the carry through XLA's while-loop machinery (HBM round trips per
 decision).
 
-Grid = independent clients (each compute node runs its own log; there is
-no cross-client gossip, exactly as in the paper §3.3).
+TRIAL-GRID form (DESIGN.md §9): the whole Monte-Carlo sweep — T
+independent windowed `run_stream` traces — runs as ONE ``pallas_call``
+with ``grid = (T / t_tile,)``.  Each program instance owns a
+``t_tile``-trial slice of the packed ``(T, 4, M)`` log stack, the
+``(T, W, M)`` rate traces and the ``(T, N)`` request/latency blocks, and
+holds its trials' tables in one ``(4, t_tile, M_pad)`` VMEM scratch.
+Trials are INDEPENDENT streams, so the per-request decision loop
+vectorizes over the trial sublane axis: every op below acts on
+``(t_tile, M_pad)`` tiles — the native f32 ``(8, 128)`` TPU tile at the
+default ``t_tile = 8`` — and ``t_tile = 1`` degenerates to the original
+single-stream kernel bit-for-bit (same ops on ``(1, M_pad)`` rows).
+Grid = independent clients OR independent trials; there is no cross-
+stream gossip, exactly as in the paper §3.3.
 
-The TEMPORAL form (`_sched_stream_kernel`) runs a whole `run_stream`
-trace as one ``pallas_call``: the stream is split into windows; per
-window the kernel snapshots the probability ranking (TRH's plan), loops
-the window's requests (selection → threshold guard → Eq. (1)-(3) one-hot
-updates → completion feedback into the ewma/est rows), then renormalizes
-the probability row and drains each server's queue at the window's TRUE
-service rates (``advance_time`` semantics; rates streamed in as a
-``(W, M)`` input).  Policies (selected statically):
+Per window the kernel snapshots the probability ranking (TRH's plan),
+loops the window's requests (selection → threshold guard → Eq. (1)-(3)
+one-hot updates → completion feedback into the ewma/est rows), then
+renormalizes the probability row and drains each server's queue at the
+window's TRUE service rates (``advance_time`` semantics; rates streamed
+in as a ``(W, M)`` input).  Policies (selected statically):
 
 * ``minload``    — argmin of current load (greedy; ECT with unit rates);
 * ``two_random`` — power-of-two-choices over ALL servers (no probe
@@ -37,8 +46,17 @@ ranking uses the sort-free stable-rank identity
 (`policy_core.prob_ranks`): rank_i = |{p_j > p_i}| + |{j<i : p_j = p_i}|,
 an O(M^2) lane-parallel compare that equals ``argsort(-probs)`` exactly.
 MLML/nLTR need per-window request sorts and stay in the JAX engine.
+
+FUSED METRICS (DESIGN.md §9): before a program instance retires, it
+reduces its trials' per-step latencies — still VMEM-resident — into a
+``(t_tile, MET_PAD)`` metrics row (makespan, nearest-rank p99 via f32
+value bisection, latency sum in request order, latency max, valid count;
+`policy_core.MET_*` layout), so the sweep's headline numbers never
+round-trip through HBM.  ``policy_core.stream_metrics`` is the bit-exact
+host twin.
+
 ``ref.py`` is the bit-exact jnp oracle; `engine.run_stream(backend=...)`
-parity is asserted in tests/test_kernels.py.
+/ `engine.run_stream_batch` parity is asserted in tests/test_kernels.py.
 """
 
 from __future__ import annotations
@@ -50,8 +68,11 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 import jax.experimental.pallas.tpu as pltpu
 
-from repro.core.policy_core import (LCG_A, LCG_C, N_ROWS, ROW_EST, ROW_EWMA,
-                                    ROW_LOADS, ROW_PROBS)
+from repro.core.policy_core import (LCG_A, LCG_C, MET_LAT_MAX, MET_LAT_SUM,
+                                    MET_MAKESPAN, MET_N_VALID, MET_P99,
+                                    MET_PAD, N_ROWS, P99_BISECT_ITERS, P99_Q,
+                                    ROW_EST, ROW_EWMA, ROW_LOADS, ROW_PROBS,
+                                    lane_sum, window_decrements)
 
 _BIG = 3.4e38  # padding-lane load: never selected, never drained
 
@@ -66,66 +87,72 @@ def _lcg_mod(rng, n: int):
 
 
 def _sched_stream_kernel(objs_ref, lens_ref, valid_ref, table_ref, seed_ref,
-                         rates_ref, choices_ref, lats_ref, final_table_ref,
-                         wloads_ref, tbl, *, n_windows: int, window_size: int,
-                         n_servers: int, m_pad: int, threshold: float,
-                         lam: float, alpha: float, window_dt: float,
-                         policy: str, observe: bool, renorm: bool):
+                         rates_ref, dec_ref, choices_ref, lats_ref,
+                         final_table_ref, wloads_ref, metrics_ref, tbl, *,
+                         n_windows: int,
+                         window_size: int, n_servers: int, m_pad: int,
+                         t_tile: int, threshold: float, lam: float,
+                         alpha: float, window_dt: float, policy: str,
+                         observe: bool, renorm: bool):
     m = n_servers
     lane = jax.lax.broadcasted_iota(jnp.int32, (1, m_pad), 1)
     lv = lane < m                               # valid (non-padding) lanes
 
-    # --- pin the packed log tensor in VMEM scratch -------------------------
-    intab = table_ref[...]                      # (1, 4, m_pad)
-    tbl[ROW_LOADS:ROW_LOADS + 1, :] = jnp.where(lv, intab[:, ROW_LOADS, :],
-                                                _BIG)
-    tbl[ROW_PROBS:ROW_PROBS + 1, :] = jnp.where(lv, intab[:, ROW_PROBS, :],
-                                                0.0)
-    tbl[ROW_EWMA:ROW_EWMA + 1, :] = jnp.where(lv, intab[:, ROW_EWMA, :], 0.0)
-    tbl[ROW_EST:ROW_EST + 1, :] = jnp.where(lv, intab[:, ROW_EST, :], 1.0)
+    # --- pin the packed log stack in VMEM scratch --------------------------
+    # tbl is (N_ROWS, t_tile, m_pad): tbl[row] is this tile's trials' row,
+    # one (t_tile, m_pad) tile per op below (trials ride the sublanes).
+    intab = table_ref[...]                      # (t_tile, 4, m_pad)
+    tbl[ROW_LOADS] = jnp.where(lv, intab[:, ROW_LOADS, :], _BIG)
+    tbl[ROW_PROBS] = jnp.where(lv, intab[:, ROW_PROBS, :], 0.0)
+    tbl[ROW_EWMA] = jnp.where(lv, intab[:, ROW_EWMA, :], 0.0)
+    tbl[ROW_EST] = jnp.where(lv, intab[:, ROW_EST, :], 1.0)
 
-    def pick(row, onehot):
-        """Extract row[onehot] without gather (one-hot masked sum)."""
-        return jnp.sum(jnp.where(onehot, row, 0.0))
+    def pick(rows, onehot):
+        """Extract rows[onehot] per trial without gather (masked sum)."""
+        return jnp.sum(jnp.where(onehot, rows, 0.0), axis=-1, keepdims=True)
 
-    def window_body(w, rng):
-        cur_rates = jnp.where(
-            lv, rates_ref[0, pl.ds(w, 1), :], 1.0)          # (1, m_pad)
+    def window_body(w, carry):
+        rng, mk, lsum, lmax, nval = carry
+        cur_rates = jnp.where(lv, rates_ref[:, pl.ds(w, 1), :][:, 0, :], 1.0)
 
         if policy == "trh":
             # Window-start plan: stable descending probability rank
             # (== argsort(-probs); see policy_core.prob_ranks).  Padding
             # lanes (p = 0, largest indices) always rank >= M.
-            p = tbl[ROW_PROBS:ROW_PROBS + 1, :]
-            pj = jnp.broadcast_to(p, (m_pad, m_pad))         # [i,j] = p_j
-            pi = jnp.broadcast_to(jnp.transpose(p), (m_pad, m_pad))
-            jpos = jax.lax.broadcasted_iota(jnp.int32, (m_pad, m_pad), 1)
-            ipos = jax.lax.broadcasted_iota(jnp.int32, (m_pad, m_pad), 0)
+            p = tbl[ROW_PROBS]                               # (t, m_pad)
+            pj = p[:, None, :]                               # [t,i,j] = p_j
+            pi = p[:, :, None]                               # [t,i,j] = p_i
+            jpos = jax.lax.broadcasted_iota(jnp.int32, (1, m_pad, m_pad), 2)
+            ipos = jax.lax.broadcasted_iota(jnp.int32, (1, m_pad, m_pad), 1)
             cnt = ((pj > pi) | ((pj == pi) & (jpos < ipos))).astype(jnp.int32)
-            rank = jnp.transpose(jnp.sum(cnt, axis=1, keepdims=True))
+            rank = jnp.sum(cnt, axis=2)                      # (t, m_pad)
         else:
-            rank = lane                                      # unused
+            rank = jnp.broadcast_to(lane, (t_tile, m_pad))   # unused
 
         def rank_to_server(r):
             """Server id at sorted position r (rank is a permutation)."""
-            return jnp.sum(jnp.where(rank == r, lane, 0)).astype(jnp.int32)
+            return jnp.sum(jnp.where(rank == r, lane, 0), axis=-1,
+                           keepdims=True).astype(jnp.int32)
 
-        def req_body(j, rng):
+        def req_body(j, carry):
+            rng, mk, lsum, lmax, nval = carry
             i = w * window_size + j
-            obj = objs_ref[0, i]
-            ln = lens_ref[0, i]
-            v = valid_ref[0, i] != 0
-            loads = tbl[ROW_LOADS:ROW_LOADS + 1, :]
-            probs = tbl[ROW_PROBS:ROW_PROBS + 1, :]
-            est = tbl[ROW_EST:ROW_EST + 1, :]
+            obj = objs_ref[:, pl.ds(i, 1)]                   # (t, 1)
+            ln = lens_ref[:, pl.ds(i, 1)]
+            v = valid_ref[:, pl.ds(i, 1)] != 0
+            loads = tbl[ROW_LOADS]
+            probs = tbl[ROW_PROBS]
+            est = tbl[ROW_EST]
             default = jax.lax.rem(obj, m)
 
             # -- target selection (policy_core decision math) --------------
             if policy == "minload":
-                target = jnp.argmin(loads[0, :]).astype(jnp.int32)
+                target = jnp.argmin(loads, axis=-1,
+                                    keepdims=True).astype(jnp.int32)
             elif policy == "ect":
                 scores = (loads + ln) / est
-                target = jnp.argmin(scores[0, :]).astype(jnp.int32)
+                target = jnp.argmin(scores, axis=-1,
+                                    keepdims=True).astype(jnp.int32)
             elif policy in ("two_random", "trh"):
                 r1 = _lcg(rng)
                 r2 = _lcg(r1)
@@ -157,59 +184,107 @@ def _sched_stream_kernel(objs_ref, lens_ref, valid_ref, table_ref, seed_ref,
                                default).astype(jnp.int32)
 
             # -- Eq. (1)-(3) one-hot updates (masked on padding rows) ------
-            onehot = lane == choose
+            onehot = lane == choose                          # (t, m_pad)
             upd = onehot & v
             new_loads = jnp.where(upd, loads + ln, loads)    # Eq. (1)
-            tbl[ROW_LOADS:ROW_LOADS + 1, :] = new_loads
+            tbl[ROW_LOADS] = new_loads
             p_i = pick(probs, onehot)
             l_i = pick(new_loads, onehot)
-            decayed = p_i * jnp.exp(-l_i / lam)              # Eq. (2)
-            delta = (p_i - decayed) / (m - 1)                # Eq. (3)
+            e = jnp.exp(-l_i / lam)
+            decayed = p_i * e                                # Eq. (2)
+            delta = p_i * (1.0 - e) / (m - 1)                # Eq. (3)
             new_probs = jnp.where(onehot, decayed,
                                   jnp.where(lv, probs + delta, 0.0))
-            tbl[ROW_PROBS:ROW_PROBS + 1, :] = jnp.where(v, new_probs, probs)
+            tbl[ROW_PROBS] = jnp.where(v, new_probs, probs)
 
             # -- estimated completion latency + completion feedback --------
             l_after = pick(new_loads, onehot)
             rate_c = pick(cur_rates, onehot)                 # TRUE rate
             lat = l_after / jnp.maximum(rate_c, 1e-6)
-            choices_ref[0, pl.ds(i, 1)] = choose.reshape(1)
-            lats_ref[0, pl.ds(i, 1)] = jnp.where(v, lat, 0.0).reshape(1)
+            latv = jnp.where(v, lat, 0.0)
+            choices_ref[:, pl.ds(i, 1)] = choose
+            lats_ref[:, pl.ds(i, 1)] = latv
             if observe:
                 # effective MB/s this request will see -> ewma row; est
                 # row re-derived from observations ONLY (stale view).
                 mbps = ln / jnp.maximum(lat, 1e-9)
-                ewma = tbl[ROW_EWMA:ROW_EWMA + 1, :]
+                ewma = tbl[ROW_EWMA]
                 old = pick(ewma, onehot)
                 new = jnp.where(old == 0.0, mbps,
                                 (1 - alpha) * old + alpha * mbps)
                 new_ewma = jnp.where(upd, new, ewma)
-                tbl[ROW_EWMA:ROW_EWMA + 1, :] = new_ewma
-                dflt = jnp.maximum(jnp.max(new_ewma), 1.0)
-                tbl[ROW_EST:ROW_EST + 1, :] = jnp.where(new_ewma > 0,
-                                                        new_ewma, dflt)
-            return rng
+                tbl[ROW_EWMA] = new_ewma
+                dflt = jnp.maximum(jnp.max(new_ewma, axis=-1, keepdims=True),
+                                   1.0)
+                tbl[ROW_EST] = jnp.where(new_ewma > 0, new_ewma, dflt)
+            # -- fused metric accumulators (stream_metrics twin) -----------
+            wopen = w.astype(jnp.float32) * jnp.float32(window_dt)
+            mk = jnp.where(v, jnp.maximum(mk, wopen + lat), mk)
+            lsum = lsum + latv
+            lmax = jnp.maximum(lmax, latv)
+            nval = nval + jnp.where(v, 1.0, 0.0)
+            return rng, mk, lsum, lmax, nval
 
-        rng = jax.lax.fori_loop(0, window_size, req_body, rng, unroll=False)
+        carry = jax.lax.fori_loop(0, window_size, req_body,
+                                  (rng, mk, lsum, lmax, nval), unroll=False)
+        rng = carry[0]
 
         # -- window close: renormalize probs, drain queues (advance_time) --
         if renorm:
-            p = jnp.clip(tbl[ROW_PROBS:ROW_PROBS + 1, :], 0.0)
-            tbl[ROW_PROBS:ROW_PROBS + 1, :] = p / jnp.sum(p)
+            # lane_sum: the shared explicit halving tree (§9 parity)
+            p = jnp.clip(tbl[ROW_PROBS], 0.0)
+            tbl[ROW_PROBS] = p / lane_sum(p)
         if window_dt:
-            loads = tbl[ROW_LOADS:ROW_LOADS + 1, :]
-            drained = jnp.maximum(
-                loads - jnp.maximum(cur_rates, 1e-6) * window_dt, 0.0)
-            tbl[ROW_LOADS:ROW_LOADS + 1, :] = jnp.where(lv, drained, _BIG)
-        wloads_ref[0, pl.ds(w, 1), :] = jnp.where(
-            lv, tbl[ROW_LOADS:ROW_LOADS + 1, :], 0.0)
-        return rng
+            # Drain decrements arrive PRE-MULTIPLIED (window_decrements,
+            # materialized as a kernel operand): an in-body rates*dt next
+            # to this subtract gets FMA-contracted in some lowering
+            # contexts but not others (observed tile-dependent), a 1-ulp
+            # drift that breaks the §9 parity contract.  A bare subtract
+            # rounds identically everywhere.
+            loads = tbl[ROW_LOADS]
+            dec = jnp.where(lv, dec_ref[:, pl.ds(w, 1), :][:, 0, :], 0.0)
+            drained = jnp.maximum(loads - dec, 0.0)
+            tbl[ROW_LOADS] = jnp.where(lv, drained, _BIG)
+        wloads_ref[:, pl.ds(w, 1), :] = jnp.where(
+            lv, tbl[ROW_LOADS], 0.0)[:, None, :]
+        return carry
 
-    seed = seed_ref[0, 0].astype(jnp.uint32)
-    jax.lax.fori_loop(0, n_windows, window_body, seed, unroll=False)
-    out = tbl[...]
-    zero_pad = jnp.broadcast_to(~lv, (N_ROWS, m_pad))
-    final_table_ref[...] = jnp.where(zero_pad, 0.0, out)[None]
+    seed = seed_ref[...].astype(jnp.uint32)                  # (t, 1)
+    zero = jnp.zeros((t_tile, 1), jnp.float32)
+    _, mk, lsum, lmax, nval = jax.lax.fori_loop(
+        0, n_windows, window_body, (seed, zero, zero, zero, zero),
+        unroll=False)
+    zero_pad = jnp.broadcast_to(~lv, (t_tile, m_pad))
+    for row in range(N_ROWS):
+        final_table_ref[:, row, :] = jnp.where(zero_pad, 0.0, tbl[row])
+
+    # -- fused metrics: reduce the VMEM-resident latency block -------------
+    # (policy_core.stream_metrics / nearest_rank_p99 are the bit-exact
+    # host twins — keep the float ops in lockstep with them.)
+    lats_all = lats_ref[...]                                 # (t, N)
+    val_all = valid_ref[...] != 0
+    k = jnp.ceil(jnp.float32(P99_Q) * nval)
+    lo = jnp.full((t_tile, 1), -1.0, jnp.float32)
+    hi = lmax
+
+    def bisect(_, lo_hi):
+        lo, hi = lo_hi
+        mid = jnp.float32(0.5) * (lo + hi)
+        cnt = jnp.sum(jnp.where(val_all & (lats_all <= mid), 1.0, 0.0),
+                      axis=-1, keepdims=True)
+        go_hi = cnt >= k
+        return jnp.where(go_hi, lo, mid), jnp.where(go_hi, mid, hi)
+
+    lo, _ = jax.lax.fori_loop(0, P99_BISECT_ITERS, bisect, (lo, hi))
+    p99 = jnp.min(jnp.where(val_all & (lats_all > lo), lats_all, _BIG),
+                  axis=-1, keepdims=True)
+    p99 = jnp.where(nval > 0, p99, 0.0)
+    mlane = jax.lax.broadcasted_iota(jnp.int32, (1, MET_PAD), 1)
+    metrics_ref[...] = (jnp.where(mlane == MET_MAKESPAN, mk, 0.0)
+                        + jnp.where(mlane == MET_P99, p99, 0.0)
+                        + jnp.where(mlane == MET_LAT_SUM, lsum, 0.0)
+                        + jnp.where(mlane == MET_LAT_MAX, lmax, 0.0)
+                        + jnp.where(mlane == MET_N_VALID, nval, 0.0))
 
 
 def sched_stream_call(object_ids: jax.Array, lengths: jax.Array,
@@ -217,53 +292,64 @@ def sched_stream_call(object_ids: jax.Array, lengths: jax.Array,
                       win_rates: jax.Array, *, n_servers: int,
                       window_size: int, threshold: float, lam: float,
                       alpha: float, window_dt: float, policy: str,
-                      observe: bool, renorm: bool, interpret: bool = False):
-    """Temporal stream kernel over C independent clients.
+                      observe: bool, renorm: bool, trial_tile: int = 1,
+                      interpret: bool = False):
+    """Temporal stream kernel over T independent streams (clients/trials).
 
-    object_ids/lengths/valid: (C, N) with N = W * window_size;
-    tables: (C, 4, M_pad) packed log tensors; seeds: (C, 1) uint32;
-    win_rates: (C, W, M_pad) TRUE service rates per window.
+    object_ids/lengths/valid: (T, N) with N = W * window_size;
+    tables: (T, 4, M_pad) packed log tensors; seeds: (T, 1) uint32;
+    win_rates: (T, W, M_pad) TRUE service rates per window.  T must be a
+    multiple of ``trial_tile``; each of the ``T / trial_tile`` program
+    instances runs its tile of streams vectorized over VMEM sublanes.
 
-    Returns (choices (C, N) int32, latencies (C, N) f32,
-    final_tables (C, 4, M_pad) f32, window_loads (C, W, M_pad) f32).
+    Returns (choices (T, N) int32, latencies (T, N) f32,
+    final_tables (T, 4, M_pad) f32, window_loads (T, W, M_pad) f32,
+    metrics (T, MET_PAD) f32 in `policy_core.MET_*` lane order).
     """
-    c, n = object_ids.shape
+    t, n = object_ids.shape
     m_pad = tables.shape[-1]
     n_win = win_rates.shape[1]
     assert n == n_win * window_size, (n, n_win, window_size)
+    assert t % trial_tile == 0, (t, trial_tile)
+    tt = trial_tile
+    # drain decrements: pre-multiplied OUTSIDE the kernel (§9 FMA note)
+    win_dec = window_decrements(win_rates, window_dt).astype(jnp.float32)
     kernel = functools.partial(
         _sched_stream_kernel, n_windows=n_win, window_size=window_size,
-        n_servers=n_servers, m_pad=m_pad, threshold=threshold, lam=lam,
-        alpha=alpha, window_dt=window_dt, policy=policy, observe=observe,
-        renorm=renorm)
+        n_servers=n_servers, m_pad=m_pad, t_tile=tt, threshold=threshold,
+        lam=lam, alpha=alpha, window_dt=window_dt, policy=policy,
+        observe=observe, renorm=renorm)
     return pl.pallas_call(
         kernel,
-        grid=(c,),
+        grid=(t // tt,),
         in_specs=[
-            pl.BlockSpec((1, n), lambda i: (i, 0)),
-            pl.BlockSpec((1, n), lambda i: (i, 0)),
-            pl.BlockSpec((1, n), lambda i: (i, 0)),
-            pl.BlockSpec((1, N_ROWS, m_pad), lambda i: (i, 0, 0)),
-            pl.BlockSpec((1, 1), lambda i: (i, 0)),
-            pl.BlockSpec((1, n_win, m_pad), lambda i: (i, 0, 0)),
+            pl.BlockSpec((tt, n), lambda i: (i, 0)),
+            pl.BlockSpec((tt, n), lambda i: (i, 0)),
+            pl.BlockSpec((tt, n), lambda i: (i, 0)),
+            pl.BlockSpec((tt, N_ROWS, m_pad), lambda i: (i, 0, 0)),
+            pl.BlockSpec((tt, 1), lambda i: (i, 0)),
+            pl.BlockSpec((tt, n_win, m_pad), lambda i: (i, 0, 0)),
+            pl.BlockSpec((tt, n_win, m_pad), lambda i: (i, 0, 0)),
         ],
         out_specs=[
-            pl.BlockSpec((1, n), lambda i: (i, 0)),
-            pl.BlockSpec((1, n), lambda i: (i, 0)),
-            pl.BlockSpec((1, N_ROWS, m_pad), lambda i: (i, 0, 0)),
-            pl.BlockSpec((1, n_win, m_pad), lambda i: (i, 0, 0)),
+            pl.BlockSpec((tt, n), lambda i: (i, 0)),
+            pl.BlockSpec((tt, n), lambda i: (i, 0)),
+            pl.BlockSpec((tt, N_ROWS, m_pad), lambda i: (i, 0, 0)),
+            pl.BlockSpec((tt, n_win, m_pad), lambda i: (i, 0, 0)),
+            pl.BlockSpec((tt, MET_PAD), lambda i: (i, 0)),
         ],
         out_shape=[
-            jax.ShapeDtypeStruct((c, n), jnp.int32),
-            jax.ShapeDtypeStruct((c, n), jnp.float32),
-            jax.ShapeDtypeStruct((c, N_ROWS, m_pad), jnp.float32),
-            jax.ShapeDtypeStruct((c, n_win, m_pad), jnp.float32),
+            jax.ShapeDtypeStruct((t, n), jnp.int32),
+            jax.ShapeDtypeStruct((t, n), jnp.float32),
+            jax.ShapeDtypeStruct((t, N_ROWS, m_pad), jnp.float32),
+            jax.ShapeDtypeStruct((t, n_win, m_pad), jnp.float32),
+            jax.ShapeDtypeStruct((t, MET_PAD), jnp.float32),
         ],
         scratch_shapes=[
-            pltpu.VMEM((N_ROWS, m_pad), jnp.float32),   # the packed log
+            pltpu.VMEM((N_ROWS, tt, m_pad), jnp.float32),   # the log stack
         ],
         interpret=interpret,
-    )(object_ids, lengths, valid, tables, seeds, win_rates)
+    )(object_ids, lengths, valid, tables, seeds, win_rates, win_dec)
 
 
 def sched_select_call(object_ids: jax.Array, lengths: jax.Array,
@@ -290,7 +376,7 @@ def sched_select_call(object_ids: jax.Array, lengths: jax.Array,
     ], axis=1)                                    # (C, 4, m_pad)
     valid = jnp.ones((c, n), jnp.int32)
     rates = jnp.ones((c, 1, m_pad), jnp.float32)  # one window, unit rates
-    choices, _, final_tables, _ = sched_stream_call(
+    choices, _, final_tables, _, _ = sched_stream_call(
         object_ids, lengths, valid, tables, seeds, rates, n_servers=m,
         window_size=n, threshold=threshold, lam=lam, alpha=0.25,
         window_dt=0.0, policy=policy, observe=False, renorm=False,

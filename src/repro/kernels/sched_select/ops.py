@@ -1,6 +1,6 @@
 """Jit'd wrappers for the sched_select kernels (auto-interpret on CPU).
 
-Two entry points:
+Three entry points:
 
 * :func:`sched_select` — the legacy single-window static-load form
   (minload / two_random), kept bit-identical to the seed kernel;
@@ -8,6 +8,12 @@ Two entry points:
   ``engine.run_stream`` trace (windows, drain, completion feedback) as
   ONE ``pallas_call`` over the packed ``(4, M)`` log tensor.  This is
   what ``engine.run_stream(backend="kernel")`` dispatches to.
+* :func:`sched_stream_batch` — the TRIAL-GRID form (DESIGN.md §9): a
+  whole T-trial Monte-Carlo sweep as ONE ``pallas_call`` with
+  ``grid = (ceil(T / trial_tile),)``; each program instance runs
+  ``trial_tile`` trials vectorized over VMEM sublanes and reduces its
+  fused per-trial metrics in-VMEM.  ``engine.run_stream_batch`` (and
+  through it ``simulate.run_trials(backend="kernel")``) dispatches here.
 """
 
 from __future__ import annotations
@@ -18,12 +24,18 @@ from typing import Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.core.policy_core import N_METRICS, init_table
 from repro.kernels.sched_select.kernel import (sched_select_call,
                                                sched_stream_call)
 
 POLICIES = ("minload", "two_random", "ect", "trh")
 # policies available through the legacy static entry point
 STATIC_POLICIES = ("minload", "two_random")
+
+# trials per program instance in the trial-grid form: the sublane count
+# of the native f32 (8, 128) TPU tile, so each vectorized table op fills
+# whole tiles instead of one sublane in eight.
+DEFAULT_TRIAL_TILE = 8
 
 
 def _pad_servers(m: int) -> int:
@@ -106,7 +118,7 @@ def sched_stream(object_ids: jax.Array, lengths: jax.Array,
     pad = ((0, 0), (0, 0), (0, m_pad - m))
     tables_p = jnp.pad(table.astype(jnp.float32), pad)
     rates_p = jnp.pad(win_rates.astype(jnp.float32), pad)
-    choices, lats, ftab, wloads = sched_stream_call(
+    choices, lats, ftab, wloads, _ = sched_stream_call(
         object_ids.astype(jnp.int32), lengths.astype(jnp.float32),
         valid.astype(jnp.int32), tables_p,
         seed.reshape(c, 1).astype(jnp.uint32), rates_p,
@@ -118,3 +130,73 @@ def sched_stream(object_ids: jax.Array, lengths: jax.Array,
     if single:
         return choices[0], lats[0], ftab[0], wloads[0]
     return choices, lats, ftab, wloads
+
+
+@functools.partial(jax.jit, static_argnames=("n_servers", "window_size",
+                                             "threshold", "lam", "alpha",
+                                             "window_dt", "policy",
+                                             "observe", "renorm",
+                                             "trial_tile", "interpret"))
+def sched_stream_batch(object_ids: jax.Array, lengths: jax.Array,
+                       valid: jax.Array, tables: jax.Array, seeds: jax.Array,
+                       win_rates: jax.Array, *, n_servers: int,
+                       window_size: int, threshold: float = 0.0,
+                       lam: float = 32.0, alpha: float = 0.25,
+                       window_dt: float = 0.0, policy: str = "ect",
+                       observe: bool = True, renorm: bool = True,
+                       trial_tile: int = DEFAULT_TRIAL_TILE,
+                       interpret: Optional[bool] = None
+                       ) -> Tuple[jax.Array, jax.Array, jax.Array,
+                                  jax.Array, jax.Array]:
+    """Trial-grid kernel: T whole windowed streams as ONE ``pallas_call``.
+
+    object_ids/lengths/valid: (T, N) per-trial streams (N = W *
+    window_size, padding rows ``valid == False``); tables: (T, 4, M)
+    packed log tensors; seeds: (T,) uint32 LCG states; win_rates:
+    (T, W, M) TRUE per-window service rates.  T is padded up to a
+    multiple of ``trial_tile`` with inert trials (all-invalid requests,
+    fresh tables, unit rates) and the grid runs ``ceil(T / trial_tile)``
+    program instances, each vectorizing its tile of trials over VMEM
+    sublanes — bit-exact per trial vs. mapping :func:`sched_stream`
+    sequentially (asserted in tests/test_kernels.py).
+
+    Returns (choices (T, N) int32, latencies (T, N) f32, final_tables
+    (T, 4, M) f32, window_loads (T, W, M) f32, metrics (T, N_METRICS)
+    f32 in `policy_core.MET_*` order — the fused in-VMEM reduction).
+    """
+    if policy not in POLICIES:
+        raise ValueError(f"kernel policy must be one of {POLICIES}")
+    interpret = _auto_interpret(interpret)
+    t, n = object_ids.shape
+    m = tables.shape[-1]
+    tile = min(trial_tile, t) if t else 1
+    t_pad = -(-t // tile) * tile
+    m_pad = _pad_servers(m)
+    if t_pad != t:
+        extra = t_pad - t
+        object_ids = jnp.concatenate(
+            [object_ids, jnp.zeros((extra, n), object_ids.dtype)])
+        lengths = jnp.concatenate(
+            [lengths, jnp.zeros((extra, n), lengths.dtype)])
+        valid = jnp.concatenate(
+            [valid, jnp.zeros((extra, n), valid.dtype)])
+        tables = jnp.concatenate(
+            [tables, jnp.broadcast_to(init_table(m),
+                                      (extra,) + tables.shape[1:])])
+        seeds = jnp.concatenate([seeds, jnp.zeros((extra,), seeds.dtype)])
+        win_rates = jnp.concatenate(
+            [win_rates, jnp.ones((extra,) + win_rates.shape[1:],
+                                 win_rates.dtype)])
+    pad = ((0, 0), (0, 0), (0, m_pad - m))
+    tables_p = jnp.pad(tables.astype(jnp.float32), pad)
+    rates_p = jnp.pad(win_rates.astype(jnp.float32), pad)
+    choices, lats, ftab, wloads, metrics = sched_stream_call(
+        object_ids.astype(jnp.int32), lengths.astype(jnp.float32),
+        valid.astype(jnp.int32), tables_p,
+        seeds.reshape(t_pad, 1).astype(jnp.uint32), rates_p,
+        n_servers=n_servers, window_size=window_size, threshold=threshold,
+        lam=lam, alpha=alpha, window_dt=window_dt, policy=policy,
+        observe=observe, renorm=renorm, trial_tile=tile,
+        interpret=interpret)
+    return (choices[:t], lats[:t], ftab[:t, :, :m], wloads[:t, :, :m],
+            metrics[:t, :N_METRICS])

@@ -16,7 +16,9 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.policy_core import (ROW_EST, ROW_EWMA, ROW_LOADS, ROW_PROBS,
-                                    prob_ranks, renormalize_probs)
+                                    drain_loads, prob_ranks,
+                                    renormalize_probs, stream_metrics,
+                                    window_decrements)
 
 
 def _lcg(rng: jax.Array) -> jax.Array:
@@ -60,8 +62,9 @@ def sched_select_ref(object_ids: jax.Array, lengths: jax.Array,
         loads = jnp.where(onehot, loads + ln, loads)
         p_i = probs[choose]
         l_i = loads[choose]
-        decayed = p_i * jnp.exp(-l_i / lam)
-        delta = (p_i - decayed) / (m - 1)
+        e = jnp.exp(-l_i / lam)
+        decayed = p_i * e                                    # Eq. (2)
+        delta = p_i * (1.0 - e) / (m - 1)                    # Eq. (3)
         probs = jnp.where(onehot, decayed,
                           jnp.where(valid, probs + delta, 0.0))
         return (loads, probs, rng), choose
@@ -101,7 +104,7 @@ def sched_stream_ref(object_ids: jax.Array, lengths: jax.Array,
 
     def window(carry, xs):
         loads, probs, ewma, est, rng = carry
-        obj, lens, val, rates = xs
+        obj, lens, val, rates, dec = xs
         # window-start plan: stable descending probability ranking
         ranks = prob_ranks(probs)                    # rank of each server
         order = jnp.argsort(ranks)                   # server at position k
@@ -141,8 +144,9 @@ def sched_stream_ref(object_ids: jax.Array, lengths: jax.Array,
             # one-hot masked sums, exactly as the kernel extracts lanes
             p_i = jnp.sum(jnp.where(onehot, probs, 0.0))
             l_i = jnp.sum(jnp.where(onehot, new_loads, 0.0))
-            decayed = p_i * jnp.exp(-l_i / lam)
-            delta = (p_i - decayed) / (m - 1)
+            e = jnp.exp(-l_i / lam)
+            decayed = p_i * e                                # Eq. (2)
+            delta = p_i * (1.0 - e) / (m - 1)                # Eq. (3)
             new_probs = jnp.where(onehot, decayed, probs + delta)
             probs = jnp.where(v, new_probs, probs)
             loads = new_loads
@@ -161,15 +165,44 @@ def sched_stream_ref(object_ids: jax.Array, lengths: jax.Array,
         (loads, probs, ewma, est, rng), (ch, lt) = jax.lax.scan(
             step, (loads, probs, ewma, est, rng), (obj, lens, val))
         if renorm:
-            # shared core: pads the reduction to the kernel's lane width
+            # shared core: lane_sum's explicit halving tree (§9 contract)
             probs = renormalize_probs(probs)
         if window_dt:
-            loads = jnp.maximum(
-                loads - jnp.maximum(rates, 1e-6) * window_dt, 0.0)
+            # shared core: dec materialized outside the scan (§9 contract)
+            loads = drain_loads(loads, rates, window_dt, dec=dec)
         return (loads, probs, ewma, est, rng), (ch, lt, loads)
 
+    rates_f = win_rates.astype(jnp.float32)
     carry0 = (loads0, probs0, ewma0, est0, seed.astype(jnp.uint32))
     (loads, probs, ewma, est, _), (choices, lats, wloads) = jax.lax.scan(
-        window, carry0, (obj_w, len_w, val_w, win_rates.astype(jnp.float32)))
+        window, carry0, (obj_w, len_w, val_w, rates_f,
+                         window_decrements(rates_f, window_dt)))
     final = jnp.stack([loads, probs, ewma, est])
     return choices.reshape(-1), lats.reshape(-1), final, wloads
+
+
+def sched_stream_batch_ref(object_ids: jax.Array, lengths: jax.Array,
+                           valid: jax.Array, tables: jax.Array,
+                           seeds: jax.Array, win_rates: jax.Array, *,
+                           n_servers: int, window_size: int,
+                           threshold: float, lam: float, alpha: float = 0.25,
+                           window_dt: float = 0.0, policy: str = "ect",
+                           observe: bool = True, renorm: bool = True
+                           ) -> Tuple[jax.Array, jax.Array, jax.Array,
+                                      jax.Array, jax.Array]:
+    """Trial-batched oracle for ``ops.sched_stream_batch``: the per-trial
+    scan replay vmapped over the leading trial axis, plus the fused
+    metrics twin (`policy_core.stream_metrics`) over the per-trial
+    latencies.  Same shapes as the grid kernel: object_ids/lengths/valid
+    (T, N), tables (T, 4, M), seeds (T,), win_rates (T, W, M); returns
+    (choices, latencies, final_tables, window_loads, metrics
+    (T, N_METRICS))."""
+    one = functools.partial(
+        sched_stream_ref, n_servers=n_servers, window_size=window_size,
+        threshold=threshold, lam=lam, alpha=alpha, window_dt=window_dt,
+        policy=policy, observe=observe, renorm=renorm)
+    choices, lats, finals, wloads = jax.vmap(one)(
+        object_ids, lengths, valid, tables, seeds, win_rates)
+    metrics = stream_metrics(lats, valid.astype(bool), window_dt,
+                             window_size)
+    return choices, lats, finals, wloads, metrics

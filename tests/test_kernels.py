@@ -242,6 +242,173 @@ def test_stream_kernel_degenerate_static_matches_legacy_minload():
                                        np.asarray(tab[0]), atol=1e-3)
 
 
+# ---------------------------------------------------------------------------
+# Trial-grid batch kernel: the whole sweep as ONE pallas_call (DESIGN.md §9)
+# ---------------------------------------------------------------------------
+
+from repro.core import policy_core  # noqa: E402
+from repro.kernels.sched_select import (sched_stream_batch,  # noqa: E402
+                                        sched_stream_batch_ref)
+
+
+def _batch_case(t, m, n_win, win, seed=0):
+    rng = np.random.default_rng(seed)
+    n = n_win * win
+    return (jnp.asarray(rng.integers(0, 8 * m, (t, n)), jnp.int32),
+            jnp.asarray(rng.uniform(1.0, 20.0, (t, n)), jnp.float32),
+            jnp.asarray(rng.random((t, n)) > 0.2),      # padded windows
+            jnp.stack([statlog.init_state(LogConfig(n_servers=m,
+                                                    lam=50.0)).log] * t),
+            jnp.asarray(rng.integers(0, 2**31, (t,)), jnp.uint32),
+            jnp.asarray(rng.uniform(50.0, 300.0, (t, n_win, m)), jnp.float32))
+
+
+BATCH_CASES = [
+    # (T, M, W, win, tile, policy) — odd M, T not a multiple of the grid
+    # tile (inert padded trials), partially-invalid (padded) windows.
+    (5, 37, 4, 32, 2, "ect"),
+    (5, 37, 4, 32, 2, "trh"),
+    (10, 100, 5, 40, 8, "ect"),      # headline shape, T padded 10 -> 16
+    (16, 130, 4, 50, 8, "trh"),      # M wider than one 128-lane tile
+    (3, 24, 4, 30, 3, "ect"),
+    # M_pad = 384 is NOT a power of two: lane_sum's in-kernel renorm
+    # reduction must pad 384 -> 512 (the only path that exercises it)
+    (4, 300, 3, 32, 4, "trh"),
+]
+
+
+@pytest.mark.parametrize("case", enumerate(BATCH_CASES),
+                         ids=lambda c: str(c[1]) if isinstance(c, tuple)
+                         else None)
+def test_stream_batch_matches_ref_and_sequential(case):
+    """Trial-grid kernel == batched oracle == per-trial sequential kernel:
+    choices, latencies, loads, window loads and fused metrics BIT-EXACT
+    (the tentpole contract); probability/EWMA-derived table rows to float
+    tolerance — `jnp.exp`'s polynomial may contract differently at some
+    tile widths (DESIGN.md §9), a drift the decision outputs never see."""
+    # stable per-case seed (hash() varies with PYTHONHASHSEED — a failing
+    # bit-exactness case must reproduce across processes)
+    idx, (t, m, n_win, win, tile, policy) = case
+    obj, lens, valid, tables, seeds, rates = _batch_case(
+        t, m, n_win, win, seed=1000 + idx)
+    kw = dict(n_servers=m, window_size=win, threshold=2.0, lam=50.0,
+              window_dt=0.02, policy=policy, observe=True, renorm=True)
+    ch, lat, tab, wl, met = sched_stream_batch(obj, lens, valid, tables,
+                                               seeds, rates,
+                                               trial_tile=tile, **kw)
+    rch, rlat, rtab, rwl, rmet = sched_stream_batch_ref(
+        obj, lens, valid, tables, seeds, rates, **kw)
+    np.testing.assert_array_equal(np.asarray(ch), np.asarray(rch))
+    np.testing.assert_array_equal(np.asarray(lat), np.asarray(rlat))
+    np.testing.assert_array_equal(np.asarray(wl), np.asarray(rwl))
+    np.testing.assert_array_equal(np.asarray(met), np.asarray(rmet))
+    np.testing.assert_array_equal(
+        np.asarray(tab[:, policy_core.ROW_LOADS]),
+        np.asarray(rtab[:, policy_core.ROW_LOADS]))
+    np.testing.assert_allclose(np.asarray(tab), np.asarray(rtab), atol=1e-6)
+    # per-trial sequential kernel (the lax.map path's unit of work)
+    for i in range(t):
+        c1, l1, _, w1 = sched_stream(obj[i], lens[i], valid[i], tables[i],
+                                     seeds[i], rates[i], **kw)
+        np.testing.assert_array_equal(np.asarray(ch[i]), np.asarray(c1))
+        np.testing.assert_array_equal(np.asarray(lat[i]), np.asarray(l1))
+        np.testing.assert_array_equal(np.asarray(wl[i]), np.asarray(w1))
+
+
+def test_stream_batch_tile1_full_table_exact():
+    """At trial_tile=1 the grid form degenerates to the PR-2 single-stream
+    kernel: the ENTIRE final table is bit-exact vs the oracle."""
+    obj, lens, valid, tables, seeds, rates = _batch_case(3, 37, 4, 32,
+                                                         seed=11)
+    kw = dict(n_servers=37, window_size=32, threshold=2.0, lam=50.0,
+              window_dt=0.02, policy="ect", observe=True, renorm=True)
+    outs = sched_stream_batch(obj, lens, valid, tables, seeds, rates,
+                              trial_tile=1, **kw)
+    refs = sched_stream_batch_ref(obj, lens, valid, tables, seeds, rates,
+                                  **kw)
+    for a, b in zip(outs, refs):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_stream_batch_fused_metrics_definition():
+    """The fused metrics row equals the canonical host-side definitions:
+    makespan = max window-open + latency over valid steps; p99 = the
+    nearest-rank (ceil(0.99 n)-th order) statistic; sum/max/count over
+    the valid latencies."""
+    t, m, n_win, win = 6, 24, 5, 30
+    obj, lens, valid, tables, seeds, rates = _batch_case(t, m, n_win, win,
+                                                         seed=5)
+    dt = 0.03
+    kw = dict(n_servers=m, window_size=win, threshold=2.0, lam=50.0,
+              window_dt=dt, policy="ect", observe=True, renorm=True)
+    _, lat, _, _, met = sched_stream_batch(obj, lens, valid, tables, seeds,
+                                           rates, trial_tile=3, **kw)
+    lat, met, vnp = np.asarray(lat), np.asarray(met), np.asarray(valid)
+    for i in range(t):
+        vl = lat[i][vnp[i]]
+        w_open = ((np.arange(n_win * win) // win).astype(np.float32)
+                  * np.float32(dt))
+        mk = float((w_open[vnp[i]] + vl).max())
+        k = int(np.ceil(0.99 * len(vl)))
+        p99 = float(np.sort(vl)[k - 1])
+        assert met[i, policy_core.MET_MAKESPAN] == pytest.approx(mk, abs=0)
+        assert met[i, policy_core.MET_P99] == pytest.approx(
+            p99, rel=1e-6), (met[i, policy_core.MET_P99], p99)
+        assert met[i, policy_core.MET_LAT_SUM] == pytest.approx(
+            float(vl.sum()), rel=1e-5)
+        assert met[i, policy_core.MET_LAT_MAX] == float(vl.max())
+        assert met[i, policy_core.MET_N_VALID] == float(len(vl))
+
+
+def test_run_stream_batch_engine_parity():
+    """engine.run_stream_batch == lax.map of run_stream(backend='kernel')
+    == the vmapped jax engine, over a transient trace — decisions,
+    latencies, loads, redirects and probe accounting bit-exact."""
+    t, m, r, win = 5, 37, 250, 60
+    trace = _transient_trace(m, slow_ids=(3,))
+    cfg = LogConfig(n_servers=m, lam=50.0)
+    keys = jax.random.split(jax.random.key(7), t)
+    rng = np.random.default_rng(9)
+    works = Workload(
+        jnp.asarray(rng.integers(0, 8 * m, (t, r)), jnp.int32),
+        jnp.asarray(rng.uniform(1.0, 20.0, (t, r)), jnp.float32),
+        jnp.ones((t, r), bool))
+    state = statlog.init_state(cfg, rates=trace.rates[0])
+    states = jax.tree.map(lambda a: jnp.broadcast_to(a, (t,) + a.shape),
+                          state)
+    traces = jax.tree.map(lambda a: jnp.broadcast_to(a, (t,) + a.shape),
+                          trace)
+    for policy, rng_mode in (("ect", "jax"), ("trh", "lcg")):
+        pol = PolicyConfig(name=policy, threshold=0.05, rng=rng_mode)
+        batch, metrics = engine.run_stream_batch(
+            states, works, keys, policy=pol, log_cfg=cfg, window_size=win,
+            traces=traces, window_dt=0.04, observe=True)
+
+        def one(w_k, backend):
+            w, k = w_k
+            return engine.run_stream(state, w, k, policy=pol, log_cfg=cfg,
+                                     window_size=win, trace=trace,
+                                     window_dt=0.04, observe=True,
+                                     backend=backend)
+        seq = jax.lax.map(lambda wk: one(wk, "kernel"), (works, keys))
+        eng = jax.vmap(lambda w, k: one((w, k), "jax"))(works, keys)
+        for other in (seq, eng):
+            for f in ("chosen", "latencies", "redirected", "window_loads"):
+                np.testing.assert_array_equal(
+                    np.asarray(getattr(batch, f)),
+                    np.asarray(getattr(other, f)), err_msg=(policy, f))
+            np.testing.assert_array_equal(
+                np.asarray(batch.state.n_assigned),
+                np.asarray(other.state.n_assigned))
+        np.testing.assert_array_equal(np.asarray(batch.probe_msgs),
+                                      np.asarray(seq.probe_msgs))
+        # fused makespan == the canonical reduction over the seq path
+        w_open = (jnp.arange(r) // win).astype(jnp.float32) * 0.04
+        np.testing.assert_array_equal(
+            np.asarray(metrics[:, policy_core.MET_MAKESPAN]),
+            np.asarray(jnp.max(w_open[None] + seq.latencies, axis=-1)))
+
+
 def test_stream_kernel_avoids_transient_straggler():
     """Behavioural check: during the slow phase of a transient trace, ECT
     (kernel backend) steers work away from the straggler."""

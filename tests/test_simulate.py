@@ -210,3 +210,67 @@ def test_latency_analysis_helpers():
     slow = analysis.slowdown_vs_baseline(results, "rr")
     assert abs(slow["rr"]["p99_vs_rr"] - 1.0) < 1e-9
     assert abs(slow["rr"]["makespan_vs_rr"] - 1.0) < 1e-9
+
+
+# ---------------------------------------------------------------------------
+# Trial-grid kernel backend (DESIGN.md §9): run_trials(backend="kernel")
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("scenario", simulate.SCENARIOS)
+def test_kernel_batch_backend_matches_sequential_and_engine(scenario):
+    """SimConfig(backend='kernel') schedules the whole sweep as ONE
+    trial-grid pallas_call; every TrialResult field is bit-exact vs (a)
+    mapping the sequential kernel path trial-by-trial and (b) the
+    vmapped jax engine — across all five scenarios, odd M, padded
+    windows and T below the grid tile."""
+    cfg_k = SimConfig(n_servers=37, n_requests=250, n_trials=5,
+                      window_size=60, backend="kernel",
+                      scenario=ScenarioConfig(name=scenario))
+    cfg_j = dataclasses.replace(cfg_k, backend="jax")
+    log = simulate.default_log_cfg(cfg_k)
+    pol = PolicyConfig(name="ect", threshold=0.05)
+    batch = simulate.run_trials(KEY, cfg_k, pol, log)
+    keys = jax.random.split(KEY, cfg_k.n_trials)
+    seq = jax.jit(lambda ks: jax.lax.map(
+        lambda k: simulate._run_shared_log(k, cfg_k, pol, log), ks))(keys)
+    eng = simulate.run_trials(KEY, cfg_j, pol, log)
+    for other, tag in ((seq, "lax.map kernel"), (eng, "vmapped engine")):
+        for f in batch._fields:
+            np.testing.assert_array_equal(
+                np.asarray(getattr(batch, f)),
+                np.asarray(getattr(other, f)),
+                err_msg=f"{scenario}/{tag}/{f}")
+
+
+def test_kernel_batch_backend_trh_lcg_parity():
+    """TRH rides the same trial-grid path once the engine replays the
+    kernel's LCG (rng='lcg'), T not a multiple of the tile."""
+    cfg_k = SimConfig(n_servers=24, n_requests=240, n_trials=10,
+                      window_size=60, backend="kernel", trial_tile=4,
+                      scenario=ScenarioConfig(name="transient"))
+    cfg_j = dataclasses.replace(cfg_k, backend="jax")
+    log = simulate.default_log_cfg(cfg_k)
+    pol = PolicyConfig(name="trh", threshold=4.0, rng="lcg")
+    batch = simulate.run_trials(KEY, cfg_k, pol, log)
+    eng = simulate.run_trials(KEY, cfg_j, pol, log)
+    for f in ("chosen", "latencies", "server_loads", "phase_time",
+              "straggler_hits", "redirected", "n_assigned"):
+        np.testing.assert_array_equal(np.asarray(getattr(batch, f)),
+                                      np.asarray(getattr(eng, f)),
+                                      err_msg=f)
+
+
+def test_simconfig_rejects_bad_fields_with_values():
+    """Satellite: config validation raises ValueError (not assert — gone
+    under `python -O`) naming the offending values."""
+    with pytest.raises(ValueError, match="huge"):
+        SimConfig(workload="huge")
+    with pytest.raises(ValueError, match="p2p"):
+        SimConfig(client_model="p2p")
+    with pytest.raises(ValueError, match="tpu"):
+        SimConfig(backend="tpu")
+    with pytest.raises(ValueError, match="per_client"):
+        SimConfig(backend="kernel", client_model="per_client")
+    with pytest.raises(ValueError, match="trial_tile=0"):
+        SimConfig(backend="kernel", trial_tile=0)
