@@ -187,12 +187,19 @@ def kernel_vs_engine_throughput(n_servers: int = 100,
 @functools.lru_cache(maxsize=None)   # run_all + emit_bench_point share it
 def kernel_batch_throughput(n_servers: int = 100, n_requests: int = 2000,
                             window_size: int = 100, n_trials: int = 100,
-                            reps: int = 3,
+                            reps: int = 3, policy: str = "ect",
+                            threshold: float = 0.05,
                             check_bit_exact: bool = True) -> Dict[str, float]:
     """Trial-grid kernel throughput (DESIGN.md §9): the WHOLE Monte-Carlo
     sweep — ``n_trials`` independent transient-scenario streams — as ONE
     pallas_call (`simulate.run_trials(backend='kernel')`), vs. the same
     sweep mapped trial-by-trial through the sequential kernel path.
+
+    ``policy`` selects the in-kernel decision rule — since the in-VMEM
+    sorts (DESIGN.md §10) this includes the sort-based ``mlml``/``nltr``,
+    whose per-window bitonic request sort + one-hot gather loop is the
+    costliest kernel shape (tracked per run in BENCH_sched.json as
+    ``kernel_batch_req_s_<policy>``).
 
     ``kernel_batch_req_s`` is aggregate (trials x requests) / median
     wall seconds; ``batch_bit_exact`` asserts every per-trial decision,
@@ -207,19 +214,22 @@ def kernel_batch_throughput(n_servers: int = 100, n_requests: int = 2000,
                     backend="kernel",
                     scenario=ScenarioConfig(name="transient"))
     log_cfg = simulate.default_log_cfg(cfg)
-    pol = PolicyConfig(name="ect", threshold=0.05)
+    rng = "lcg" if policy in ("trh", "nltr", "two_choice") else "jax"
+    pol = PolicyConfig(name=policy, threshold=threshold, rng=rng)
     key = jax.random.key(0)
 
-    dt, _ = _median_time(
-        lambda: simulate.run_trials(key, cfg, pol, log_cfg).chosen, reps)
+    # time the whole TrialResult and keep the warm output — the
+    # bit-exactness check below reuses it instead of paying for one
+    # more full sweep
+    dt, batch = _median_time(
+        lambda: simulate.run_trials(key, cfg, pol, log_cfg), reps)
     out: Dict[str, float] = {
         "n_servers": n_servers, "n_requests": n_requests,
-        "n_trials": n_trials, "reps": reps,
+        "n_trials": n_trials, "reps": reps, "policy": policy,
         "batch_s": dt,
         "kernel_batch_req_s": n_trials * n_requests / dt,
     }
     if check_bit_exact:
-        batch = simulate.run_trials(key, cfg, pol, log_cfg)
         keys = jax.random.split(key, n_trials)
         seq = jax.jit(lambda ks: jax.lax.map(
             lambda k: simulate._run_shared_log(k, cfg, pol, log_cfg), ks)
@@ -233,7 +243,8 @@ def kernel_batch_throughput(n_servers: int = 100, n_requests: int = 2000,
             and (np.asarray(batch.phase_time)
                  == np.asarray(seq.phase_time)).all())
     print(f"\n== trial-grid kernel sweep throughput ({n_servers} OSS x "
-          f"{n_requests} reqs x {n_trials} trials, median of {reps}) ==")
+          f"{n_requests} reqs x {n_trials} trials, policy={policy}, "
+          f"median of {reps}) ==")
     print(f"  one pallas_call for the whole sweep: {dt:8.3f}s  "
           f"{out['kernel_batch_req_s']:10.0f} req/s aggregate")
     if check_bit_exact:
@@ -315,6 +326,13 @@ def emit_bench_point(path: str = "BENCH_sched.json",
     point["kernel_batch_req_s"] = bat["kernel_batch_req_s"]
     point["kernel_batch_trials"] = bat["n_trials"]
     point["kernel_batch_bit_exact"] = bat.get("batch_bit_exact")
+    # sort-based policies through the same trial-grid kernel (DESIGN.md
+    # §10); parity is covered by tests, so skip the lax.map re-check here
+    for spol in ("mlml", "nltr"):
+        sb = kernel_batch_throughput(n_servers=kernel_scale,
+                                     n_trials=batch_trials, policy=spol,
+                                     threshold=5.0, check_bit_exact=False)
+        point[f"kernel_batch_req_s_{spol}"] = sb["kernel_batch_req_s"]
     history = []
     if os.path.exists(path):
         try:
@@ -343,10 +361,21 @@ def trajectory(path: str = "BENCH_sched.json",
     if not os.path.exists(path):
         print(f"[trajectory] {path} not found — run benchmarks first")
         return []
-    with open(path) as f:
-        history = json.load(f)
+    # Tolerant history load: a zero-byte / half-written / corrupt file
+    # (e.g. an interrupted emit_bench_point) must render as "empty", not
+    # crash the whole benchmark report.
+    try:
+        with open(path) as f:
+            history = json.load(f)
+    except (json.JSONDecodeError, OSError) as e:
+        print(f"[trajectory] {path} is empty or unreadable ({e}) — "
+              "run benchmarks first")
+        return []
     if not isinstance(history, list):
         history = [history]
+    # points must be dicts; anything else (schema drift) is dropped, not
+    # crashed on — older points simply miss the newer series
+    history = [pt for pt in history if isinstance(pt, dict)]
     if not history:
         print(f"[trajectory] {path} is empty")
         return history
@@ -355,8 +384,11 @@ def trajectory(path: str = "BENCH_sched.json",
             "transient_p99_trh", "kernel_backend_phase_s")
     # scheduling throughput series (req/s — higher is better); the
     # delta table flags any run where a kernel path fell behind the
-    # engine (the regression the trial-grid kernel exists to prevent)
-    thr_cols = ("engine_req_s", "kernel_req_s", "kernel_batch_req_s")
+    # engine (the regression the trial-grid kernel exists to prevent).
+    # Older points predate the later series (kernel_batch_req_s and the
+    # sort-policy rows) — every access is a tolerant .get.
+    thr_cols = ("engine_req_s", "kernel_req_s", "kernel_batch_req_s",
+                "kernel_batch_req_s_mlml", "kernel_batch_req_s_nltr")
     print(f"\n== perf trajectory ({len(history)} runs, {path}) ==")
     print(f"{'run':>4s} {'when':>16s} " +
           " ".join(f"{c.replace('phase_s_', 'ph_'):>14s}" for c in cols))
@@ -376,6 +408,10 @@ def trajectory(path: str = "BENCH_sched.json",
         print(f"{i:>4d} {when:>16s} " + " ".join(cells))
         prev = pt
 
+    # only the SAME-policy kernel series compare against engine_req_s
+    # (the sort-policy rows have no engine twin in the point — flagging
+    # them against the ect engine number would be apples-to-oranges)
+    flag_cols = ("kernel_req_s", "kernel_batch_req_s")
     print(f"\n{'run':>4s} " + " ".join(f"{c:>20s}" for c in thr_cols)
           + "  kernel vs engine")
     for i, pt in enumerate(history):
@@ -385,7 +421,7 @@ def trajectory(path: str = "BENCH_sched.json",
         for c in thr_cols:
             v = pt.get(c)
             cells.append(f"{'—':>20s}" if v is None else f"{v:20.0f}")
-            if (v is not None and eng is not None and c != "engine_req_s"
+            if (v is not None and eng is not None and c in flag_cols
                     and v < eng):
                 behind.append(c.replace("_req_s", ""))
         flag = ("  <-- " + ", ".join(behind) + " BEHIND engine"
@@ -453,6 +489,13 @@ def run_smoke() -> None:
     bat = kernel_batch_throughput(n_servers=24, n_requests=480,
                                   window_size=60, n_trials=10, reps=1)
     assert bat["batch_bit_exact"], "trial-grid/sequential divergence"
+    # a SORT-BASED policy through the batch kernel: the in-VMEM bitonic
+    # request sort + section bounds path (DESIGN.md §10) must stay
+    # bit-exact vs the lax.map sequential kernel pre-merge
+    srt = kernel_batch_throughput(n_servers=24, n_requests=480,
+                                  window_size=60, n_trials=10, reps=1,
+                                  policy="nltr", threshold=4.0)
+    assert srt["batch_bit_exact"], "sort-policy trial-grid divergence"
     _scenario_sweep(("transient",), ("rr", "ect"), 4)
     print(f"[smoke] ok in {time.time() - t0:.1f}s")
 
@@ -503,6 +546,9 @@ def run_all() -> None:
     # keyword calls match emit_bench_point's exactly so the lru_cache hits
     kernel_vs_engine_throughput(n_servers=100)
     kernel_batch_throughput(n_servers=100, n_trials=100)
+    for spol in ("mlml", "nltr"):
+        kernel_batch_throughput(n_servers=100, n_trials=100, policy=spol,
+                                threshold=5.0, check_bit_exact=False)
 
 
 if __name__ == "__main__":

@@ -42,8 +42,10 @@ from repro.core import policies as P
 from repro.core import policy_core, statlog
 from repro.core.statlog import LogConfig, SchedState
 
-# Policies the Pallas backend (kernels/sched_select) implements in-VMEM.
-KERNEL_POLICIES = ("ect", "trh")
+# Policies the Pallas backend (kernels/sched_select) implements in-VMEM —
+# since the in-VMEM bitonic sort (DESIGN.md §10) this is every engine
+# policy: the whole §3.4 library dispatches through the kernel.
+KERNEL_POLICIES = ("ect", "trh", "mlml", "nltr", "rr", "two_choice")
 
 
 class Workload(NamedTuple):
@@ -264,10 +266,14 @@ def run_stream(state: SchedState, work: Workload, key: jax.Array, *,
     ``backend`` selects the execution substrate: ``"jax"`` (the lax.scan
     engine, every policy) or ``"kernel"`` (the Pallas temporal kernel —
     the whole stream as ONE ``pallas_call`` with the packed log tensor in
-    VMEM; policies in ``KERNEL_POLICIES``).  The two backends are
-    bit-exact for ``ect``; for ``trh`` pass ``PolicyConfig(rng="lcg")``
-    so the jax path replays the kernel's LCG stream.
+    VMEM; every policy in ``KERNEL_POLICIES``, i.e. the full §3.4
+    library since the in-VMEM sorts of DESIGN.md §10).  The two backends
+    are bit-exact for the deterministic policies (``ect``, ``mlml``,
+    ``rr``); for the randomized ones (``trh``, ``nltr``, ``two_choice``)
+    pass ``PolicyConfig(rng="lcg")`` so the jax path replays the
+    kernel's LCG stream.
     """
+    P.validate_policy(policy, state.n_servers)
     if observe is None:
         observe = trace is not None
     if backend == "kernel":
@@ -331,8 +337,8 @@ def _run_stream_kernel(state: SchedState, work: Workload, key: jax.Array, *,
 
     if policy.name not in KERNEL_POLICIES:
         raise ValueError(
-            f"backend='kernel' supports {KERNEL_POLICIES}, got {policy.name!r}"
-            " (window-sorting policies stay on the jax backend)")
+            f"backend='kernel' supports {KERNEL_POLICIES}, got "
+            f"{policy.name!r}")
     r = work.n_requests
     m = state.n_servers
     n_win, obj, lens, val = _window_split(work, window_size)
@@ -351,7 +357,8 @@ def _run_stream_kernel(state: SchedState, work: Workload, key: jax.Array, *,
         state.log, seed, win_rates,
         n_servers=m, window_size=window_size, threshold=policy.threshold,
         lam=log_cfg.lam, alpha=log_cfg.ewma_alpha, window_dt=window_dt,
-        policy=policy.name, observe=observe, renorm=log_cfg.renorm)
+        policy=policy.name, observe=observe, renorm=log_cfg.renorm,
+        nltr_n=policy.nltr_n, probe_choices=policy.probe_choices)
 
     return _kernel_bookkeeping(state, choices, lats, table, wloads, g_obj,
                                g_val, val, req_to_step, win_rates[-1],
@@ -365,7 +372,8 @@ def _kernel_bookkeeping(state: SchedState, choices, lats, table, wloads,
                         window_size: int, r: int) -> ScheduleResult:
     """Host-side bookkeeping the kernel leaves behind, for ONE stream:
     redirect derivation, grouped-step -> request scatter, per-server
-    assignment counts, probe accounting (always 0 for kernel policies)
+    assignment counts, probe accounting (from
+    ``PolicyConfig.probes_per_request`` — nonzero only for two_choice)
     and the vclock/free_at replay.  Shared by the sequential kernel path
     and (vmapped) `run_stream_batch`, so batch-vs-sequential parity is
     structural rather than maintained in two copies.
@@ -457,8 +465,8 @@ def run_stream_batch(states: SchedState, works: Workload, keys: jax.Array, *,
     if policy.name not in KERNEL_POLICIES:
         raise ValueError(
             f"run_stream_batch supports {KERNEL_POLICIES}, got "
-            f"{policy.name!r} (window-sorting policies stay on the jax "
-            "backend)")
+            f"{policy.name!r}")
+    P.validate_policy(policy, states.n_servers)
     if observe is None:
         observe = traces is not None
     if trial_tile is None:
@@ -498,7 +506,8 @@ def run_stream_batch(states: SchedState, works: Workload, keys: jax.Array, *,
         n_servers=m, window_size=window_size, threshold=policy.threshold,
         lam=log_cfg.lam, alpha=log_cfg.ewma_alpha, window_dt=window_dt,
         policy=policy.name, observe=observe, renorm=log_cfg.renorm,
-        trial_tile=trial_tile)
+        trial_tile=trial_tile, nltr_n=policy.nltr_n,
+        probe_choices=policy.probe_choices)
 
     # host-side bookkeeping: the SAME single-stream helper as the
     # sequential kernel path, vmapped over trials (every op in it is

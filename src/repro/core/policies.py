@@ -113,45 +113,52 @@ class WindowPlan(NamedTuple):
     sec_size: int              # static servers-per-section (M // K)
 
 
+def validate_policy(cfg: PolicyConfig, n_servers: int) -> None:
+    """Cross-field validation a :class:`PolicyConfig` alone cannot do.
+
+    nLTR splits the server list into ``K = 2**nltr_n`` sections of
+    ``max(M // K, 1)`` servers; with ``K > M`` the integer division
+    collapses every section onto the same server range and the policy
+    silently degenerates to (clamped) single-server picks.  Raise at the
+    dispatch boundary instead (engine / simulator / host scheduler), with
+    both offending values named.  ``K == M`` (one server per section) is
+    the legal edge.
+    """
+    if cfg.name == "nltr" and cfg.k_sections > n_servers:
+        raise ValueError(
+            f"nltr needs 2**nltr_n <= n_servers: nltr_n={cfg.nltr_n} gives "
+            f"K={cfg.k_sections} sections for n_servers={n_servers} "
+            "(sections would collapse onto the same server range)")
+
+
 def _recursive_average_boundaries(sorted_len: jax.Array, valid: jax.Array,
                                   n_levels: int) -> jax.Array:
     """Split a desc-sorted length list into 2^n sections by recursive average.
 
     Returns (K-1,) boundary *indices* into the sorted list: section ``s`` of
-    request position ``k`` is ``sum(boundaries <= k)``.  The paper (§3.4.3)
-    uses the *average* element to divide requests ("to better utilize the
-    size factor") versus the *middle* element for servers.
+    request position ``k`` is ``sum(boundaries <= k)`` (order-free, so the
+    tree-order output of the shared core needs no sort).  The paper
+    (§3.4.3) uses the *average* element to divide requests ("to better
+    utilize the size factor") versus the *middle* element for servers.
+    Delegates to `policy_core.recursive_average_bounds` — the single
+    implementation the oracle and the Pallas kernel tile form also run,
+    lane_sum-associated so all three layers compute identical bounds.
     """
-    r = sorted_len.shape[0]
-    pos = jnp.arange(r)
-    nvalid = jnp.sum(valid)
-    # Section boundaries as (start, end) index pairs, grown level by level.
-    # Static shapes: at level l there are 2^l sections.
-    starts = [jnp.asarray(0, jnp.int32)]
-    ends = [nvalid.astype(jnp.int32)]
-    boundaries = []
-    for _ in range(n_levels):
-        new_starts, new_ends = [], []
-        for s, e in zip(starts, ends):
-            inside = (pos >= s) & (pos < e)
-            cnt = jnp.maximum(jnp.sum(inside), 1)
-            mean = jnp.sum(jnp.where(inside, sorted_len, 0.0)) / cnt
-            # desc order: elements > mean come first; boundary = first index
-            # with value <= mean inside [s, e).
-            gt = inside & (sorted_len > mean)
-            b = s + jnp.sum(gt).astype(jnp.int32)
-            # keep the boundary strictly inside (s, e) so no section is empty
-            b = jnp.clip(b, s + (e > s + 1), jnp.maximum(e - 1, s + 1))
-            boundaries.append(b)
-            new_starts.extend([s, b])
-            new_ends.extend([b, e])
-        starts, ends = new_starts, new_ends
-    return jnp.sort(jnp.stack(boundaries))
+    nvalid = jnp.sum(valid).astype(jnp.int32).reshape(1)
+    return policy_core.recursive_average_bounds(sorted_len, nvalid, n_levels)
 
 
 def plan_window(cfg: PolicyConfig, state: SchedState, object_ids: jax.Array,
                 lengths: jax.Array, valid: jax.Array) -> WindowPlan:
-    """Build the window-start plan (sorts + sections) for a policy."""
+    """Build the window-start plan (sorts + sections) for a policy.
+
+    The engine keeps XLA's stable ``argsort`` (fast on the scan hot
+    path); the Pallas kernel runs `policy_core.bitonic_argsort_desc`
+    in-VMEM.  Both order by (key desc, index asc) — a STRICT TOTAL
+    order, so the permutation is unique and the two sorts agree
+    bit-for-bit by construction (property-pinned in
+    tests/test_policies.py; DESIGN.md §10).
+    """
     r = object_ids.shape[0]
     m = state.n_servers
     # Servers sorted by probability desc == lightest first (paper Fig. 9/10).
@@ -305,6 +312,7 @@ class HostScheduler:
 
     def __init__(self, cfg: PolicyConfig, log: statlog.HostStatLog,
                  seed: int = 0):
+        validate_policy(cfg, log.n_servers)
         self.cfg = cfg
         self.log = log
         self.rng = np.random.default_rng(seed)
@@ -326,8 +334,10 @@ class HostScheduler:
 
     # -- window machinery ---------------------------------------------------
     def begin_window(self, lengths: Optional[Sequence[float]] = None) -> None:
-        """Snapshot the window-start sorts.  ``lengths`` (all requests queued
-        in this window) is needed by nLTR's request sectioning."""
+        """Snapshot the window-start sorts.  Stable np.argsort == the
+        kernel's bitonic network (strict total order; DESIGN.md §10).
+        ``lengths`` (all requests queued in this window) is needed by
+        nLTR's request sectioning."""
         order = np.argsort(-self.log.probs, kind="stable")
         self._sorted_servers = order.astype(np.int64)
         self._pos = 0
@@ -339,19 +349,12 @@ class HostScheduler:
 
     @staticmethod
     def _recursive_average_bounds(sorted_len: np.ndarray, n: int) -> np.ndarray:
-        bounds = []
-        sections = [(0, len(sorted_len))]
-        for _ in range(n):
-            nxt = []
-            for s, e in sections:
-                seg = sorted_len[s:e]
-                mean = seg.mean() if len(seg) else 0.0
-                b = s + int((seg > mean).sum())
-                b = min(max(b, s + (1 if e > s + 1 else 0)), max(e - 1, s + 1))
-                bounds.append(b)
-                nxt.extend([(s, b), (b, e)])
-            sections = nxt
-        return np.sort(np.asarray(bounds))
+        """Numpy twin of the engine's sectioning — the SAME shared core
+        (`policy_core.recursive_average_bounds`, xp=np), all rows valid
+        (the host scheduler sections the literal queued lengths)."""
+        nvalid = np.asarray([len(sorted_len)], np.int32)
+        return policy_core.recursive_average_bounds(
+            np.ascontiguousarray(sorted_len), nvalid, n, xp=np)
 
     def _live_load(self, server: int) -> float:
         return self.log.loads[server]

@@ -154,24 +154,122 @@ def redirect_benefit(policy_name: str, loads, est_rates, default, target,
     return loads[default] - loads[target]
 
 
-def prob_ranks(probs, xp=jnp):
-    """Stable descending rank of each server by selection probability:
-    ``rank_i = |{j : p_j > p_i}| + |{j < i : p_j == p_i}|``.
+def _next_pow2(n: int) -> int:
+    size = 1
+    while size < n:
+        size *= 2
+    return size
 
-    Matches ``argsort(-probs)`` with stable ties exactly: the server at
-    sorted position k is the one with rank k.  This form needs no sort /
-    gather, so the kernel can evaluate it on VMEM lanes; the engine uses
-    argsort and the equivalence is asserted in tests.
+
+def bitonic_argsort_desc(keys, valid=None, xp=jnp):
+    """Stable descending argsort as an EXPLICIT bitonic compare-exchange
+    network — the in-VMEM sort of DESIGN.md §10.
+
+    ``keys``: (..., R) sort keys; ``valid`` (same shape, optional) masks
+    rows to ``-inf`` keys so they sink to the end.  The last axis pads to
+    the next power of two with ``-inf`` keys and continuing indices, then
+    runs the textbook bitonic schedule (outer width ``k = 2..R_pad``,
+    inner stride ``j = k/2..1``); each stage is two circular rolls plus
+    selects, so the whole network is fixed elementwise HLO — no gather,
+    no backend sort, legal inside a fused Pallas body (``jnp.argsort``
+    is not; see DESIGN.md §10).
+
+    The comparator orders by ``(key desc, index asc)`` — a strict total
+    order, so ANY correct network yields the one permutation that equals
+    ``argsort(-keys, stable)``; using the same schedule in the engine,
+    the host twin and the kernel makes the match structural rather than
+    coincidental (like :func:`lane_sum`).
+
+    Returns ``(order, sorted_keys)``: ``order`` int32 (..., R_pad) maps
+    sorted position -> original index (positions ``>= R`` are padding);
+    ``sorted_keys`` are the masked keys in that order (``-inf`` at
+    invalid/padding positions).
     """
-    m = probs.shape[-1]
-    gt = probs[None, :] > probs[:, None]          # [i, j] = p_j > p_i
+    r = keys.shape[-1]
+    rp = _next_pow2(r)
+    neg = xp.asarray(-xp.inf, keys.dtype)
+    if valid is not None:
+        keys = xp.where(valid, keys, neg)
+    if rp != r:
+        pad = [(0, 0)] * (keys.ndim - 1) + [(0, rp - r)]
+        keys = xp.pad(keys, pad, constant_values=-xp.inf)
     if xp is np:
-        eq = probs[None, :] == probs[:, None]
-        before = np.arange(m)[None, :] < np.arange(m)[:, None]
-        return (gt.sum(-1) + (eq & before).sum(-1)).astype(np.int64)
-    eq = probs[None, :] == probs[:, None]
-    before = jnp.arange(m)[None, :] < jnp.arange(m)[:, None]
-    return (jnp.sum(gt, -1) + jnp.sum(eq & before, -1)).astype(jnp.int32)
+        pos = np.broadcast_to(np.arange(rp, dtype=np.int32), keys.shape)
+    else:
+        # broadcasted_iota, not arange: 1-D iota does not lower inside
+        # TPU Pallas bodies (this runs in the kernel too)
+        pos = jax.lax.broadcasted_iota(jnp.int32, keys.shape, keys.ndim - 1)
+    idx = pos
+    k = 2
+    while k <= rp:
+        asc = (pos & k) == 0          # comparator-ascending region
+        j = k // 2
+        while j >= 1:
+            is_lo = (pos & j) == 0    # lower element of each (i, i^j) pair
+            # partner values: i^j == i+j (lo) / i-j (hi) — two rolls; the
+            # wrapped lanes are never selected by the is_lo mask.
+            pk = xp.where(is_lo, xp.roll(keys, -j, axis=-1),
+                          xp.roll(keys, j, axis=-1))
+            pi = xp.where(is_lo, xp.roll(idx, -j, axis=-1),
+                          xp.roll(idx, j, axis=-1))
+            # partner ranks before self in (key desc, index asc) order
+            p_first = (pk > keys) | ((pk == keys) & (pi < idx))
+            swap = xp.where(asc == is_lo, p_first, ~p_first)
+            keys = xp.where(swap, pk, keys)
+            idx = xp.where(swap, pi, idx)
+            j //= 2
+        k *= 2
+    return idx.astype(np.int32 if xp is np else jnp.int32), keys
+
+
+def recursive_average_bounds(sorted_len, nvalid, n_levels: int, xp=jnp):
+    """nLTR §3.4.3 request sectioning on a desc-sorted length list: split
+    ``[0, nvalid)`` into ``2^n_levels`` sections by recursive average.
+
+    ``sorted_len``: (..., R) lengths in descending order (padding beyond
+    ``nvalid`` never read); ``nvalid``: (..., 1) int32 count of valid
+    rows.  Returns (..., K-1) int32 boundary indices in tree (BFS) order
+    — section of position ``p`` is ``sum(bounds <= p)`` (order-free, so
+    callers never need them sorted).
+
+    Every float reduction goes through :func:`lane_sum` so the engine's
+    per-window call, the oracle and the kernel's ``(t_tile, R_pad)``
+    tile form associate the section means identically — a mean that
+    drifts 1 ulp can flip an integer boundary, which the bit-exactness
+    contract (DESIGN.md §10) cannot absorb.  All boundary arithmetic is
+    int32 (exact everywhere).
+    """
+    r = sorted_len.shape[-1]
+    i32 = np.int32 if xp is np else jnp.int32
+    if xp is np:
+        pos = np.arange(r, dtype=np.int32)
+    else:  # kernel-legal iota (see bitonic_argsort_desc)
+        pos = jax.lax.broadcasted_iota(jnp.int32, sorted_len.shape,
+                                       sorted_len.ndim - 1)
+    zero = xp.zeros_like(nvalid)
+    starts = [zero]
+    ends = [nvalid.astype(i32)]
+    bounds = []
+    for _ in range(n_levels):
+        new_starts, new_ends = [], []
+        for s, e in zip(starts, ends):
+            inside = (pos >= s) & (pos < e)
+            cnt = xp.maximum(xp.sum(inside, axis=-1, keepdims=True), 1)
+            # zeros_like, NOT 0.0 * sorted_len: the padded tail carries
+            # -inf sort keys and 0 * -inf would leak NaN into the sum
+            mean = lane_sum(xp.where(inside, sorted_len,
+                                     xp.zeros_like(sorted_len)), xp) / cnt
+            # desc order: elements > mean come first; boundary = first
+            # index with value <= mean inside [s, e)
+            gt = inside & (sorted_len > mean)
+            b = s + xp.sum(gt, axis=-1, keepdims=True).astype(i32)
+            # keep the boundary strictly inside (s, e): no empty section
+            b = xp.clip(b, s + (e > s + 1), xp.maximum(e - 1, s + 1))
+            bounds.append(b)
+            new_starts.extend([s, b])
+            new_ends.extend([b, e])
+        starts, ends = new_starts, new_ends
+    return xp.concatenate(bounds, axis=-1)
 
 
 # ---------------------------------------------------------------------------

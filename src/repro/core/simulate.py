@@ -110,8 +110,9 @@ class SimConfig:
     # temporal scenario (None = the seed's static-load model, no trace)
     scenario: Optional[ScenarioConfig] = None
     # scheduling substrate: "jax" (lax.scan engine, every policy) or
-    # "kernel" (the Pallas trial-grid kernel — ect/trh, shared_log model;
-    # ALL trials run as ONE pallas_call, grid = trial tiles; DESIGN.md §9).
+    # "kernel" (the Pallas trial-grid kernel — every §3.4 policy incl.
+    # the sort-based mlml/nltr (DESIGN.md §10), shared_log model; ALL
+    # trials run as ONE pallas_call, grid = trial tiles; DESIGN.md §9).
     backend: str = "jax"
     # trials per kernel program instance (kernel backend; None = the
     # kernels package default, the native f32 sublane count 8)
@@ -479,15 +480,27 @@ def _run_per_client(key: jax.Array, cfg: SimConfig, policy: PolicyConfig,
         strag_mask = strag_mask | trace_straggler_mask(trace, cfg.scenario)
     w_open = (jnp.arange(per) // win).astype(jnp.float32) * window_dt
     completion = (w_open[None, :] + lat).reshape(-1)[:cfg.n_requests]
+    # Mask per-client reductions by validity: an uneven split
+    # (n_requests % n_clients != 0) pads the last clients' slices — and
+    # when n_clients * per > n_requests + per, whole PHANTOM clients that
+    # scheduled nothing.  Averaging their untouched private logs (and
+    # summing their probe rows) into the contention numbers dilutes the
+    # "typical client" view, so every cross-client reduction weights by
+    # clients that actually scheduled a valid request.
+    client_valid = jnp.any(val, axis=1)                   # (n_clients,)
+    n_real = jnp.maximum(jnp.sum(client_valid.astype(jnp.float32)), 1.0)
+    wloads_mean = (jnp.sum(jnp.where(client_valid[:, None, None], wloads,
+                                     0.0), axis=0) / n_real)
+    probe_msgs = jnp.sum(jnp.where(client_valid, probes, 0))
     return TrialResult(server_loads=init + written, n_assigned=n_assigned,
-                       chosen=chosen, probe_msgs=jnp.sum(probes),
+                       chosen=chosen, probe_msgs=probe_msgs,
                        straggler_hits=jnp.sum(strag_mask[chosen]),
                        redirected=jnp.sum(redirected),
                        init_loads=init, straggler_mask=strag_mask,
                        latencies=latencies,
                        phase_time=jnp.max(completion),
-                       # clients' private views; mean = typical client
-                       window_loads=jnp.mean(wloads, axis=0))
+                       # real clients' private views; mean = typical client
+                       window_loads=wloads_mean)
 
 
 @functools.partial(jax.jit, static_argnames=("cfg", "policy", "log_cfg"))
@@ -497,9 +510,11 @@ def run_trials(key: jax.Array, cfg: SimConfig, policy: PolicyConfig,
 
     The kernel backend runs the WHOLE sweep as one trial-grid pallas_call
     (`engine.run_stream_batch`, grid = trial tiles, per-trial makespan
-    fused in-VMEM — DESIGN.md §9); decisions, latencies, loads and
-    phase_time are bit-exact vs. mapping the sequential kernel path
-    trial by trial (asserted in tests/test_kernels.py)."""
+    fused in-VMEM — DESIGN.md §9); every §3.4 policy dispatches through
+    it since the in-VMEM sorts of DESIGN.md §10; decisions, latencies,
+    loads and phase_time are bit-exact vs. mapping the sequential kernel
+    path trial by trial (asserted in tests/test_kernels.py)."""
+    policies.validate_policy(policy, cfg.n_servers)
     keys = jax.random.split(key, cfg.n_trials)
     if cfg.backend == "kernel":
         return _run_shared_log_batch(keys, cfg, policy, log_cfg)

@@ -37,15 +37,35 @@ in as a ``(W, M)`` input).  Policies (selected statically):
 * ``ect``        — argmin expected completion time ``(load+len)/est_rate``
   on the client-ESTIMATED rate row (stale view — observations only);
 * ``trh``        — Two Random from Top Half: two LCG draws over the
-  lightest M/2 servers of the probability ranking (paper Alg. 2).
+  lightest M/2 servers of the probability ranking (paper Alg. 2);
+* ``rr``         — round-robin baseline (``object_id mod M``, no guard);
+* ``two_choice`` — the SC'14 probing baseline: default + LCG-random
+  candidates, lightest by live load (probes counted host-side);
+* ``mlml``       — Max Length - Min Load (paper Alg. 1): the window's
+  requests sorted by length desc, paired circularly with the
+  probability-sorted servers;
+* ``nltr``       — n-Level Two Random (paper Alg. 3): servers cut into
+  ``K = 2**n`` sections of the probability ranking, requests cut into K
+  sections by recursive average of the sorted lengths; two LCG draws
+  inside the matching section.
 
-All policies apply the paper's redirect-threshold guard against the
-round-robin default ``object_id mod M`` and the Eq. (1)-(3) updates with
-one-hot *vector* writes (no scatter — TPU lanes update masked).  TRH's
-ranking uses the sort-free stable-rank identity
-(`policy_core.prob_ranks`): rank_i = |{p_j > p_i}| + |{j<i : p_j = p_i}|,
-an O(M^2) lane-parallel compare that equals ``argsort(-probs)`` exactly.
-MLML/nLTR need per-window request sorts and stay in the JAX engine.
+All policies except ``rr`` apply the paper's redirect-threshold guard
+against the round-robin default ``object_id mod M`` and the Eq. (1)-(3)
+updates with one-hot *vector* writes (no scatter — TPU lanes update
+masked).  SORT-BASED POLICIES (DESIGN.md §10): the per-window server
+ranking AND the MLML/nLTR request ordering run IN-VMEM through
+`policy_core.bitonic_argsort_desc` — an explicit, shape-pinned bitonic
+compare-exchange network (rolls + selects only; ``jnp.argsort`` does not
+lower inside a fused Pallas body, and its tie/tree behaviour is a
+backend choice).  Its (key desc, index asc) comparator is a strict total
+order, so the permutation equals the engine's stable ``argsort``
+bit-for-bit; nLTR's section bounds come from the shared
+`policy_core.recursive_average_bounds` evaluated on ``(t_tile, R_pad)``
+tiles with `lane_sum`-associated means.  MLML/nLTR process the window in
+sorted order — requests are gathered per step by one-hot masked sums
+over the window block (no gather op), decisions scattered back to
+request order the same way — while the fused metrics accumulate in
+ORIGINAL request order, matching `policy_core.stream_metrics`.
 
 FUSED METRICS (DESIGN.md §9): before a program instance retires, it
 reduces its trials' per-step latencies — still VMEM-resident — into a
@@ -72,7 +92,9 @@ from repro.core.policy_core import (LCG_A, LCG_C, MET_LAT_MAX, MET_LAT_SUM,
                                     MET_MAKESPAN, MET_N_VALID, MET_P99,
                                     MET_PAD, N_ROWS, P99_BISECT_ITERS, P99_Q,
                                     ROW_EST, ROW_EWMA, ROW_LOADS, ROW_PROBS,
-                                    lane_sum, window_decrements)
+                                    bitonic_argsort_desc, lane_sum,
+                                    recursive_average_bounds,
+                                    window_decrements)
 
 _BIG = 3.4e38  # padding-lane load: never selected, never drained
 
@@ -93,7 +115,8 @@ def _sched_stream_kernel(objs_ref, lens_ref, valid_ref, table_ref, seed_ref,
                          window_size: int, n_servers: int, m_pad: int,
                          t_tile: int, threshold: float, lam: float,
                          alpha: float, window_dt: float, policy: str,
-                         observe: bool, renorm: bool):
+                         observe: bool, renorm: bool, nltr_n: int,
+                         probe_choices: int):
     m = n_servers
     lane = jax.lax.broadcasted_iota(jnp.int32, (1, m_pad), 1)
     lv = lane < m                               # valid (non-padding) lanes
@@ -114,45 +137,92 @@ def _sched_stream_kernel(objs_ref, lens_ref, valid_ref, table_ref, seed_ref,
     def window_body(w, carry):
         rng, mk, lsum, lmax, nval = carry
         cur_rates = jnp.where(lv, rates_ref[:, pl.ds(w, 1), :][:, 0, :], 1.0)
+        sort_policy = policy in ("mlml", "nltr")
 
-        if policy == "trh":
-            # Window-start plan: stable descending probability rank
-            # (== argsort(-probs); see policy_core.prob_ranks).  Padding
-            # lanes (p = 0, largest indices) always rank >= M.
-            p = tbl[ROW_PROBS]                               # (t, m_pad)
-            pj = p[:, None, :]                               # [t,i,j] = p_j
-            pi = p[:, :, None]                               # [t,i,j] = p_i
-            jpos = jax.lax.broadcasted_iota(jnp.int32, (1, m_pad, m_pad), 2)
-            ipos = jax.lax.broadcasted_iota(jnp.int32, (1, m_pad, m_pad), 1)
-            cnt = ((pj > pi) | ((pj == pi) & (jpos < ipos))).astype(jnp.int32)
-            rank = jnp.sum(cnt, axis=2)                      # (t, m_pad)
-        else:
-            rank = jnp.broadcast_to(lane, (t_tile, m_pad))   # unused
+        if policy in ("trh", "mlml", "nltr"):
+            # Window-start plan: servers by probability desc, via the
+            # shared bitonic network (DESIGN.md §10).  Padding lanes get
+            # -inf keys so positions [0, M) are exactly the engine's
+            # stable argsort(-probs) permutation.
+            order_srv, _ = bitonic_argsort_desc(
+                tbl[ROW_PROBS], valid=jnp.broadcast_to(lv, (t_tile, m_pad)))
+            srt_lane = jax.lax.broadcasted_iota(
+                jnp.int32, (1, order_srv.shape[-1]), 1)
 
-        def rank_to_server(r):
-            """Server id at sorted position r (rank is a permutation)."""
-            return jnp.sum(jnp.where(rank == r, lane, 0), axis=-1,
+        def server_at(p):
+            """Server id at sorted position p (one-hot masked sum)."""
+            return jnp.sum(jnp.where(srt_lane == p, order_srv, 0), axis=-1,
                            keepdims=True).astype(jnp.int32)
 
-        def req_body(j, carry):
-            rng, mk, lsum, lmax, nval = carry
-            i = w * window_size + j
-            obj = objs_ref[:, pl.ds(i, 1)]                   # (t, 1)
-            ln = lens_ref[:, pl.ds(i, 1)]
-            v = valid_ref[:, pl.ds(i, 1)] != 0
+        if sort_policy:
+            # MLML/nLTR process the window's requests in length-desc
+            # order: sort the request block in-VMEM (same network), then
+            # gather per step / scatter decisions back by one-hot sums.
+            start = w * window_size
+            obj_w = objs_ref[:, pl.ds(start, window_size)]   # (t, ws)
+            len_w = lens_ref[:, pl.ds(start, window_size)]
+            val_w = valid_ref[:, pl.ds(start, window_size)] != 0
+            order_req, skeys = bitonic_argsort_desc(len_w, valid=val_w)
+            rp = order_req.shape[-1]
+            sort_lane = jax.lax.broadcasted_iota(jnp.int32, (1, rp), 1)
+            ws_lane = jax.lax.broadcasted_iota(jnp.int32, (1, window_size), 1)
+            if policy == "nltr":
+                nvalid = jnp.sum(val_w.astype(jnp.int32), axis=-1,
+                                 keepdims=True)
+                bounds = recursive_average_bounds(skeys, nvalid, nltr_n)
+                sec_size = max(m // 2 ** nltr_n, 1)
+                n_sections = 2 ** nltr_n
+
+        def schedule_one(j, obj, ln, v, rng):
+            """Selection + guard + Eq. (1)-(3)/feedback for one request per
+            trial; mutates the VMEM table, returns (choose, lat, latv,
+            rng).  ``j`` is the PROCESSING position in the window (==
+            request position except for the sorted policies)."""
             loads = tbl[ROW_LOADS]
             probs = tbl[ROW_PROBS]
             est = tbl[ROW_EST]
             default = jax.lax.rem(obj, m)
 
             # -- target selection (policy_core decision math) --------------
-            if policy == "minload":
+            if policy == "rr":
+                target = default
+            elif policy == "minload":
                 target = jnp.argmin(loads, axis=-1,
                                     keepdims=True).astype(jnp.int32)
             elif policy == "ect":
                 scores = (loads + ln) / est
                 target = jnp.argmin(scores, axis=-1,
                                     keepdims=True).astype(jnp.int32)
+            elif policy == "mlml":
+                # j-th longest request -> j-th lightest server (Alg. 1)
+                target = server_at(jnp.reshape(jax.lax.rem(j, m), (1, 1)))
+            elif policy == "nltr":
+                # request section from the recursive-average bounds, two
+                # LCG draws inside the matching server section (Alg. 3)
+                sec = jnp.sum((j >= bounds).astype(jnp.int32), axis=-1,
+                              keepdims=True)
+                sec = jnp.clip(sec, 0, n_sections - 1)
+                lo = sec * sec_size
+                r1 = _lcg(rng)
+                r2 = _lcg(r1)
+                rng = r2
+                c1 = server_at(lo + _lcg_mod(r1, sec_size))
+                c2 = server_at(lo + _lcg_mod(r2, sec_size))
+                l1 = pick(loads, lane == c1)
+                l2 = pick(loads, lane == c2)
+                target = jnp.where(l1 <= l2, c1, c2).astype(jnp.int32)
+            elif policy == "two_choice":
+                # SC'14 baseline: default + LCG-random candidates, first
+                # min by live load (matches jnp.argmin's tie rule)
+                target = default
+                best_l = pick(loads, lane == default)
+                for _ in range(probe_choices - 1):
+                    rng = _lcg(rng)
+                    c = _lcg_mod(rng, m)
+                    l_c = pick(loads, lane == c)
+                    better = l_c < best_l
+                    target = jnp.where(better, c, target).astype(jnp.int32)
+                    best_l = jnp.where(better, l_c, best_l)
             elif policy in ("two_random", "trh"):
                 r1 = _lcg(rng)
                 r2 = _lcg(r1)
@@ -162,26 +232,29 @@ def _sched_stream_kernel(objs_ref, lens_ref, valid_ref, table_ref, seed_ref,
                     c2 = _lcg_mod(r2, m)
                 else:  # trh: two positions in the lightest half
                     half = max(m // 2, 1)
-                    c1 = rank_to_server(_lcg_mod(r1, half))
-                    c2 = rank_to_server(_lcg_mod(r2, half))
+                    c1 = server_at(_lcg_mod(r1, half))
+                    c2 = server_at(_lcg_mod(r2, half))
                 l1 = pick(loads, lane == c1)
                 l2 = pick(loads, lane == c2)
                 target = jnp.where(l1 <= l2, c1, c2).astype(jnp.int32)
             else:  # pragma: no cover
                 raise ValueError(policy)
 
-            # -- redirect-threshold guard (§3.4.1) -------------------------
-            l_def = pick(loads, lane == default)
-            l_tgt = pick(loads, lane == target)
-            if policy == "ect":
-                # rate-aware benefit in expected seconds, on EST rates
-                r_def = pick(est, lane == default)
-                r_tgt = pick(est, lane == target)
-                benefit = (l_def + ln) / r_def - (l_tgt + ln) / r_tgt
+            # -- redirect-threshold guard (§3.4.1; rr has no guard) --------
+            if policy == "rr":
+                choose = default
             else:
-                benefit = l_def - l_tgt
-            choose = jnp.where(benefit > threshold, target,
-                               default).astype(jnp.int32)
+                l_def = pick(loads, lane == default)
+                l_tgt = pick(loads, lane == target)
+                if policy == "ect":
+                    # rate-aware benefit in expected seconds, on EST rates
+                    r_def = pick(est, lane == default)
+                    r_tgt = pick(est, lane == target)
+                    benefit = (l_def + ln) / r_def - (l_tgt + ln) / r_tgt
+                else:
+                    benefit = l_def - l_tgt
+                choose = jnp.where(benefit > threshold, target,
+                                   default).astype(jnp.int32)
 
             # -- Eq. (1)-(3) one-hot updates (masked on padding rows) ------
             onehot = lane == choose                          # (t, m_pad)
@@ -202,8 +275,6 @@ def _sched_stream_kernel(objs_ref, lens_ref, valid_ref, table_ref, seed_ref,
             rate_c = pick(cur_rates, onehot)                 # TRUE rate
             lat = l_after / jnp.maximum(rate_c, 1e-6)
             latv = jnp.where(v, lat, 0.0)
-            choices_ref[:, pl.ds(i, 1)] = choose
-            lats_ref[:, pl.ds(i, 1)] = latv
             if observe:
                 # effective MB/s this request will see -> ewma row; est
                 # row re-derived from observations ONLY (stale view).
@@ -217,17 +288,77 @@ def _sched_stream_kernel(objs_ref, lens_ref, valid_ref, table_ref, seed_ref,
                 dflt = jnp.maximum(jnp.max(new_ewma, axis=-1, keepdims=True),
                                    1.0)
                 tbl[ROW_EST] = jnp.where(new_ewma > 0, new_ewma, dflt)
-            # -- fused metric accumulators (stream_metrics twin) -----------
-            wopen = w.astype(jnp.float32) * jnp.float32(window_dt)
-            mk = jnp.where(v, jnp.maximum(mk, wopen + lat), mk)
-            lsum = lsum + latv
-            lmax = jnp.maximum(lmax, latv)
-            nval = nval + jnp.where(v, 1.0, 0.0)
-            return rng, mk, lsum, lmax, nval
+            return choose, lat, latv, rng
 
-        carry = jax.lax.fori_loop(0, window_size, req_body,
-                                  (rng, mk, lsum, lmax, nval), unroll=False)
-        rng = carry[0]
+        wopen = w.astype(jnp.float32) * jnp.float32(window_dt)
+
+        if sort_policy:
+            def sorted_req_body(j, carry):
+                rng, ch_acc, lat_acc = carry
+                # original window position of the j-th longest request
+                ord_j = jnp.sum(jnp.where(sort_lane == j, order_req, 0),
+                                axis=-1, keepdims=True)
+                sel = ws_lane == ord_j                       # (t, ws)
+                obj = jnp.sum(jnp.where(sel, obj_w, 0), axis=-1,
+                              keepdims=True)
+                ln = jnp.sum(jnp.where(sel, len_w, 0.0), axis=-1,
+                             keepdims=True)
+                v = jnp.sum(jnp.where(sel, val_w.astype(jnp.int32), 0),
+                            axis=-1, keepdims=True) != 0
+                choose, lat, latv, rng = schedule_one(j, obj, ln, v, rng)
+                # scatter back to request order (one-hot writes)
+                ch_acc = jnp.where(sel, choose, ch_acc)
+                lat_acc = jnp.where(sel, latv, lat_acc)
+                return rng, ch_acc, lat_acc
+
+            rng, ch_acc, lat_acc = jax.lax.fori_loop(
+                0, window_size, sorted_req_body,
+                (rng, jnp.zeros((t_tile, window_size), jnp.int32),
+                 jnp.zeros((t_tile, window_size), jnp.float32)),
+                unroll=False)
+            choices_ref[:, pl.ds(start, window_size)] = ch_acc
+            lats_ref[:, pl.ds(start, window_size)] = lat_acc
+
+            def met_body(j, carry):
+                # fused metrics accumulate in ORIGINAL request order —
+                # the float accumulation order of the stream_metrics twin
+                mk, lsum, lmax, nval = carry
+                sel = ws_lane == j
+                latj = jnp.sum(jnp.where(sel, lat_acc, 0.0), axis=-1,
+                               keepdims=True)
+                vj = jnp.sum(jnp.where(sel, val_w.astype(jnp.int32), 0),
+                             axis=-1, keepdims=True) != 0
+                mk = jnp.where(vj, jnp.maximum(mk, wopen + latj), mk)
+                lsum = lsum + latj
+                lmax = jnp.maximum(lmax, latj)
+                nval = nval + jnp.where(vj, 1.0, 0.0)
+                return mk, lsum, lmax, nval
+
+            mk, lsum, lmax, nval = jax.lax.fori_loop(
+                0, window_size, met_body, (mk, lsum, lmax, nval),
+                unroll=False)
+            carry = (rng, mk, lsum, lmax, nval)
+        else:
+            def req_body(j, carry):
+                rng, mk, lsum, lmax, nval = carry
+                i = w * window_size + j
+                obj = objs_ref[:, pl.ds(i, 1)]               # (t, 1)
+                ln = lens_ref[:, pl.ds(i, 1)]
+                v = valid_ref[:, pl.ds(i, 1)] != 0
+                choose, lat, latv, rng = schedule_one(j, obj, ln, v, rng)
+                choices_ref[:, pl.ds(i, 1)] = choose
+                lats_ref[:, pl.ds(i, 1)] = latv
+                # -- fused metric accumulators (stream_metrics twin) -------
+                mk = jnp.where(v, jnp.maximum(mk, wopen + lat), mk)
+                lsum = lsum + latv
+                lmax = jnp.maximum(lmax, latv)
+                nval = nval + jnp.where(v, 1.0, 0.0)
+                return rng, mk, lsum, lmax, nval
+
+            carry = jax.lax.fori_loop(0, window_size, req_body,
+                                      (rng, mk, lsum, lmax, nval),
+                                      unroll=False)
+            rng = carry[0]
 
         # -- window close: renormalize probs, drain queues (advance_time) --
         if renorm:
@@ -293,6 +424,7 @@ def sched_stream_call(object_ids: jax.Array, lengths: jax.Array,
                       window_size: int, threshold: float, lam: float,
                       alpha: float, window_dt: float, policy: str,
                       observe: bool, renorm: bool, trial_tile: int = 1,
+                      nltr_n: int = 2, probe_choices: int = 2,
                       interpret: bool = False):
     """Temporal stream kernel over T independent streams (clients/trials).
 
@@ -318,7 +450,8 @@ def sched_stream_call(object_ids: jax.Array, lengths: jax.Array,
         _sched_stream_kernel, n_windows=n_win, window_size=window_size,
         n_servers=n_servers, m_pad=m_pad, t_tile=tt, threshold=threshold,
         lam=lam, alpha=alpha, window_dt=window_dt, policy=policy,
-        observe=observe, renorm=renorm)
+        observe=observe, renorm=renorm, nltr_n=nltr_n,
+        probe_choices=probe_choices)
     return pl.pallas_call(
         kernel,
         grid=(t // tt,),

@@ -28,9 +28,22 @@ from repro.core.policy_core import N_METRICS, init_table
 from repro.kernels.sched_select.kernel import (sched_select_call,
                                                sched_stream_call)
 
-POLICIES = ("minload", "two_random", "ect", "trh")
+POLICIES = ("minload", "two_random", "ect", "trh", "rr", "two_choice",
+            "mlml", "nltr")
+# the paper's policies that need per-window sorts — served by the
+# in-VMEM bitonic network since DESIGN.md §10
+SORT_POLICIES = ("mlml", "nltr")
 # policies available through the legacy static entry point
 STATIC_POLICIES = ("minload", "two_random")
+
+
+def _check_policy(policy: str, n_servers: int, nltr_n: int) -> None:
+    if policy not in POLICIES:
+        raise ValueError(f"kernel policy must be one of {POLICIES}")
+    if policy == "nltr" and 2 ** nltr_n > n_servers:
+        raise ValueError(
+            f"nltr needs 2**nltr_n <= n_servers: nltr_n={nltr_n} gives "
+            f"K={2 ** nltr_n} sections for n_servers={n_servers}")
 
 # trials per program instance in the trial-grid form: the sublane count
 # of the native f32 (8, 128) TPU tile, so each vectorized table op fills
@@ -79,15 +92,16 @@ def sched_select(object_ids: jax.Array, lengths: jax.Array,
 @functools.partial(jax.jit, static_argnames=("n_servers", "window_size",
                                              "threshold", "lam", "alpha",
                                              "window_dt", "policy",
-                                             "observe", "renorm",
-                                             "interpret"))
+                                             "observe", "renorm", "nltr_n",
+                                             "probe_choices", "interpret"))
 def sched_stream(object_ids: jax.Array, lengths: jax.Array,
                  valid: jax.Array, table: jax.Array, seed: jax.Array,
                  win_rates: jax.Array, *, n_servers: int, window_size: int,
                  threshold: float = 0.0, lam: float = 32.0,
                  alpha: float = 0.25, window_dt: float = 0.0,
                  policy: str = "ect", observe: bool = True,
-                 renorm: bool = True, interpret: Optional[bool] = None
+                 renorm: bool = True, nltr_n: int = 2,
+                 probe_choices: int = 2, interpret: Optional[bool] = None
                  ) -> Tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
     """Temporal kernel: one client's whole windowed stream in VMEM.
 
@@ -103,8 +117,7 @@ def sched_stream(object_ids: jax.Array, lengths: jax.Array,
     Batched form: pass (C, N) / (C, 4, M) / (C,) / (C, W, M) arrays and
     every output gains the leading client axis (grid = clients).
     """
-    if policy not in POLICIES:
-        raise ValueError(f"kernel policy must be one of {POLICIES}")
+    _check_policy(policy, n_servers, nltr_n)
     interpret = _auto_interpret(interpret)
     single = object_ids.ndim == 1
     if single:
@@ -124,7 +137,8 @@ def sched_stream(object_ids: jax.Array, lengths: jax.Array,
         seed.reshape(c, 1).astype(jnp.uint32), rates_p,
         n_servers=n_servers, window_size=window_size, threshold=threshold,
         lam=lam, alpha=alpha, window_dt=window_dt, policy=policy,
-        observe=observe, renorm=renorm, interpret=interpret)
+        observe=observe, renorm=renorm, nltr_n=nltr_n,
+        probe_choices=probe_choices, interpret=interpret)
     ftab = ftab[:, :, :m]
     wloads = wloads[:, :, :m]
     if single:
@@ -136,7 +150,8 @@ def sched_stream(object_ids: jax.Array, lengths: jax.Array,
                                              "threshold", "lam", "alpha",
                                              "window_dt", "policy",
                                              "observe", "renorm",
-                                             "trial_tile", "interpret"))
+                                             "trial_tile", "nltr_n",
+                                             "probe_choices", "interpret"))
 def sched_stream_batch(object_ids: jax.Array, lengths: jax.Array,
                        valid: jax.Array, tables: jax.Array, seeds: jax.Array,
                        win_rates: jax.Array, *, n_servers: int,
@@ -145,6 +160,7 @@ def sched_stream_batch(object_ids: jax.Array, lengths: jax.Array,
                        window_dt: float = 0.0, policy: str = "ect",
                        observe: bool = True, renorm: bool = True,
                        trial_tile: int = DEFAULT_TRIAL_TILE,
+                       nltr_n: int = 2, probe_choices: int = 2,
                        interpret: Optional[bool] = None
                        ) -> Tuple[jax.Array, jax.Array, jax.Array,
                                   jax.Array, jax.Array]:
@@ -164,8 +180,7 @@ def sched_stream_batch(object_ids: jax.Array, lengths: jax.Array,
     (T, 4, M) f32, window_loads (T, W, M) f32, metrics (T, N_METRICS)
     f32 in `policy_core.MET_*` order — the fused in-VMEM reduction).
     """
-    if policy not in POLICIES:
-        raise ValueError(f"kernel policy must be one of {POLICIES}")
+    _check_policy(policy, n_servers, nltr_n)
     interpret = _auto_interpret(interpret)
     t, n = object_ids.shape
     m = tables.shape[-1]
@@ -196,7 +211,7 @@ def sched_stream_batch(object_ids: jax.Array, lengths: jax.Array,
         seeds.reshape(t_pad, 1).astype(jnp.uint32), rates_p,
         n_servers=n_servers, window_size=window_size, threshold=threshold,
         lam=lam, alpha=alpha, window_dt=window_dt, policy=policy,
-        observe=observe, renorm=renorm, trial_tile=tile,
-        interpret=interpret)
+        observe=observe, renorm=renorm, trial_tile=tile, nltr_n=nltr_n,
+        probe_choices=probe_choices, interpret=interpret)
     return (choices[:t], lats[:t], ftab[:t, :, :m], wloads[:t, :, :m],
             metrics[:t, :N_METRICS])

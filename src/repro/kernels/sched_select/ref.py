@@ -16,7 +16,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.policy_core import (ROW_EST, ROW_EWMA, ROW_LOADS, ROW_PROBS,
-                                    drain_loads, prob_ranks,
+                                    bitonic_argsort_desc, drain_loads,
+                                    recursive_average_bounds,
                                     renormalize_probs, stream_metrics,
                                     window_decrements)
 
@@ -81,20 +82,28 @@ def sched_stream_ref(object_ids: jax.Array, lengths: jax.Array,
                      window_size: int, threshold: float, lam: float,
                      alpha: float = 0.25, window_dt: float = 0.0,
                      policy: str = "ect", observe: bool = True,
-                     renorm: bool = True
+                     renorm: bool = True, nltr_n: int = 2,
+                     probe_choices: int = 2
                      ) -> Tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
     """Single-client oracle for the temporal stream kernel.
 
     Same signature semantics as ``ops.sched_stream`` (single-client form):
     object_ids/lengths/valid (N,), table (4, M) packed log tensor, seed ()
     uint32, win_rates (W, M).  Scan-carried replay of the identical
-    per-request decision math, per-window renormalization and drain.
+    per-request decision math, per-window renormalization and drain; the
+    sort-based policies (mlml/nltr) replay the kernel's in-VMEM window
+    plan — the shared bitonic request/server sorts and recursive-average
+    section bounds (DESIGN.md §10) — processing in length-desc order and
+    scattering decisions back by the same permutation.
     """
     m = n_servers
     n_win = win_rates.shape[0]
     obj_w = object_ids.reshape(n_win, window_size)
     len_w = lengths.reshape(n_win, window_size)
     val_w = valid.reshape(n_win, window_size)
+    sort_policy = policy in ("mlml", "nltr")
+    k_sections = 2 ** nltr_n
+    sec_size = max(m // k_sections, 1)
 
     loads0 = table[ROW_LOADS].astype(jnp.float32)
     probs0 = table[ROW_PROBS].astype(jnp.float32)
@@ -105,18 +114,52 @@ def sched_stream_ref(object_ids: jax.Array, lengths: jax.Array,
     def window(carry, xs):
         loads, probs, ewma, est, rng = carry
         obj, lens, val, rates, dec = xs
-        # window-start plan: stable descending probability ranking
-        ranks = prob_ranks(probs)                    # rank of each server
-        order = jnp.argsort(ranks)                   # server at position k
+        # window-start plan: servers by probability desc (shared bitonic
+        # network == stable argsort(-probs); DESIGN.md §10)
+        order = bitonic_argsort_desc(probs)[0][:m]   # server at position k
+        if sort_policy:
+            req_order_full, skeys = bitonic_argsort_desc(lens, valid=val)
+            req_order = req_order_full[:window_size]
+            obj_p, len_p, val_p = obj[req_order], lens[req_order], \
+                val[req_order]
+            if policy == "nltr":
+                nvalid = jnp.sum(val).astype(jnp.int32).reshape(1)
+                bounds = recursive_average_bounds(skeys, nvalid, nltr_n)
+        else:
+            obj_p, len_p, val_p = obj, lens, val
 
         def step(c, x):
             loads, probs, ewma, est, rng = c
-            o, ln, v = x
+            pos, o, ln, v = x
             default = jax.lax.rem(o, m)
-            if policy == "minload":
+            if policy == "rr":
+                target = default
+            elif policy == "minload":
                 target = jnp.argmin(loads).astype(jnp.int32)
             elif policy == "ect":
                 target = jnp.argmin((loads + ln) / est).astype(jnp.int32)
+            elif policy == "mlml":
+                target = order[jax.lax.rem(pos, m)].astype(jnp.int32)
+            elif policy == "nltr":
+                sec = jnp.clip(jnp.sum((pos >= bounds).astype(jnp.int32)),
+                               0, k_sections - 1)
+                lo = sec * sec_size
+                r1 = _lcg(rng)
+                r2 = _lcg(r1)
+                rng = r2
+                c1 = order[lo + _rand_server(r1, sec_size)].astype(jnp.int32)
+                c2 = order[lo + _rand_server(r2, sec_size)].astype(jnp.int32)
+                target = jnp.where(loads[c1] <= loads[c2], c1,
+                                   c2).astype(jnp.int32)
+            elif policy == "two_choice":
+                target = default
+                best_l = loads[default]
+                for _ in range(probe_choices - 1):
+                    rng = _lcg(rng)
+                    c2 = _rand_server(rng, m)
+                    better = loads[c2] < best_l
+                    target = jnp.where(better, c2, target).astype(jnp.int32)
+                    best_l = jnp.where(better, loads[c2], best_l)
             elif policy in ("two_random", "trh"):
                 r1 = _lcg(rng)
                 r2 = _lcg(r1)
@@ -131,13 +174,17 @@ def sched_stream_ref(object_ids: jax.Array, lengths: jax.Array,
                                    c2).astype(jnp.int32)
             else:
                 raise ValueError(policy)
-            if policy == "ect":
+            if policy == "rr":
+                choose = default
+            elif policy == "ect":
                 benefit = ((loads[default] + ln) / est[default]
                            - (loads[target] + ln) / est[target])
+                choose = jnp.where(benefit > threshold, target,
+                                   default).astype(jnp.int32)
             else:
                 benefit = loads[default] - loads[target]
-            choose = jnp.where(benefit > threshold, target,
-                               default).astype(jnp.int32)
+                choose = jnp.where(benefit > threshold, target,
+                                   default).astype(jnp.int32)
             onehot = lane == choose
             upd = onehot & v
             new_loads = jnp.where(upd, loads + ln, loads)
@@ -162,8 +209,13 @@ def sched_stream_ref(object_ids: jax.Array, lengths: jax.Array,
             return (loads, probs, ewma, est, rng), \
                 (choose, jnp.where(v, lat, 0.0))
 
+        pos = jnp.arange(window_size, dtype=jnp.int32)
         (loads, probs, ewma, est, rng), (ch, lt) = jax.lax.scan(
-            step, (loads, probs, ewma, est, rng), (obj, lens, val))
+            step, (loads, probs, ewma, est, rng), (pos, obj_p, len_p, val_p))
+        if sort_policy:
+            # scatter decisions back to request order (pure permutation)
+            ch = jnp.zeros_like(ch).at[req_order].set(ch)
+            lt = jnp.zeros_like(lt).at[req_order].set(lt)
         if renorm:
             # shared core: lane_sum's explicit halving tree (§9 contract)
             probs = renormalize_probs(probs)
@@ -187,7 +239,8 @@ def sched_stream_batch_ref(object_ids: jax.Array, lengths: jax.Array,
                            n_servers: int, window_size: int,
                            threshold: float, lam: float, alpha: float = 0.25,
                            window_dt: float = 0.0, policy: str = "ect",
-                           observe: bool = True, renorm: bool = True
+                           observe: bool = True, renorm: bool = True,
+                           nltr_n: int = 2, probe_choices: int = 2
                            ) -> Tuple[jax.Array, jax.Array, jax.Array,
                                       jax.Array, jax.Array]:
     """Trial-batched oracle for ``ops.sched_stream_batch``: the per-trial
@@ -200,7 +253,8 @@ def sched_stream_batch_ref(object_ids: jax.Array, lengths: jax.Array,
     one = functools.partial(
         sched_stream_ref, n_servers=n_servers, window_size=window_size,
         threshold=threshold, lam=lam, alpha=alpha, window_dt=window_dt,
-        policy=policy, observe=observe, renorm=renorm)
+        policy=policy, observe=observe, renorm=renorm, nltr_n=nltr_n,
+        probe_choices=probe_choices)
     choices, lats, finals, wloads = jax.vmap(one)(
         object_ids, lengths, valid, tables, seeds, win_rates)
     metrics = stream_metrics(lats, valid.astype(bool), window_dt,

@@ -1,0 +1,76 @@
+"""Benchmark tooling regressions: BENCH_sched.json trajectory rendering.
+
+The trajectory renderer consumes a history file that GROWS its schema
+over time (new series appear per PR) and can be empty or half-written
+(interrupted emit_bench_point, fresh checkout).  These tests pin the
+tolerant behaviour: mixed-schema points render with missing cells, an
+empty/corrupt/missing file reports instead of raising.
+"""
+
+import json
+
+import pytest
+
+sched_perf = pytest.importorskip("benchmarks.sched_perf")
+
+# A realistic mixed-schema history: run 0 predates the kernel backend
+# entirely, run 1 predates kernel_batch_req_s, run 2 has everything
+# including the sort-policy series; run 3 is schema junk (not a dict).
+MIXED_HISTORY = [
+    {"ts": 1700000000.0, "phase_s_rr": 5.0, "phase_s_trh": 3.0,
+     "phase_s_ect": 2.5, "transient_p99_trh": 1.2},
+    {"ts": 1700000100.0, "phase_s_rr": 5.1, "phase_s_trh": 3.1,
+     "phase_s_ect": 2.4, "transient_p99_trh": 1.1,
+     "kernel_backend_phase_s": 0.9, "kernel_req_s": 100000.0,
+     "engine_req_s": 200000.0, "kernel_bit_exact": True},
+    {"ts": 1700000200.0, "phase_s_rr": 5.0, "phase_s_trh": 3.0,
+     "phase_s_ect": 2.3, "transient_p99_trh": 1.0,
+     "kernel_backend_phase_s": 0.8, "kernel_req_s": 150000.0,
+     "engine_req_s": 180000.0, "kernel_batch_req_s": 390000.0,
+     "kernel_batch_req_s_mlml": 120000.0,
+     "kernel_batch_req_s_nltr": 110000.0, "bench_reps": 3},
+    ["schema", "junk"],
+]
+
+
+def test_trajectory_tolerates_mixed_schema(tmp_path, capsys):
+    path = tmp_path / "BENCH_sched.json"
+    path.write_text(json.dumps(MIXED_HISTORY))
+    hist = sched_perf.trajectory(str(path), str(tmp_path / "fig.png"))
+    out = capsys.readouterr().out
+    assert len(hist) == 3                       # junk point dropped
+    assert "perf trajectory (3 runs" in out
+    # missing series render as placeholders, present ones as numbers
+    assert "—" in out
+    assert "390000" in out
+    assert "kernel_batch_req_s_mlml" in out
+
+
+def test_trajectory_empty_file_renders_without_error(tmp_path, capsys):
+    """Regression: a zero-byte BENCH_sched.json used to raise
+    JSONDecodeError out of trajectory()."""
+    path = tmp_path / "BENCH_sched.json"
+    path.write_text("")
+    assert sched_perf.trajectory(str(path), str(tmp_path / "f.png")) == []
+    assert "empty or unreadable" in capsys.readouterr().out
+
+
+def test_trajectory_corrupt_file_renders_without_error(tmp_path, capsys):
+    path = tmp_path / "BENCH_sched.json"
+    path.write_text('[{"ts": 17')                # interrupted write
+    assert sched_perf.trajectory(str(path), str(tmp_path / "f.png")) == []
+    assert "empty or unreadable" in capsys.readouterr().out
+
+
+def test_trajectory_missing_file_renders_without_error(tmp_path, capsys):
+    missing = tmp_path / "nope.json"
+    assert sched_perf.trajectory(str(missing),
+                                 str(tmp_path / "f.png")) == []
+    assert "not found" in capsys.readouterr().out
+
+
+def test_trajectory_empty_list_renders_without_error(tmp_path, capsys):
+    path = tmp_path / "BENCH_sched.json"
+    path.write_text("[]")
+    assert sched_perf.trajectory(str(path), str(tmp_path / "f.png")) == []
+    assert "is empty" in capsys.readouterr().out

@@ -161,21 +161,34 @@ STREAM_CASES = [
     (37, 250, 60, "trh", 4.0),
     (130, 120, 40, "ect", 0.05),
     (3, 64, 16, "trh", 0.0),
+    # sort-based policies (DESIGN.md §10): in-VMEM bitonic request sort
+    # (mlml) + recursive-average sections (nltr); odd M, padded windows
+    (37, 250, 60, "mlml", 4.0),
+    (37, 250, 60, "nltr", 4.0),
+    (100, 240, 60, "nltr", 4.0),
+    (130, 120, 40, "mlml", 4.0),
+    # baselines through the kernel: no-guard rr, probing two_choice
+    (24, 130, 40, "rr", 0.0),
+    (24, 130, 40, "two_choice", 2.0),
 ]
+
+_LCG_POLICIES = ("trh", "nltr", "two_choice")
 
 
 @pytest.mark.parametrize("case", STREAM_CASES)
 def test_stream_kernel_engine_parity_transient(case):
-    """ect/trh run in-kernel with per-window drain and match the JAX
-    engine BIT-EXACTLY over a transient-straggler trace (grouped steps,
-    completion feedback, per-window renorm — the whole temporal path)."""
+    """Every kernel policy runs in-kernel with per-window drain and
+    matches the JAX engine BIT-EXACTLY over a transient-straggler trace
+    (grouped steps, completion feedback, per-window renorm — the whole
+    temporal path).  Randomized policies replay the kernel's LCG via
+    PolicyConfig(rng='lcg')."""
     m, r, win, policy, thr = case
     trace = _transient_trace(m, slow_ids=(min(3, m - 1),))
     cfg = LogConfig(n_servers=m, lam=50.0)
     state = statlog.init_state(cfg, rates=trace.rates[0])
     work = _stream_case(m, r, seed=hash(case) % 2**31)
     pol = PolicyConfig(name=policy, threshold=thr,
-                       rng="lcg" if policy == "trh" else "jax")
+                       rng="lcg" if policy in _LCG_POLICIES else "jax")
     a = engine.run_stream(state, work, jax.random.key(2), policy=pol,
                           log_cfg=cfg, window_size=win, trace=trace,
                           window_dt=0.04, backend="jax")
@@ -191,7 +204,8 @@ def test_stream_kernel_engine_parity_transient(case):
                                   np.asarray(b.state.n_assigned))
 
 
-@pytest.mark.parametrize("policy", ["ect", "trh", "minload", "two_random"])
+@pytest.mark.parametrize("policy", ["ect", "trh", "minload", "two_random",
+                                    "mlml", "nltr", "rr", "two_choice"])
 def test_stream_kernel_matches_ref_oracle(policy):
     """Kernel == scan oracle on the packed table, padded windows, odd M."""
     m, n_win, win = 37, 4, 32
@@ -274,6 +288,13 @@ BATCH_CASES = [
     # M_pad = 384 is NOT a power of two: lane_sum's in-kernel renorm
     # reduction must pad 384 -> 512 (the only path that exercises it)
     (4, 300, 3, 32, 4, "trh"),
+    # sort-based policies on the trial grid (DESIGN.md §10): per-window
+    # bitonic sorts vectorized over trial sublanes; T % tile != 0
+    (5, 37, 4, 32, 2, "mlml"),
+    (5, 37, 4, 32, 2, "nltr"),
+    (6, 24, 4, 30, 4, "nltr"),
+    (3, 24, 3, 30, 3, "rr"),
+    (3, 24, 3, 30, 3, "two_choice"),
 ]
 
 
@@ -407,6 +428,57 @@ def test_run_stream_batch_engine_parity():
         np.testing.assert_array_equal(
             np.asarray(metrics[:, policy_core.MET_MAKESPAN]),
             np.asarray(jnp.max(w_open[None] + seq.latencies, axis=-1)))
+
+
+@pytest.mark.parametrize("policy", ["mlml", "nltr"])
+def test_stream_batch_sort_policy_all_invalid_final_window(policy):
+    """A FULLY padded (all-invalid) final window: every sort key in the
+    window is -inf, nvalid = 0 collapses the nLTR section bounds to 0,
+    and the LCG still advances on the dead steps — kernel == batched
+    oracle == engine, bit-exact (DESIGN.md §10 edge case)."""
+    t, m, n_win, win = 4, 37, 4, 30
+    obj, lens, valid, tables, seeds, rates = _batch_case(t, m, n_win, win,
+                                                         seed=21)
+    valid = valid.at[:, -win:].set(False)        # kill the last window
+    kw = dict(n_servers=m, window_size=win, threshold=2.0, lam=50.0,
+              window_dt=0.02, policy=policy, observe=True, renorm=True)
+    outs = sched_stream_batch(obj, lens, valid, tables, seeds, rates,
+                              trial_tile=2, **kw)
+    refs = sched_stream_batch_ref(obj, lens, valid, tables, seeds, rates,
+                                  **kw)
+    for name, a, b in zip(("ch", "lat", "tab", "wl", "met"), outs, refs):
+        if name == "tab":
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       atol=1e-6, err_msg=name)
+            np.testing.assert_array_equal(
+                np.asarray(a[:, policy_core.ROW_LOADS]),
+                np.asarray(b[:, policy_core.ROW_LOADS]), err_msg=name)
+        else:
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b),
+                                          err_msg=name)
+    # dead-window latencies are exactly zero (masked writes)
+    np.testing.assert_array_equal(np.asarray(outs[1][:, -win:]), 0.0)
+
+
+def test_mlml_kernel_pairs_longest_with_lightest():
+    """Behavioural: with a uniform prior, MLML through the kernel pairs
+    the longest request of the window with the lightest (lowest-index)
+    server — Alg. 1's circular positional pairing, same as the engine."""
+    m, win = 8, 8
+    lens = jnp.asarray([3.0, 9.0, 1.0, 7.0, 5.0, 2.0, 8.0, 4.0],
+                       jnp.float32)
+    obj = jnp.arange(win, dtype=jnp.int32)
+    table = statlog.init_state(LogConfig(n_servers=m, lam=1e9)).log
+    ch, _, _, _ = sched_stream(
+        obj, lens, jnp.ones((win,), bool), table, jnp.uint32(0),
+        jnp.ones((1, m), jnp.float32), n_servers=m, window_size=win,
+        threshold=-1e9, lam=1e9, window_dt=0.0, policy="mlml",
+        observe=False, renorm=False)
+    # uniform probs -> sorted_servers = [0..M); k-th longest -> server k
+    order = np.argsort(-np.asarray(lens), kind="stable")
+    expect = np.empty(win, np.int32)
+    expect[order] = np.arange(win)
+    np.testing.assert_array_equal(np.asarray(ch), expect)
 
 
 def test_stream_kernel_avoids_transient_straggler():

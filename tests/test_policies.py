@@ -309,3 +309,62 @@ def test_masking_failed_servers():
         assert s in (2, 3)
     host.unmask_server(0)
     assert 0 not in host.masked_servers
+
+
+# ---------------------------------------------------------------------------
+# In-VMEM sort contract (DESIGN.md §10): the kernel's bitonic network
+# computes THE unique stable permutation, so the engine's backend argsort
+# may stand in for it on the hot path.
+# ---------------------------------------------------------------------------
+
+from repro.core import policy_core  # noqa: E402
+
+
+def test_bitonic_argsort_equals_stable_argsort():
+    """The (key desc, index asc) comparator is a strict total order: the
+    bitonic compare-exchange network and stable argsort have exactly one
+    common answer — across sizes, heavy ties, invalid masks, and both
+    xp twins.  This equality is what lets plan_window keep jnp.argsort
+    while the Pallas kernel sorts in-VMEM (DESIGN.md §10)."""
+    rng = np.random.default_rng(3)
+    for r in (1, 2, 3, 17, 60, 100, 128):
+        for tie_pool in (None, 4):
+            if tie_pool is None:
+                keys = rng.uniform(0.0, 50.0, r).astype(np.float32)
+            else:  # heavy ties exercise the index tiebreak
+                keys = rng.choice(np.linspace(0, 3, tie_pool),
+                                  r).astype(np.float32)
+            valid = rng.random(r) > 0.3
+            ref = np.argsort(-np.where(valid, keys, -np.inf), kind="stable")
+            got_np, _ = policy_core.bitonic_argsort_desc(keys, valid=valid,
+                                                         xp=np)
+            got_jnp, skeys = policy_core.bitonic_argsort_desc(
+                jnp.asarray(keys), valid=jnp.asarray(valid))
+            np.testing.assert_array_equal(got_np[:r], ref, err_msg=str(r))
+            np.testing.assert_array_equal(np.asarray(got_jnp)[:r], ref)
+            # sorted keys descend over the valid prefix, -inf elsewhere
+            sk = np.asarray(skeys)[:valid.sum()]
+            assert (np.diff(sk) <= 0).all()
+
+
+def test_recursive_average_bounds_batched_matches_engine_form():
+    """The kernel evaluates the nLTR section bounds on (t_tile, R_pad)
+    tiles; the engine on one (R,) row.  Same integers, any batch."""
+    rng = np.random.default_rng(5)
+    t, ws = 5, 60
+    lens = rng.uniform(0.5, 30.0, (t, ws)).astype(np.float32)
+    valid = rng.random((t, ws)) > 0.25
+    for n in (1, 2, 3):
+        rows = []
+        for i in range(t):
+            order, skeys = policy_core.bitonic_argsort_desc(
+                jnp.asarray(lens[i]), valid=jnp.asarray(valid[i]))
+            nv = jnp.asarray([valid[i].sum()], jnp.int32)
+            rows.append(np.asarray(policy_core.recursive_average_bounds(
+                skeys, nv, n)))
+        orderb, skeysb = policy_core.bitonic_argsort_desc(
+            jnp.asarray(lens), valid=jnp.asarray(valid))
+        nvb = jnp.asarray(valid.sum(axis=1), jnp.int32)[:, None]
+        batched = np.asarray(policy_core.recursive_average_bounds(
+            skeysb, nvb, n))
+        np.testing.assert_array_equal(batched, np.stack(rows), err_msg=str(n))

@@ -261,6 +261,116 @@ def test_kernel_batch_backend_trh_lcg_parity():
                                       err_msg=f)
 
 
+@pytest.mark.parametrize("scenario,policy,rng",
+                         [(s, "nltr", "lcg") for s in simulate.SCENARIOS]
+                         + [(s, "mlml", "jax") for s in simulate.SCENARIOS])
+def test_kernel_batch_sort_policies_all_scenarios(scenario, policy, rng):
+    """Tentpole coverage (DESIGN.md §10): the sort-based mlml/nltr ride
+    the trial-grid kernel across every scenario — decisions, latencies
+    and loads bit-exact vs (a) lax.map of the sequential kernel path and
+    (b) the vmapped jax engine; T below the grid tile, padded windows
+    (n_requests % window_size != 0)."""
+    cfg_k = SimConfig(n_servers=25, n_requests=130, n_trials=3,
+                      window_size=40, backend="kernel",
+                      scenario=ScenarioConfig(name=scenario))
+    cfg_j = dataclasses.replace(cfg_k, backend="jax")
+    log = simulate.default_log_cfg(cfg_k)
+    pol = PolicyConfig(name=policy, threshold=5.0, rng=rng)
+    batch = simulate.run_trials(KEY, cfg_k, pol, log)
+    keys = jax.random.split(KEY, cfg_k.n_trials)
+    seq = jax.jit(lambda ks: jax.lax.map(
+        lambda k: simulate._run_shared_log(k, cfg_k, pol, log), ks))(keys)
+    eng = simulate.run_trials(KEY, cfg_j, pol, log)
+    for other, tag in ((seq, "lax.map kernel"), (eng, "vmapped engine")):
+        for f in batch._fields:
+            np.testing.assert_array_equal(
+                np.asarray(getattr(batch, f)),
+                np.asarray(getattr(other, f)),
+                err_msg=f"{scenario}/{policy}/{tag}/{f}")
+
+
+def test_kernel_batch_backend_runs_all_six_policies_bit_exact():
+    """Acceptance: SimConfig(backend='kernel') dispatches every §3.4
+    policy — rr, mlml, trh, nltr, two_choice, ect — with decisions,
+    latencies and loads bit-exact vs the jax engine (randomized policies
+    replay the kernel's LCG)."""
+    cfg_k = SimConfig(n_servers=24, n_requests=200, n_trials=4,
+                      window_size=60, backend="kernel",
+                      scenario=ScenarioConfig(name="transient"))
+    cfg_j = dataclasses.replace(cfg_k, backend="jax")
+    log = simulate.default_log_cfg(cfg_k)
+    from repro.core.policies import POLICIES
+    assert len(POLICIES) == 6
+    for name in POLICIES:
+        rng = "lcg" if name in ("trh", "nltr", "two_choice") else "jax"
+        thr = 0.05 if name == "ect" else 5.0
+        pol = PolicyConfig(name=name, threshold=thr, rng=rng)
+        batch = simulate.run_trials(KEY, cfg_k, pol, log)
+        eng = simulate.run_trials(KEY, cfg_j, pol, log)
+        for f in ("chosen", "latencies", "server_loads", "window_loads",
+                  "phase_time", "probe_msgs", "redirected", "n_assigned"):
+            np.testing.assert_array_equal(np.asarray(getattr(batch, f)),
+                                          np.asarray(getattr(eng, f)),
+                                          err_msg=f"{name}/{f}")
+
+
+def test_per_client_uneven_split_masks_padding():
+    """Satellite regression: with n_requests % n_clients != 0 the padded
+    slices (and whole phantom clients) must not leak into the per-client
+    aggregates — the window_loads mean counts only clients that actually
+    scheduled a request, and probe totals stay 2/request for two_choice."""
+    # 5 requests over 8 clients -> per = 1, three phantom clients
+    cfg = simulate.SimConfig(n_servers=6, n_clients=8, n_requests=5,
+                             n_trials=1, window_size=4,
+                             client_model="per_client")
+    log = simulate.default_log_cfg(cfg)
+    res = simulate.run_trials(KEY, cfg,
+                              PolicyConfig(name="two_choice"), log)
+    # probes: exactly 2 per scheduled request, padding issues none
+    assert int(np.asarray(res.probe_msgs)[0]) == 2 * cfg.n_requests
+    # window_loads is the mean over REAL clients' private views: each of
+    # the 5 real clients saw its own request only, so the mean view
+    # carries total_bytes / 5 of scheduled load above the absorbed
+    # initial loads; averaging over all 8 (phantoms included) would
+    # dilute it to total_bytes / 8 — the pre-fix failure.
+    key = jax.random.key(0)
+    keys = jax.random.split(key, 1)
+    k_load, k_work, _ = jax.random.split(keys[0], 3)
+    init, _ = simulate.initial_loads(k_load, cfg)
+    work = simulate.sample_workload(k_work, cfg)
+    scheduled = float(np.asarray(res.window_loads)[0, -1].sum()
+                      - np.asarray(init).sum())
+    expect = float(np.asarray(work.lengths).sum()) / cfg.n_requests
+    np.testing.assert_allclose(scheduled, expect, rtol=1e-5)
+
+
+def test_nltr_section_count_validated_against_servers():
+    """Satellite regression: 2**nltr_n > n_servers used to silently
+    collapse every nLTR section onto the same server range; now the
+    dispatch boundary raises a ValueError naming both values."""
+    from repro.core import engine, policies, statlog
+    cfg = simulate.SimConfig(n_servers=6, n_requests=40, n_trials=1,
+                             window_size=20)
+    log = simulate.default_log_cfg(cfg)
+    bad = PolicyConfig(name="nltr", nltr_n=3)        # K = 8 > M = 6
+    with pytest.raises(ValueError, match="nltr_n=3.*n_servers=6"):
+        simulate.run_trials(KEY, cfg, bad, log)
+    with pytest.raises(ValueError, match="nltr_n=3.*n_servers=6"):
+        engine.run_stream(statlog.init_state(log),
+                          simulate.sample_workload(KEY, cfg), KEY,
+                          policy=bad, log_cfg=log, window_size=20)
+    with pytest.raises(ValueError, match="nltr_n=3"):
+        policies.HostScheduler(bad, statlog.HostStatLog(log))
+    # K == M is the legal edge: one server per section, still runs
+    edge = PolicyConfig(name="nltr", nltr_n=2, threshold=5.0)
+    cfg8 = simulate.SimConfig(n_servers=4, n_requests=40, n_trials=1,
+                              window_size=20)
+    res = simulate.run_trials(KEY, cfg8, edge,
+                              simulate.default_log_cfg(cfg8))
+    chosen = np.asarray(res.chosen)
+    assert ((chosen >= 0) & (chosen < 4)).all()
+
+
 def test_simconfig_rejects_bad_fields_with_values():
     """Satellite: config validation raises ValueError (not assert — gone
     under `python -O`) naming the offending values."""
