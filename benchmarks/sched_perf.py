@@ -232,7 +232,7 @@ def kernel_batch_throughput(n_servers: int = 100, n_requests: int = 2000,
     if check_bit_exact:
         keys = jax.random.split(key, n_trials)
         seq = jax.jit(lambda ks: jax.lax.map(
-            lambda k: simulate._run_shared_log(k, cfg, pol, log_cfg), ks)
+            lambda k: simulate.run_one_trial(k, cfg, pol, log_cfg), ks)
         )(keys)
         out["batch_bit_exact"] = bool(
             (np.asarray(batch.chosen) == np.asarray(seq.chosen)).all()
@@ -251,6 +251,71 @@ def kernel_batch_throughput(n_servers: int = 100, n_requests: int = 2000,
         print(f"  per-trial decisions/latencies/loads bit-exact vs "
               f"sequential kernel path: {out['batch_bit_exact']}"
               + ("" if out["batch_bit_exact"] else "  <-- DIVERGED"))
+    return out
+
+
+@functools.lru_cache(maxsize=None)   # run_all + emit_bench_point share it
+def kernel_per_client_throughput(n_servers: int = 100,
+                                 n_requests: int = 2000,
+                                 window_size: int = 100,
+                                 n_trials: int = 100, n_clients: int = 16,
+                                 reps: int = 3, policy: str = "ect",
+                                 threshold: float = 0.05,
+                                 client_tile: Optional[int] = None,
+                                 check_bit_exact: bool = False
+                                 ) -> Dict[str, float]:
+    """per_client contention-sweep throughput (DESIGN.md §11): the whole
+    ``n_trials x n_clients`` private-log sweep as ONE 2-D
+    (trials × clients) grid pallas_call —
+    ``run_trials(backend='kernel', client_model='per_client')`` — vs the
+    SAME sweep through the vmapped jax engine path.
+
+    ``per_client_kernel_req_s`` / ``per_client_jax_req_s`` are aggregate
+    (trials x requests) / median wall seconds; ``per_client_bit_exact``
+    asserts every TrialResult decision/latency/load/aggregate of the 2-D
+    grid equals the jax path — the §11 tentpole contract (also covered
+    per policy/scenario in tests, so the full-scale sweeps skip it)."""
+    import jax
+    from repro.core import simulate
+    from repro.core.simulate import ScenarioConfig, SimConfig
+
+    out: Dict[str, float] = {
+        "n_servers": n_servers, "n_requests": n_requests,
+        "n_trials": n_trials, "n_clients": n_clients, "reps": reps,
+        "policy": policy}
+    key = jax.random.key(0)
+    rng = "lcg" if policy in ("trh", "nltr", "two_choice") else "jax"
+    pol = PolicyConfig(name=policy, threshold=threshold, rng=rng)
+    warm_res = {}
+    for backend in ("kernel", "jax"):
+        cfg = SimConfig(n_servers=n_servers, n_requests=n_requests,
+                        n_trials=n_trials, window_size=window_size,
+                        n_clients=n_clients, client_model="per_client",
+                        client_tile=client_tile, backend=backend,
+                        scenario=ScenarioConfig(name="transient"))
+        log_cfg = simulate.default_log_cfg(cfg)
+        dt, warm = _median_time(
+            lambda: simulate.run_trials(key, cfg, pol, log_cfg), reps)
+        warm_res[backend] = warm
+        tag = "kernel" if backend == "kernel" else "jax"
+        out[f"per_client_{tag}_s"] = dt
+        out[f"per_client_{tag}_req_s"] = n_trials * n_requests / dt
+    if check_bit_exact:
+        out["per_client_bit_exact"] = bool(all(
+            (np.asarray(getattr(warm_res["kernel"], f))
+             == np.asarray(getattr(warm_res["jax"], f))).all()
+            for f in ("chosen", "latencies", "server_loads",
+                      "window_loads", "phase_time", "probe_msgs")))
+    print(f"\n== per_client 2-D grid sweep throughput ({n_servers} OSS x "
+          f"{n_requests} reqs x {n_trials} trials x {n_clients} clients, "
+          f"policy={policy}, median of {reps}) ==")
+    for tag in ("kernel", "jax"):
+        print(f"  {tag:>6s}: {out[f'per_client_{tag}_s']:8.3f}s  "
+              f"{out[f'per_client_{tag}_req_s']:10.0f} req/s aggregate")
+    if check_bit_exact:
+        print(f"  TrialResult bit-exact across backends: "
+              f"{out['per_client_bit_exact']}"
+              + ("" if out["per_client_bit_exact"] else "  <-- DIVERGED"))
     return out
 
 
@@ -333,6 +398,23 @@ def emit_bench_point(path: str = "BENCH_sched.json",
                                      n_trials=batch_trials, policy=spol,
                                      threshold=5.0, check_bit_exact=False)
         point[f"kernel_batch_req_s_{spol}"] = sb["kernel_batch_req_s"]
+    # per_client contention sweeps on the 2-D (trials × clients) grid
+    # (DESIGN.md §11): kernel vs the vmapped jax path at {4, 16, 64}
+    # clients; 16 is the headline pair tracked by --trajectory and
+    # carries the full-scale bit-exactness flag
+    for n_c in (4, 16, 64):
+        pc = kernel_per_client_throughput(n_servers=kernel_scale,
+                                          n_trials=batch_trials,
+                                          n_clients=n_c,
+                                          check_bit_exact=(n_c == 16))
+        suffix = "" if n_c == 16 else f"_{n_c}c"
+        point[f"kernel_batch_req_s_per_client{suffix}"] = \
+            pc["per_client_kernel_req_s"]
+        point[f"engine_req_s_per_client{suffix}"] = \
+            pc["per_client_jax_req_s"]
+        if n_c == 16:
+            point["kernel_per_client_bit_exact"] = \
+                pc.get("per_client_bit_exact")
     history = []
     if os.path.exists(path):
         try:
@@ -385,10 +467,12 @@ def trajectory(path: str = "BENCH_sched.json",
     # scheduling throughput series (req/s — higher is better); the
     # delta table flags any run where a kernel path fell behind the
     # engine (the regression the trial-grid kernel exists to prevent).
-    # Older points predate the later series (kernel_batch_req_s and the
-    # sort-policy rows) — every access is a tolerant .get.
+    # Older points predate the later series (kernel_batch_req_s, the
+    # sort-policy rows, the per_client 2-D-grid pair) — every access is
+    # a tolerant .get.
     thr_cols = ("engine_req_s", "kernel_req_s", "kernel_batch_req_s",
-                "kernel_batch_req_s_mlml", "kernel_batch_req_s_nltr")
+                "kernel_batch_req_s_mlml", "kernel_batch_req_s_nltr",
+                "kernel_batch_req_s_per_client", "engine_req_s_per_client")
     print(f"\n== perf trajectory ({len(history)} runs, {path}) ==")
     print(f"{'run':>4s} {'when':>16s} " +
           " ".join(f"{c.replace('phase_s_', 'ph_'):>14s}" for c in cols))
@@ -410,7 +494,8 @@ def trajectory(path: str = "BENCH_sched.json",
 
     # only the SAME-policy kernel series compare against engine_req_s
     # (the sort-policy rows have no engine twin in the point — flagging
-    # them against the ect engine number would be apples-to-oranges)
+    # them against the ect engine number would be apples-to-oranges);
+    # the per_client kernel series compares against ITS jax twin.
     flag_cols = ("kernel_req_s", "kernel_batch_req_s")
     print(f"\n{'run':>4s} " + " ".join(f"{c:>20s}" for c in thr_cols)
           + "  kernel vs engine")
@@ -424,6 +509,10 @@ def trajectory(path: str = "BENCH_sched.json",
             if (v is not None and eng is not None and c in flag_cols
                     and v < eng):
                 behind.append(c.replace("_req_s", ""))
+        pck = pt.get("kernel_batch_req_s_per_client")
+        pce = pt.get("engine_req_s_per_client")
+        if pck is not None and pce is not None and pck < pce:
+            behind.append("kernel_batch_per_client")
         flag = ("  <-- " + ", ".join(behind) + " BEHIND engine"
                 if behind else "")
         print(f"{i:>4d} " + " ".join(cells) + flag)
@@ -496,6 +585,16 @@ def run_smoke() -> None:
                                   window_size=60, n_trials=10, reps=1,
                                   policy="nltr", threshold=4.0)
     assert srt["batch_bit_exact"], "sort-policy trial-grid divergence"
+    # per_client on the 2-D (trials × clients) grid (DESIGN.md §11):
+    # T=10 vs trial tile 8 AND C=5 over client_tile=2 exercise inert
+    # trial padding, phantom-client padding AND the multi-block
+    # cross-client accumulator; the whole TrialResult must match the
+    # jax path (the default tile would clamp to 5 — one block, no pad)
+    pc = kernel_per_client_throughput(n_servers=24, n_requests=480,
+                                      window_size=60, n_trials=10,
+                                      n_clients=5, client_tile=2, reps=1,
+                                      check_bit_exact=True)
+    assert pc["per_client_bit_exact"], "per_client 2-D grid divergence"
     _scenario_sweep(("transient",), ("rr", "ect"), 4)
     print(f"[smoke] ok in {time.time() - t0:.1f}s")
 
@@ -549,6 +648,10 @@ def run_all() -> None:
     for spol in ("mlml", "nltr"):
         kernel_batch_throughput(n_servers=100, n_trials=100, policy=spol,
                                 threshold=5.0, check_bit_exact=False)
+    for n_c in (4, 16, 64):
+        kernel_per_client_throughput(n_servers=100, n_trials=100,
+                                     n_clients=n_c,
+                                     check_bit_exact=(n_c == 16))
 
 
 if __name__ == "__main__":

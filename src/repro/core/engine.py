@@ -430,35 +430,54 @@ def run_stream_jit(state, work, key, *, policy, log_cfg, window_size,
                       backend=backend)
 
 
+class ClientMerge(NamedTuple):
+    """Per-trial cross-client aggregates fused in-VMEM by the 2-D
+    (trials × clients) grid kernel (DESIGN.md §11) — the per_client
+    contention model's "typical client" view, merged over REAL clients
+    (a client is real iff its slice scheduled at least one valid
+    request; phantom padded clients are masked out with the
+    `policy_core.masked_client_sum` association)."""
+
+    window_loads_mean: jax.Array  # (T, W, M) masked client-mean snapshots
+    metrics: jax.Array            # (T, N_CMETRICS) merged MET_* rows
+
+
 def run_stream_batch(states: SchedState, works: Workload, keys: jax.Array, *,
                      policy: P.PolicyConfig, log_cfg: LogConfig,
                      window_size: int, group_steps: bool = True,
                      traces: Optional[ClusterTrace] = None,
                      window_dt: float = 0.0,
                      observe: Optional[bool] = None,
-                     trial_tile: Optional[int] = None
-                     ) -> Tuple[ScheduleResult, jax.Array]:
-    """Trial-grid dispatch: T whole `run_stream` traces as ONE pallas_call.
+                     trial_tile: Optional[int] = None,
+                     client_tile: Optional[int] = None
+                     ) -> Tuple[ScheduleResult, jax.Array,
+                                Optional[ClientMerge]]:
+    """Batched dispatch: a whole batch of `run_stream` traces as ONE
+    pallas_call, for an arbitrary leading batch shape.
 
-    ``states`` / ``works`` / ``keys`` / ``traces`` carry a leading trial
-    axis T (build them with ``jax.vmap`` over per-trial constructors —
-    `simulate.run_trials(backend="kernel")` does exactly that).  The
-    JAX-side prep is the per-trial `run_stream` prep vmapped (window
-    split, `group_by_object_with_map` step formation, per-window trace
-    rates), so every trial sees bit-identical inputs to the sequential
-    path; the scheduling itself runs on the trial-grid kernel
-    (`kernels.sched_select.ops.sched_stream_batch`,
-    ``grid = ceil(T / trial_tile)``, trials vectorized over VMEM
-    sublanes).
+    ``states`` / ``works`` / ``keys`` carry either a ``(T,)`` leading
+    trial axis (the PR-3 trial grid) or a ``(T, C)`` (trials × clients)
+    axis pair — the per_client contention model, where each of a
+    trial's C clients schedules its private request slice against its
+    own log and ``traces`` stays per-TRIAL (a trial's clients share the
+    cluster's rate schedule).  The JAX-side prep is the per-stream
+    `run_stream` prep vmapped (window split, `group_by_object_with_map`
+    step formation, per-window trace rates), so every stream sees
+    bit-identical inputs to the sequential path; the scheduling itself
+    runs on the trial-grid kernel (``grid = ceil(T / trial_tile)``) or
+    the 2-D grid kernel (``grid = (ceil(T / tt), ceil(C / ct))``,
+    DESIGN.md §11), streams vectorized over VMEM sublanes either way.
 
-    Returns ``(result, metrics)``: ``result`` is a ScheduleResult whose
-    fields all carry the leading trial axis, bit-exact per trial vs.
-    `run_stream(backend="kernel")` under ``lax.map``; ``metrics`` is the
-    kernel's fused in-VMEM reduction, ``(T, N_METRICS)`` f32 in
-    `policy_core.MET_*` order (makespan / nearest-rank p99 / latency
-    sum / latency max / valid count over the scheduled steps) — the
-    headline sweep numbers without an HBM round-trip of the latency
-    blocks.
+    Returns ``(result, metrics, client_merge)``: ``result`` is a
+    ScheduleResult whose fields all carry the leading batch axes,
+    bit-exact per stream vs. `run_stream(backend="kernel")` under
+    ``lax.map``; ``metrics`` is the kernel's fused in-VMEM reduction,
+    ``(T[, C], N_METRICS)`` f32 in `policy_core.MET_*` order (makespan /
+    nearest-rank p99 / latency sum / latency max / valid count over the
+    scheduled steps) — the headline sweep numbers without an HBM
+    round-trip of the latency blocks; ``client_merge`` is the
+    :class:`ClientMerge` cross-client row for the (T, C) form and
+    ``None`` for the (T,) form.
     """
     from repro.kernels.sched_select import ops as kops
 
@@ -471,11 +490,12 @@ def run_stream_batch(states: SchedState, works: Workload, keys: jax.Array, *,
         observe = traces is not None
     if trial_tile is None:
         trial_tile = kops.DEFAULT_TRIAL_TILE
-    t = works.object_ids.shape[0]
-    r = works.object_ids.shape[1]
+    batch_shape = works.object_ids.shape[:-1]     # (T,) or (T, C)
+    two_d = len(batch_shape) == 2
+    r = works.object_ids.shape[-1]
     m = states.n_servers
 
-    n_win = -(-works.object_ids.shape[1] // window_size)
+    n_win = -(-r // window_size)
 
     def prep(state, work, key):
         _, obj, lens, val = _window_split(work, window_size)
@@ -490,34 +510,53 @@ def run_stream_batch(states: SchedState, works: Workload, keys: jax.Array, *,
         return (g_obj.reshape(-1), g_lens.reshape(-1), g_val.reshape(-1),
                 seed, val, req_to_step)
 
+    vprep = jax.vmap(jax.vmap(prep)) if two_d else jax.vmap(prep)
     g_obj, g_lens, g_val, seeds, val, req_to_step = \
-        jax.vmap(prep)(states, works, keys)
+        vprep(states, works, keys)
     if traces is not None:
         win_rates = jax.vmap(
             lambda tr: _window_rates(None, tr, n_win, window_dt)
         )(traces)
     else:
+        # 2-D: rates are per TRIAL (client-shared) — read client 0's row
+        rate_states = (jax.tree.map(lambda a: a[:, 0], states) if two_d
+                       else states)
         win_rates = jax.vmap(
             lambda st: _window_rates(st, None, n_win, window_dt)
-        )(states)
+        )(rate_states)
 
-    choices, lats, tables, wloads, metrics = kops.sched_stream_batch(
-        g_obj, g_lens, g_val, states.log, seeds, win_rates,
-        n_servers=m, window_size=window_size, threshold=policy.threshold,
-        lam=log_cfg.lam, alpha=log_cfg.ewma_alpha, window_dt=window_dt,
-        policy=policy.name, observe=observe, renorm=log_cfg.renorm,
-        trial_tile=trial_tile, nltr_n=policy.nltr_n,
-        probe_choices=policy.probe_choices)
+    kw = dict(n_servers=m, window_size=window_size,
+              threshold=policy.threshold, lam=log_cfg.lam,
+              alpha=log_cfg.ewma_alpha, window_dt=window_dt,
+              policy=policy.name, observe=observe, renorm=log_cfg.renorm,
+              nltr_n=policy.nltr_n, probe_choices=policy.probe_choices)
+    if two_d:
+        choices, lats, tables, wloads, metrics, cm_wl, cm_met = \
+            kops.sched_stream_grid(
+                g_obj, g_lens, g_val, states.log, seeds, win_rates,
+                trial_tile=trial_tile, client_tile=client_tile, **kw)
+        merged = ClientMerge(window_loads_mean=cm_wl, metrics=cm_met)
+    else:
+        choices, lats, tables, wloads, metrics = kops.sched_stream_batch(
+            g_obj, g_lens, g_val, states.log, seeds, win_rates,
+            trial_tile=trial_tile, **kw)
+        merged = None
 
     # host-side bookkeeping: the SAME single-stream helper as the
-    # sequential kernel path, vmapped over trials (every op in it is
-    # exact — gathers, bool masks, integer segment sums, elementwise f32
-    # adds — so batching cannot drift it).
-    result = jax.vmap(functools.partial(
+    # sequential kernel path, vmapped over the batch axes (every op in
+    # it is exact — gathers, bool masks, integer segment sums,
+    # elementwise f32 adds — so batching cannot drift it).
+    book = functools.partial(
         _kernel_bookkeeping, policy=policy, window_dt=window_dt,
         n_win=n_win, window_size=window_size, r=r)
-    )(states, choices, lats, tables, wloads,
-      g_obj.reshape(t, n_win, window_size),
-      g_val.reshape(t, n_win, window_size), val, req_to_step,
-      win_rates[:, -1])
-    return result, metrics
+    if two_d:
+        # rates_last is per trial: broadcast over the client axis
+        vbook = jax.vmap(jax.vmap(book, in_axes=(0,) * 9 + (None,)))
+    else:
+        vbook = jax.vmap(book)
+    result = vbook(
+        states, choices, lats, tables, wloads,
+        g_obj.reshape(batch_shape + (n_win, window_size)),
+        g_val.reshape(batch_shape + (n_win, window_size)), val, req_to_step,
+        win_rates[:, -1])
+    return result, metrics, merged

@@ -56,6 +56,33 @@ N_METRICS = 5
 MET_NAMES = ("makespan", "p99_lat", "lat_sum", "lat_max", "n_valid")
 MET_PAD = 128          # kernel metrics row padded to one f32 lane tile
 
+# Cross-client merged metrics (DESIGN.md §11): the 2-D (trials × clients)
+# grid kernel reduces its clients' per-stream metric rows into one
+# per-TRIAL row before the block retires — lanes [0, N_METRICS) keep the
+# MET_* meaning merged over REAL clients (makespan/lat_max by max,
+# lat_sum/n_valid through `masked_client_sum`; the p99 lane is 0 — a
+# cross-client quantile would need the merged latency block), plus the
+# real-client count.  `client_stream_metrics` below is the bit-exact
+# host/engine twin.
+MET_N_CLIENTS = 5
+N_CMETRICS = 6
+CMET_NAMES = MET_NAMES + ("n_clients",)
+
+# Clients per program-instance block in the 2-D grid (DESIGN.md §11).
+# Like the trial tile, 8 keeps stream-sublane counts at multiples of the
+# native f32 sublane count; it is ALSO an association parameter — the
+# cross-client float merges sum client blocks of this width (see
+# `masked_client_sum`) — so the jax path resolves it through
+# `resolve_client_tile` too, even when no kernel runs.
+DEFAULT_CLIENT_TILE = 8
+
+
+def resolve_client_tile(n_clients: int, client_tile=None) -> int:
+    """Effective clients-per-block of the 2-D grid AND of the cross-client
+    merge association (both layers must resolve it identically)."""
+    ct = DEFAULT_CLIENT_TILE if client_tile is None else client_tile
+    return max(min(ct, n_clients), 1)
+
 # The in-kernel LCG (numerical recipes constants) — also used by the JAX
 # engine when ``PolicyConfig.rng == "lcg"`` so kernel and engine consume
 # an identical randomness stream (the bit-exactness contract).
@@ -388,8 +415,23 @@ def window_decrements(rates, dt, xp=jnp):
     the engine<->kernel bit-exactness contract.  A decrement that enters
     the loop as a materialized array (scan ``xs`` row / pallas operand)
     leaves only a bare subtract inside the body, which every backend
-    rounds identically."""
-    return xp.maximum(rates, 1e-6) * dt
+    rounds identically.
+
+    The scan-xs materialization alone is NOT sufficient: XLA simplifies
+    a single-iteration window scan away, the orphaned product lands in
+    the same kLoop fusion as the subtract, and LLVM contracts the pair
+    into an FMA at instruction selection — a level no graph construct
+    reaches (``optimization_barrier`` and even an int32 bitcast
+    round-trip were both observed to contract anyway; found under the
+    per_client vmap² engine at one-window-per-client shapes, DESIGN.md
+    §11).  The fix is arithmetic: clamp the decrement at zero.  A drain
+    decrement is nonnegative by construction, so ``maximum(dec, 0)`` is
+    a bit-exact identity — but the subtract's operand is now a
+    ``maximum``, not a ``multiply``, and fp contraction only fuses a
+    multiply that DIRECTLY feeds the add/sub (the compiler cannot drop
+    the clamp either: the rates are runtime values whose sign it cannot
+    prove)."""
+    return xp.maximum(xp.maximum(rates, 1e-6) * dt, 0.0)
 
 
 def drain_loads(loads, rates, dt, xp=jnp, dec=None):
@@ -486,3 +528,100 @@ def stream_metrics(lats, valid, window_dt: float, window_size: int, xp=jnp):
     p99 = nearest_rank_p99(lats, valid, xp)
     return xp.concatenate([makespan, p99, lat_sum, lat_max, n_valid],
                           axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# Cross-client merge — the 2-D (trials × clients) grid's reduction twins
+# ---------------------------------------------------------------------------
+
+
+def tree_sum(x, axis: int = 0, xp=jnp):
+    """Deterministic sum over ``axis``: the explicit pairwise halving tree
+    of :func:`lane_sum`, generalized to any axis (zero-pad to the next
+    power of two, then repeatedly fold the upper half onto the lower).
+    Keeps the axis with size 1.  This is the WITHIN-BLOCK association of
+    the cross-client merge: the 2-D grid kernel folds its ``client_tile``
+    client sublanes through exactly these adds (DESIGN.md §11)."""
+    c = x.shape[axis]
+    size = _next_pow2(c)
+    if size != c:
+        pad = [(0, 0)] * x.ndim
+        pad[axis] = (0, size - c)
+        x = xp.pad(x, pad)
+    lo = [slice(None)] * x.ndim
+    hi = [slice(None)] * x.ndim
+    while x.shape[axis] > 1:
+        h = x.shape[axis] // 2
+        lo[axis] = slice(0, h)
+        hi[axis] = slice(h, None)
+        x = x[tuple(lo)] + x[tuple(hi)]
+    return x
+
+
+def _mask_clients(x, client_valid, xp=jnp):
+    """Zero the rows of phantom clients (leading client axis)."""
+    cv = client_valid.reshape(client_valid.shape + (1,) * (x.ndim - 1))
+    return xp.where(cv, x, xp.zeros_like(x))
+
+
+def masked_client_sum(x, client_valid, client_tile: int, xp=jnp):
+    """Cross-client masked sum over the LEADING client axis with the 2-D
+    grid's float association: sequential (ascending) over
+    ``ceil(C / client_tile)`` client blocks, each block folded by
+    :func:`tree_sum`.  This mirrors exactly how the grid kernel
+    accumulates — within a program instance the ``client_tile`` client
+    sublanes fold through the halving tree, and the per-trial
+    accumulator adds one block per client grid step — so the jax path,
+    the oracle and the kernel produce bit-identical merged floats
+    (DESIGN.md §11).  ``client_valid``: (C,) bool — phantom clients
+    (padded slices that scheduled nothing) contribute exact zeros.
+    Returns ``x.shape[1:]``."""
+    c = x.shape[0]
+    xm = _mask_clients(x, client_valid, xp)
+    n_blocks = -(-c // client_tile)
+    if n_blocks * client_tile != c:
+        pad = [(0, n_blocks * client_tile - c)] + [(0, 0)] * (x.ndim - 1)
+        xm = xp.pad(xm, pad)
+    out = None
+    for b in range(n_blocks):
+        blk = tree_sum(xm[b * client_tile:(b + 1) * client_tile], 0, xp)[0]
+        out = blk if out is None else out + blk
+    return out
+
+
+def masked_client_mean(x, client_valid, client_tile: int, xp=jnp):
+    """Masked cross-client mean: :func:`masked_client_sum` divided by the
+    REAL client count (at least 1) — the "typical client's view"
+    aggregate of the per_client contention model, shared verbatim by
+    ``simulate``'s jax path and re-derived bit-identically by the grid
+    kernel's in-VMEM merge."""
+    total = masked_client_sum(x, client_valid, client_tile, xp)
+    dtype = total.dtype
+    n_real = masked_client_sum(
+        xp.ones(client_valid.shape, dtype), client_valid, client_tile, xp)
+    return total / xp.maximum(n_real, xp.ones((), dtype))
+
+
+def masked_client_max(x, client_valid, xp=jnp):
+    """Masked cross-client max over the leading client axis (floored at 0
+    — every merged metric is nonnegative).  ``max`` is order-free, so no
+    association contract is needed."""
+    return xp.max(_mask_clients(x, client_valid, xp), axis=0)
+
+
+def client_stream_metrics(metrics, client_valid, client_tile: int, xp=jnp):
+    """Merge per-client stream-metric rows into the per-trial row the 2-D
+    grid kernel fuses in-VMEM (DESIGN.md §11).  ``metrics``:
+    (C, >= N_METRICS) per-client rows (:func:`stream_metrics` layout);
+    ``client_valid``: (C,) bool.  Returns (N_CMETRICS,) f32 in ``MET_*``
+    + ``MET_N_CLIENTS`` order; the cross-client p99 lane is 0 (a merged
+    quantile would need the merged latency block)."""
+    f32 = jnp.float32 if xp is jnp else np.float32
+    metrics = metrics.astype(f32)
+    mx = masked_client_max(metrics, client_valid, xp)
+    sm = masked_client_sum(metrics, client_valid, client_tile, xp)
+    n_real = masked_client_sum(xp.ones(client_valid.shape, f32),
+                               client_valid, client_tile, xp)
+    return xp.stack([mx[MET_MAKESPAN], xp.zeros((), f32),
+                     sm[MET_LAT_SUM], mx[MET_LAT_MAX], sm[MET_N_VALID],
+                     n_real])

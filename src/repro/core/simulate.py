@@ -10,7 +10,8 @@ Reproduces the evaluation environment of the paper:
 * 100 trials, reporting the average per-OSS load;
 * straggler injection: 10 % of servers receive 5x the average load.
 
-Everything is one jitted, ``vmap``-over-trials program per policy.
+Everything dispatches through ONE batched trial runner (`_run_batched`)
+per policy, jitted end to end.
 
 Two client models are provided:
 
@@ -21,18 +22,24 @@ Two client models are provided:
   are partitioned over ``n_clients`` independent logs which do NOT see each
   other's decisions; reported loads are the true per-server sums.  This
   quantifies the multi-client blind spot discussed in DESIGN.md.
+
+Both models run on either backend: ``backend="jax"`` (vmapped lax.scan
+engine) or ``backend="kernel"`` — the whole sweep as ONE pallas_call,
+grid = trial tiles for shared_log (DESIGN.md §9) and trial tiles ×
+client tiles for per_client (DESIGN.md §11), bit-exact across backends.
 """
 
 from __future__ import annotations
 
 import dataclasses
 import functools
+import warnings
 from typing import NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
-from repro.core import engine, policies, statlog
+from repro.core import engine, policies, policy_core, statlog
 from repro.core.engine import ClusterTrace, Workload
 from repro.core.policies import PolicyConfig
 from repro.core.statlog import LogConfig, SchedState
@@ -111,12 +118,18 @@ class SimConfig:
     scenario: Optional[ScenarioConfig] = None
     # scheduling substrate: "jax" (lax.scan engine, every policy) or
     # "kernel" (the Pallas trial-grid kernel — every §3.4 policy incl.
-    # the sort-based mlml/nltr (DESIGN.md §10), shared_log model; ALL
-    # trials run as ONE pallas_call, grid = trial tiles; DESIGN.md §9).
+    # the sort-based mlml/nltr (DESIGN.md §10); ALL trials run as ONE
+    # pallas_call, grid = trial tiles for shared_log (DESIGN.md §9) and
+    # trial tiles x client tiles for per_client (DESIGN.md §11)).
     backend: str = "jax"
     # trials per kernel program instance (kernel backend; None = the
     # kernels package default, the native f32 sublane count 8)
     trial_tile: Optional[int] = None
+    # clients per 2-D-grid program instance (per_client model; None =
+    # `policy_core.DEFAULT_CLIENT_TILE`).  Also the block width of the
+    # cross-client merge association (`policy_core.masked_client_sum`),
+    # so it is resolved identically on the jax backend.
+    client_tile: Optional[int] = None
     # size-class boundaries (MB) per §4
     small_lo: float = 0.25
     small_hi: float = 4.0
@@ -136,17 +149,21 @@ class SimConfig:
         if self.backend not in ("jax", "kernel"):
             raise ValueError(
                 f"backend={self.backend!r} must be 'jax' or 'kernel'")
-        if self.backend == "kernel" and self.client_model != "shared_log":
+        if self.n_clients < 1:
             raise ValueError(
-                "backend='kernel' models one shared log, got "
-                f"client_model={self.client_model!r} (n_clients="
-                f"{self.n_clients}); use backend='jax' for the "
-                "per-client contention study")
+                f"n_clients={self.n_clients!r} must be >= 1 (the "
+                "per_client contention model partitions n_requests="
+                f"{self.n_requests} over the clients)")
         if self.trial_tile is not None and self.trial_tile < 1:
             raise ValueError(
                 f"trial_tile={self.trial_tile!r} must be a positive trial"
                 " count per kernel program instance (or None for the"
                 " kernels-package default)")
+        if self.client_tile is not None and self.client_tile < 1:
+            raise ValueError(
+                f"client_tile={self.client_tile!r} must be a positive"
+                " client count per 2-D-grid program instance (or None for"
+                f" the policy_core default; n_clients={self.n_clients})")
 
     @property
     def n_windows(self) -> int:
@@ -168,6 +185,13 @@ class TrialResult(NamedTuple):
     latencies: jax.Array       # (R,) est. completion latency per request, s
     phase_time: jax.Array      # () makespan: latest est. completion time, s
     window_loads: jax.Array    # (W, M) post-drain load snapshot per window
+    #   (per_client: masked client-MEAN of the real clients' private
+    #   views — the typical client, phantom padded clients excluded)
+    window_size_eff: jax.Array  # () int32 EFFECTIVE per-stream window size:
+    #   cfg.window_size, except under per_client where it clamps to the
+    #   per-client slice length min(window_size, ceil(R / n_clients)) —
+    #   recorded (and warned about at dispatch) so window-size sweeps
+    #   across client counts can detect they compared different windows
 
 
 def sample_workload(key: jax.Array, cfg: SimConfig) -> Workload:
@@ -336,13 +360,15 @@ def _trial_setup(key: jax.Array, cfg: SimConfig, log_cfg: LogConfig):
 def _trial_result(cfg: SimConfig, window_dt: float, init, strag_mask, work,
                   trace, chosen, probe_msgs, redirected, latencies,
                   window_loads,
-                  phase_time: Optional[jax.Array] = None) -> TrialResult:
-    """Fold one scheduled stream into the TrialResult bookkeeping.
+                  phase_time: Optional[jax.Array] = None,
+                  window_size_eff: Optional[int] = None) -> TrialResult:
+    """Fold one scheduled stream into the TrialResult bookkeeping — the
+    ONE post step every client-model x backend combination shares.
 
     ``phase_time`` overrides the host-side makespan reduction — the
-    trial-grid path passes the kernel's fused in-VMEM metric (bit-equal:
-    ``max`` is order-free and grouped steps share their duplicates'
-    latency)."""
+    kernel paths pass the fused in-VMEM metric (bit-equal: ``max`` is
+    order-free and grouped steps share their duplicates' latency), the
+    per_client jax path the masked cross-client max."""
     written = jax.ops.segment_sum(work.lengths, chosen,
                                   num_segments=cfg.n_servers)
     n_assigned = jax.ops.segment_sum(jnp.ones_like(chosen), chosen,
@@ -355,6 +381,8 @@ def _trial_result(cfg: SimConfig, window_dt: float, init, strag_mask, work,
         w_open = (jnp.arange(cfg.n_requests) // cfg.window_size) * window_dt
         completion = w_open.astype(jnp.float32) + latencies
         phase_time = jnp.max(completion)
+    if window_size_eff is None:
+        window_size_eff = cfg.window_size
     return TrialResult(server_loads=init + written, n_assigned=n_assigned,
                        chosen=chosen, probe_msgs=probe_msgs,
                        straggler_hits=hits,
@@ -362,7 +390,8 @@ def _trial_result(cfg: SimConfig, window_dt: float, init, strag_mask, work,
                        init_loads=init, straggler_mask=strag_mask,
                        latencies=latencies,
                        phase_time=phase_time,
-                       window_loads=window_loads)
+                       window_loads=window_loads,
+                       window_size_eff=jnp.int32(window_size_eff))
 
 
 def _observe(cfg: SimConfig) -> bool:
@@ -372,8 +401,23 @@ def _observe(cfg: SimConfig) -> bool:
     return cfg.scenario is not None and cfg.scenario.name != "static"
 
 
-def _run_shared_log(key: jax.Array, cfg: SimConfig, policy: PolicyConfig,
-                    log_cfg: LogConfig) -> TrialResult:
+def run_one_trial(key: jax.Array, cfg: SimConfig, policy: PolicyConfig,
+                  log_cfg: LogConfig) -> TrialResult:
+    """Sequential single-trial REFERENCE: `_trial_setup` + ONE
+    `engine.run_stream` + `_trial_result`, all at unbatched shapes.
+
+    `run_trials` never calls this — every client_model x backend combo
+    dispatches through `_run_batched` — it is the comparator that parity
+    tests and benchmarks ``lax.map`` over to prove the batched dispatch
+    is bit-exact trial by trial (with ``cfg.backend == "kernel"`` it is
+    the SEQUENTIAL kernel path, one pallas_call per trial).  shared_log
+    only: the per_client reference is the same engine vmapped over
+    client slices, i.e. ``_run_batched`` on the jax backend."""
+    if cfg.client_model != "shared_log":
+        raise ValueError(
+            "run_one_trial is the shared_log sequential reference; got "
+            f"client_model={cfg.client_model!r} (use backend='jax' "
+            "run_trials as the per_client comparator)")
     init, strag_mask, work, state, trace, k_sched = _trial_setup(key, cfg,
                                                                  log_cfg)
     window_dt = (resolve_window_dt(cfg, cfg.scenario)
@@ -388,138 +432,170 @@ def _run_shared_log(key: jax.Array, cfg: SimConfig, policy: PolicyConfig,
                          res.latencies, res.window_loads)
 
 
-def _run_shared_log_batch(keys: jax.Array, cfg: SimConfig,
-                          policy: PolicyConfig,
-                          log_cfg: LogConfig) -> TrialResult:
-    """Trial-grid path (DESIGN.md §9): every trial's whole windowed stream
-    scheduled by ONE pallas_call (`engine.run_stream_batch`).
+def _client_split_shape(cfg: SimConfig) -> Tuple[int, int, int, int]:
+    """(n_clients, per-client slice length, tail padding, effective
+    window size) of the per_client request partition."""
+    c = cfg.n_clients
+    per = -(-cfg.n_requests // c)
+    pad = c * per - cfg.n_requests
+    win = min(cfg.window_size, per)
+    return c, per, pad, win
 
-    Setup and bookkeeping run under ``lax.map`` — NOT ``vmap`` — on
-    purpose: mapping traces the per-trial computation at the exact
-    shapes of the sequential path, so sampled workloads, absorbed
-    initial tables and per-server sums are bit-identical to
-    ``lax.map(_run_shared_log)`` (vmapped elementwise ops may pick
-    different reduction/contraction lowerings at batched shapes; the
-    heavy work — scheduling — is the batched kernel either way).  The
-    per-trial makespan comes from the kernel's fused metrics row instead
-    of a host-side reduction over the latency block."""
-    from repro.core.policy_core import MET_MAKESPAN
 
+def _split_clients(works: Workload, c: int, per: int, pad: int) -> Workload:
+    """Partition (T, R) request streams into (T, C, per) client slices
+    (tail padding invalid; trailing clients may be whole PHANTOMS that
+    scheduled nothing when n_clients > n_requests)."""
+    def sp(a, fill):
+        if pad:
+            a = jnp.concatenate(
+                [a, jnp.full(a.shape[:-1] + (pad,), fill, a.dtype)],
+                axis=-1)
+        return a.reshape(a.shape[:-1] + (c, per))
+
+    return Workload(object_ids=sp(works.object_ids, 0),
+                    lengths=sp(works.lengths, 0),
+                    valid=sp(works.valid, False))
+
+
+def _run_batched(keys: jax.Array, cfg: SimConfig, policy: PolicyConfig,
+                 log_cfg: LogConfig) -> TrialResult:
+    """THE trial runner: one batched dispatch for every client_model x
+    backend combination (DESIGN.md §9/§11).
+
+    Per-trial setup and TrialResult bookkeeping run under ``lax.map`` —
+    NOT ``vmap`` — on purpose: mapping traces the per-trial computation
+    at the exact shapes of the sequential `run_one_trial` path, so
+    sampled workloads, absorbed initial tables and per-server sums are
+    bit-identical to it (vmapped elementwise ops may pick different
+    reduction/contraction lowerings at batched shapes).  Only the
+    scheduling itself is batch-dispatched: ONE pallas_call for the
+    kernel backend (trial grid, or the 2-D trials x clients grid under
+    per_client), the vmapped lax.scan engine for the jax backend.
+
+    per_client (the contention model): each trial's request stream is
+    partitioned over ``n_clients`` private logs that share the trial's
+    initial-load snapshot and trace but never see each other's
+    decisions; the per-stream window size CLAMPS to the slice length
+    (``window_size_eff`` in the result, warned about at dispatch), and
+    every cross-client aggregate — window_loads mean, probe sum, phase
+    makespan — masks phantom clients and merges with the
+    `policy_core.masked_client_sum` association, so the kernel's
+    in-VMEM merge is bit-identical to the jax path's."""
+    per_client = cfg.client_model == "per_client"
     window_dt = (resolve_window_dt(cfg, cfg.scenario)
                  if cfg.scenario is not None else 0.0)
+    observe = _observe(cfg)
+    t = keys.shape[0]
     init, strag_mask, works, states, traces, k_sched = jax.lax.map(
         lambda k: _trial_setup(k, cfg, log_cfg), keys)
-    res, metrics = engine.run_stream_batch(
-        states, works, k_sched, policy=policy, log_cfg=log_cfg,
-        window_size=cfg.window_size, group_steps=True, traces=traces,
-        window_dt=window_dt, observe=_observe(cfg),
-        trial_tile=cfg.trial_tile)
 
-    def post(xs):
-        (init_i, strag_i, work_i, trace_i, chosen_i, probes_i, redir_i,
-         lat_i, wl_i, mk_i) = xs
-        return _trial_result(cfg, window_dt, init_i, strag_i, work_i,
-                             trace_i, chosen_i, probes_i, redir_i, lat_i,
-                             wl_i, phase_time=mk_i)
+    if per_client:
+        c, per, pad, win = _client_split_shape(cfg)
+        if win < cfg.window_size:
+            warnings.warn(
+                f"per_client window clamp: window_size={cfg.window_size} "
+                f"exceeds the per-client slice (n_requests="
+                f"{cfg.n_requests} over n_clients={c} -> {per}/client); "
+                f"scheduling with window_size_eff={win} — sweeps "
+                "comparing window sizes across client counts are "
+                "comparing different windows", stacklevel=2)
+        run_works = _split_clients(works, c, per, pad)
+        run_keys = jax.vmap(lambda k: jax.random.split(k, c))(k_sched)
+        run_states = jax.tree.map(
+            lambda a: jnp.broadcast_to(a[:, None], (t, c) + a.shape[1:]),
+            states)
+    else:
+        win = cfg.window_size
+        run_works, run_keys, run_states = works, k_sched, states
 
-    return jax.lax.map(post, (init, strag_mask, works, traces, res.chosen,
-                              res.probe_msgs, res.redirected, res.latencies,
-                              res.window_loads,
-                              metrics[:, MET_MAKESPAN]))
+    metrics = merged = None
+    if cfg.backend == "kernel":
+        res, metrics, merged = engine.run_stream_batch(
+            run_states, run_works, run_keys, policy=policy,
+            log_cfg=log_cfg, window_size=win, group_steps=True,
+            traces=traces, window_dt=window_dt, observe=observe,
+            trial_tile=cfg.trial_tile, client_tile=cfg.client_tile)
+    else:
+        run1 = functools.partial(
+            engine.run_stream, policy=policy, log_cfg=log_cfg,
+            window_size=win, group_steps=True, window_dt=window_dt,
+            observe=observe, backend="jax")
+        fn = lambda st, w, k, tr: run1(st, w, k, trace=tr)  # noqa: E731
+        tr_ax = None if traces is None else 0
+        if per_client:
+            inner = jax.vmap(fn, in_axes=(0, 0, 0, None))
+            res = jax.vmap(inner, in_axes=(0, 0, 0, tr_ax))(
+                run_states, run_works, run_keys, traces)
+        else:
+            res = jax.vmap(fn, in_axes=(0, 0, 0, tr_ax))(
+                run_states, run_works, run_keys, traces)
 
+    if per_client:
+        # cross-client fold: true loads are the cross-client sums (the
+        # request order is the original stream), the contention
+        # aggregates the masked merges over REAL clients
+        r = cfg.n_requests
+        ct = policy_core.resolve_client_tile(c, cfg.client_tile)
+        cvalid = jnp.any(run_works.valid, axis=-1)           # (T, C)
+        chosen = res.chosen.reshape(t, c * per)[:, :r]
+        redirected = res.redirected.reshape(t, c * per)[:, :r]
+        latencies = res.latencies.reshape(t, c * per)[:, :r]
+        probes = jnp.sum(jnp.where(cvalid, res.probe_msgs, 0),
+                         axis=-1).astype(jnp.int32)
+        if merged is not None:
+            # the 2-D grid kernel's in-VMEM merge (bit-identical to the
+            # jax branch below — asserted in tests/test_simulate.py)
+            wl = merged.window_loads_mean
+            phase = merged.metrics[:, policy_core.MET_MAKESPAN]
+        else:
+            wl = jax.vmap(
+                lambda w, v: policy_core.masked_client_mean(w, v, ct)
+            )(res.window_loads, cvalid)
+            w_open = ((jnp.arange(per) // win).astype(jnp.float32)
+                      * jnp.float32(window_dt))
+            comp = jnp.where(run_works.valid,
+                             w_open[None, None, :] + res.latencies, 0.0)
+            phase = jnp.max(comp, axis=(1, 2))
+    else:
+        chosen, redirected = res.chosen, res.redirected
+        latencies, probes, wl = res.latencies, res.probe_msgs, \
+            res.window_loads
+        phase = (metrics[:, policy_core.MET_MAKESPAN]
+                 if metrics is not None else None)
 
-def _run_per_client(key: jax.Array, cfg: SimConfig, policy: PolicyConfig,
-                    log_cfg: LogConfig) -> TrialResult:
-    """Contention model: each client schedules its slice with a private log
-    that starts from the same initial-load snapshot but never sees other
-    clients' decisions.  True server loads are the cross-client sums."""
-    k_load, k_work, k_sched = jax.random.split(key, 3)
-    init, strag_mask = initial_loads(k_load, cfg)
-    work = sample_workload(k_work, cfg)
-    n_c = cfg.n_clients
-    per = -(-cfg.n_requests // n_c)
-    pad = n_c * per - cfg.n_requests
-    win = min(cfg.window_size, per)
-    trace, window_dt = None, 0.0
-    if cfg.scenario is not None:
-        trace = make_trace(jax.random.fold_in(key, 0x7e3), cfg, cfg.scenario)
-        window_dt = resolve_window_dt(cfg, cfg.scenario)
-
-    def pad_to(a, fill=0):
-        return jnp.concatenate([a, jnp.full((pad,), fill, a.dtype)]) if pad else a
-
-    obj = pad_to(work.object_ids).reshape(n_c, per)
-    lens = pad_to(work.lengths).reshape(n_c, per)
-    val = pad_to(work.valid, False).reshape(n_c, per)
-    keys = jax.random.split(k_sched, n_c)
-
-    observe = cfg.scenario is not None and cfg.scenario.name != "static"
-
-    def one_client(o, ln, v, k):
-        state = statlog.init_state(log_cfg)
-        state = absorb_initial_loads(state, init, log_cfg)
-        if trace is not None:
-            state = state._replace(rates=trace.rates[0])
-        res = engine.run_stream(state, Workload(o, ln, v), k, policy=policy,
-                                log_cfg=log_cfg, window_size=win,
-                                trace=trace, window_dt=window_dt,
-                                observe=observe)
-        return (res.chosen, res.probe_msgs, res.redirected, res.latencies,
-                res.window_loads)
-
-    chosen, probes, redirected, lat, wloads = \
-        jax.vmap(one_client)(obj, lens, val, keys)
-    chosen = chosen.reshape(-1)[:cfg.n_requests]
-    redirected = redirected.reshape(-1)[:cfg.n_requests]
-    latencies = lat.reshape(-1)[:cfg.n_requests]
-    written = jax.ops.segment_sum(work.lengths, chosen,
-                                  num_segments=cfg.n_servers)
-    n_assigned = jax.ops.segment_sum(jnp.ones_like(chosen), chosen,
-                                     num_segments=cfg.n_servers)
-    if cfg.scenario is not None:
-        strag_mask = strag_mask | trace_straggler_mask(trace, cfg.scenario)
-    w_open = (jnp.arange(per) // win).astype(jnp.float32) * window_dt
-    completion = (w_open[None, :] + lat).reshape(-1)[:cfg.n_requests]
-    # Mask per-client reductions by validity: an uneven split
-    # (n_requests % n_clients != 0) pads the last clients' slices — and
-    # when n_clients * per > n_requests + per, whole PHANTOM clients that
-    # scheduled nothing.  Averaging their untouched private logs (and
-    # summing their probe rows) into the contention numbers dilutes the
-    # "typical client" view, so every cross-client reduction weights by
-    # clients that actually scheduled a valid request.
-    client_valid = jnp.any(val, axis=1)                   # (n_clients,)
-    n_real = jnp.maximum(jnp.sum(client_valid.astype(jnp.float32)), 1.0)
-    wloads_mean = (jnp.sum(jnp.where(client_valid[:, None, None], wloads,
-                                     0.0), axis=0) / n_real)
-    probe_msgs = jnp.sum(jnp.where(client_valid, probes, 0))
-    return TrialResult(server_loads=init + written, n_assigned=n_assigned,
-                       chosen=chosen, probe_msgs=probe_msgs,
-                       straggler_hits=jnp.sum(strag_mask[chosen]),
-                       redirected=jnp.sum(redirected),
-                       init_loads=init, straggler_mask=strag_mask,
-                       latencies=latencies,
-                       phase_time=jnp.max(completion),
-                       # real clients' private views; mean = typical client
-                       window_loads=wloads_mean)
+    xs = (init, strag_mask, works, traces, chosen, probes, redirected,
+          latencies, wl)
+    if phase is not None:
+        return jax.lax.map(
+            lambda x: _trial_result(cfg, window_dt, *x[:-1],
+                                    phase_time=x[-1], window_size_eff=win),
+            xs + (phase,))
+    return jax.lax.map(
+        lambda x: _trial_result(cfg, window_dt, *x, window_size_eff=win),
+        xs)
 
 
 @functools.partial(jax.jit, static_argnames=("cfg", "policy", "log_cfg"))
 def run_trials(key: jax.Array, cfg: SimConfig, policy: PolicyConfig,
                log_cfg: LogConfig) -> TrialResult:
-    """Run ``cfg.n_trials`` independent trials (vmapped + jitted).
+    """Run ``cfg.n_trials`` independent trials (one batched dispatch,
+    jitted).
 
-    The kernel backend runs the WHOLE sweep as one trial-grid pallas_call
-    (`engine.run_stream_batch`, grid = trial tiles, per-trial makespan
-    fused in-VMEM — DESIGN.md §9); every §3.4 policy dispatches through
-    it since the in-VMEM sorts of DESIGN.md §10; decisions, latencies,
-    loads and phase_time are bit-exact vs. mapping the sequential kernel
-    path trial by trial (asserted in tests/test_kernels.py)."""
+    Every client_model x backend combination goes through the SAME
+    `_run_batched` runner.  The kernel backend runs the WHOLE sweep as
+    one pallas_call — grid = trial tiles for shared_log (DESIGN.md §9),
+    ``(trial tiles, client tiles)`` for the per_client contention model
+    (DESIGN.md §11) — with per-trial makespan (and, under per_client,
+    the cross-client merges) fused in-VMEM; every §3.4 policy dispatches
+    through it since the in-VMEM sorts of DESIGN.md §10.  Decisions,
+    latencies, loads, window_loads and phase_time are bit-exact vs.
+    mapping the sequential kernel path trial by trial AND vs. the
+    vmapped jax engine (asserted in tests/test_kernels.py and
+    tests/test_simulate.py)."""
     policies.validate_policy(policy, cfg.n_servers)
     keys = jax.random.split(key, cfg.n_trials)
-    if cfg.backend == "kernel":
-        return _run_shared_log_batch(keys, cfg, policy, log_cfg)
-    fn = _run_shared_log if cfg.client_model == "shared_log" else _run_per_client
-    return jax.vmap(lambda k: fn(k, cfg, policy, log_cfg))(keys)
+    return _run_batched(keys, cfg, policy, log_cfg)
 
 
 def default_log_cfg(cfg: SimConfig, lam: Optional[float] = None) -> LogConfig:

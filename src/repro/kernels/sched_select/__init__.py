@@ -1,6 +1,8 @@
 from repro.kernels.sched_select.ops import sched_select  # noqa: F401
 from repro.kernels.sched_select.ops import sched_stream  # noqa: F401
 from repro.kernels.sched_select.ops import sched_stream_batch  # noqa: F401
+from repro.kernels.sched_select.ops import sched_stream_grid  # noqa: F401
 from repro.kernels.sched_select.ref import sched_select_ref  # noqa: F401
 from repro.kernels.sched_select.ref import sched_stream_ref  # noqa: F401
 from repro.kernels.sched_select.ref import sched_stream_batch_ref  # noqa: F401
+from repro.kernels.sched_select.ref import sched_stream_grid_ref  # noqa: F401

@@ -24,6 +24,19 @@ single-stream kernel bit-for-bit (same ops on ``(1, M_pad)`` rows).
 Grid = independent clients OR independent trials; there is no cross-
 stream gossip, exactly as in the paper §3.3.
 
+2-D (TRIALS × CLIENTS) GRID form (DESIGN.md §11): the per_client
+contention model — T trials, each partitioned over C private-log
+clients — runs as ONE ``pallas_call`` with ``grid = (T / t_tile,
+C / c_tile)``.  Per-stream operands carry both axes; the rate/drain
+traces stay per-TRIAL (a trial's clients share its cluster schedule)
+and broadcast over the client sublanes in-VMEM.  The decision loop is
+the SAME function — the block flattens to ``t_tile * c_tile`` stream
+sublanes — and before a block retires it folds its clients into
+per-trial cross-client aggregates (masked client-mean window loads,
+merged metric row with real-client count) accumulated across the
+client grid dimension with the `policy_core.masked_client_sum`
+association, so the jax path's merge is bit-identical.
+
 Per window the kernel snapshots the probability ranking (TRH's plan),
 loops the window's requests (selection → threshold guard → Eq. (1)-(3)
 one-hot updates → completion feedback into the ewma/est rows), then
@@ -89,11 +102,12 @@ from jax.experimental import pallas as pl
 import jax.experimental.pallas.tpu as pltpu
 
 from repro.core.policy_core import (LCG_A, LCG_C, MET_LAT_MAX, MET_LAT_SUM,
-                                    MET_MAKESPAN, MET_N_VALID, MET_P99,
-                                    MET_PAD, N_ROWS, P99_BISECT_ITERS, P99_Q,
-                                    ROW_EST, ROW_EWMA, ROW_LOADS, ROW_PROBS,
+                                    MET_MAKESPAN, MET_N_CLIENTS, MET_N_VALID,
+                                    MET_P99, MET_PAD, N_ROWS,
+                                    P99_BISECT_ITERS, P99_Q, ROW_EST,
+                                    ROW_EWMA, ROW_LOADS, ROW_PROBS,
                                     bitonic_argsort_desc, lane_sum,
-                                    recursive_average_bounds,
+                                    recursive_average_bounds, tree_sum,
                                     window_decrements)
 
 _BIG = 3.4e38  # padding-lane load: never selected, never drained
@@ -110,21 +124,91 @@ def _lcg_mod(rng, n: int):
 
 def _sched_stream_kernel(objs_ref, lens_ref, valid_ref, table_ref, seed_ref,
                          rates_ref, dec_ref, choices_ref, lats_ref,
-                         final_table_ref, wloads_ref, metrics_ref, tbl, *,
+                         final_table_ref, wloads_ref, metrics_ref, *rest,
                          n_windows: int,
                          window_size: int, n_servers: int, m_pad: int,
                          t_tile: int, threshold: float, lam: float,
                          alpha: float, window_dt: float, policy: str,
                          observe: bool, renorm: bool, nltr_n: int,
-                         probe_choices: int):
+                         probe_choices: int, client_tile: int = 0,
+                         n_client_blocks: int = 1):
+    """One program instance of the stream kernel.
+
+    Trial-grid form (``client_tile == 0``): refs carry a leading
+    ``t_tile`` stream axis; ``rest`` is the ``(N_ROWS, t_tile, m_pad)``
+    table scratch.  2-D (trials × clients) grid form (DESIGN.md §11):
+    per-stream refs carry ``(t_tile, client_tile)`` leading axes, the
+    per-trial rate/decrement refs stay client-shared ``(t_tile, ...)``,
+    and ``rest`` is ``(cm_wloads_ref, cm_metrics_ref, tbl)`` — the two
+    per-TRIAL cross-client accumulators revisited across the client grid
+    dimension, plus the scratch.  The decision loop itself is identical:
+    the ``t_tile * client_tile`` independent streams ride the sublane
+    axis exactly like trials do in the 1-D form."""
     m = n_servers
+    grid_2d = client_tile > 0
+    if grid_2d:
+        cm_wloads_ref, cm_metrics_ref, tbl = rest
+        s_tile = t_tile * client_tile
+
+        def req_read(ref, start, size):
+            return jnp.reshape(ref[:, :, pl.ds(start, size)], (s_tile, size))
+
+        def req_write(ref, start, val):
+            ref[:, :, pl.ds(start, val.shape[-1])] = jnp.reshape(
+                val, (t_tile, client_tile) + val.shape[1:])
+
+        def trial_row(ref, w):
+            # (t_tile, m_pad) per-trial row, broadcast over the client
+            # sublanes (all of a trial's clients share its trace rates)
+            r = ref[:, pl.ds(w, 1), :][:, 0, :]
+            return jnp.reshape(jnp.broadcast_to(
+                r[:, None, :], (t_tile, client_tile, m_pad)),
+                (s_tile, m_pad))
+
+        def wl_write(ref, w, val):
+            ref[:, :, pl.ds(w, 1), :] = jnp.reshape(
+                val, (t_tile, client_tile, 1, m_pad))
+
+        def ftab_write(row, val):
+            final_table_ref[:, :, row, :] = jnp.reshape(
+                val, (t_tile, client_tile, m_pad))
+
+        def all_req(ref):
+            return jnp.reshape(ref[...], (s_tile, -1))
+
+        intab = jnp.reshape(table_ref[...], (s_tile, N_ROWS, m_pad))
+        seed0 = jnp.reshape(seed_ref[...], (s_tile, 1))
+    else:
+        (tbl,) = rest
+        s_tile = t_tile
+
+        def req_read(ref, start, size):
+            return ref[:, pl.ds(start, size)]
+
+        def req_write(ref, start, val):
+            ref[:, pl.ds(start, val.shape[-1])] = val
+
+        def trial_row(ref, w):
+            return ref[:, pl.ds(w, 1), :][:, 0, :]
+
+        def wl_write(ref, w, val):
+            ref[:, pl.ds(w, 1), :] = val[:, None, :]
+
+        def ftab_write(row, val):
+            final_table_ref[:, row, :] = val
+
+        def all_req(ref):
+            return ref[...]
+
+        intab = table_ref[...]                  # (t_tile, 4, m_pad)
+        seed0 = seed_ref[...]                   # (t_tile, 1)
+
     lane = jax.lax.broadcasted_iota(jnp.int32, (1, m_pad), 1)
     lv = lane < m                               # valid (non-padding) lanes
 
     # --- pin the packed log stack in VMEM scratch --------------------------
-    # tbl is (N_ROWS, t_tile, m_pad): tbl[row] is this tile's trials' row,
-    # one (t_tile, m_pad) tile per op below (trials ride the sublanes).
-    intab = table_ref[...]                      # (t_tile, 4, m_pad)
+    # tbl is (N_ROWS, s_tile, m_pad): tbl[row] is this tile's streams' row,
+    # one (s_tile, m_pad) tile per op below (streams ride the sublanes).
     tbl[ROW_LOADS] = jnp.where(lv, intab[:, ROW_LOADS, :], _BIG)
     tbl[ROW_PROBS] = jnp.where(lv, intab[:, ROW_PROBS, :], 0.0)
     tbl[ROW_EWMA] = jnp.where(lv, intab[:, ROW_EWMA, :], 0.0)
@@ -136,7 +220,7 @@ def _sched_stream_kernel(objs_ref, lens_ref, valid_ref, table_ref, seed_ref,
 
     def window_body(w, carry):
         rng, mk, lsum, lmax, nval = carry
-        cur_rates = jnp.where(lv, rates_ref[:, pl.ds(w, 1), :][:, 0, :], 1.0)
+        cur_rates = jnp.where(lv, trial_row(rates_ref, w), 1.0)
         sort_policy = policy in ("mlml", "nltr")
 
         if policy in ("trh", "mlml", "nltr"):
@@ -145,7 +229,7 @@ def _sched_stream_kernel(objs_ref, lens_ref, valid_ref, table_ref, seed_ref,
             # -inf keys so positions [0, M) are exactly the engine's
             # stable argsort(-probs) permutation.
             order_srv, _ = bitonic_argsort_desc(
-                tbl[ROW_PROBS], valid=jnp.broadcast_to(lv, (t_tile, m_pad)))
+                tbl[ROW_PROBS], valid=jnp.broadcast_to(lv, (s_tile, m_pad)))
             srt_lane = jax.lax.broadcasted_iota(
                 jnp.int32, (1, order_srv.shape[-1]), 1)
 
@@ -159,9 +243,9 @@ def _sched_stream_kernel(objs_ref, lens_ref, valid_ref, table_ref, seed_ref,
             # order: sort the request block in-VMEM (same network), then
             # gather per step / scatter decisions back by one-hot sums.
             start = w * window_size
-            obj_w = objs_ref[:, pl.ds(start, window_size)]   # (t, ws)
-            len_w = lens_ref[:, pl.ds(start, window_size)]
-            val_w = valid_ref[:, pl.ds(start, window_size)] != 0
+            obj_w = req_read(objs_ref, start, window_size)   # (s, ws)
+            len_w = req_read(lens_ref, start, window_size)
+            val_w = req_read(valid_ref, start, window_size) != 0
             order_req, skeys = bitonic_argsort_desc(len_w, valid=val_w)
             rp = order_req.shape[-1]
             sort_lane = jax.lax.broadcasted_iota(jnp.int32, (1, rp), 1)
@@ -313,11 +397,11 @@ def _sched_stream_kernel(objs_ref, lens_ref, valid_ref, table_ref, seed_ref,
 
             rng, ch_acc, lat_acc = jax.lax.fori_loop(
                 0, window_size, sorted_req_body,
-                (rng, jnp.zeros((t_tile, window_size), jnp.int32),
-                 jnp.zeros((t_tile, window_size), jnp.float32)),
+                (rng, jnp.zeros((s_tile, window_size), jnp.int32),
+                 jnp.zeros((s_tile, window_size), jnp.float32)),
                 unroll=False)
-            choices_ref[:, pl.ds(start, window_size)] = ch_acc
-            lats_ref[:, pl.ds(start, window_size)] = lat_acc
+            req_write(choices_ref, start, ch_acc)
+            req_write(lats_ref, start, lat_acc)
 
             def met_body(j, carry):
                 # fused metrics accumulate in ORIGINAL request order —
@@ -342,12 +426,12 @@ def _sched_stream_kernel(objs_ref, lens_ref, valid_ref, table_ref, seed_ref,
             def req_body(j, carry):
                 rng, mk, lsum, lmax, nval = carry
                 i = w * window_size + j
-                obj = objs_ref[:, pl.ds(i, 1)]               # (t, 1)
-                ln = lens_ref[:, pl.ds(i, 1)]
-                v = valid_ref[:, pl.ds(i, 1)] != 0
+                obj = req_read(objs_ref, i, 1)               # (s, 1)
+                ln = req_read(lens_ref, i, 1)
+                v = req_read(valid_ref, i, 1) != 0
                 choose, lat, latv, rng = schedule_one(j, obj, ln, v, rng)
-                choices_ref[:, pl.ds(i, 1)] = choose
-                lats_ref[:, pl.ds(i, 1)] = latv
+                req_write(choices_ref, i, choose)
+                req_write(lats_ref, i, latv)
                 # -- fused metric accumulators (stream_metrics twin) -------
                 mk = jnp.where(v, jnp.maximum(mk, wopen + lat), mk)
                 lsum = lsum + latv
@@ -373,29 +457,28 @@ def _sched_stream_kernel(objs_ref, lens_ref, valid_ref, table_ref, seed_ref,
             # drift that breaks the §9 parity contract.  A bare subtract
             # rounds identically everywhere.
             loads = tbl[ROW_LOADS]
-            dec = jnp.where(lv, dec_ref[:, pl.ds(w, 1), :][:, 0, :], 0.0)
+            dec = jnp.where(lv, trial_row(dec_ref, w), 0.0)
             drained = jnp.maximum(loads - dec, 0.0)
             tbl[ROW_LOADS] = jnp.where(lv, drained, _BIG)
-        wloads_ref[:, pl.ds(w, 1), :] = jnp.where(
-            lv, tbl[ROW_LOADS], 0.0)[:, None, :]
+        wl_write(wloads_ref, w, jnp.where(lv, tbl[ROW_LOADS], 0.0))
         return carry
 
-    seed = seed_ref[...].astype(jnp.uint32)                  # (t, 1)
-    zero = jnp.zeros((t_tile, 1), jnp.float32)
+    seed = seed0.astype(jnp.uint32)                          # (s, 1)
+    zero = jnp.zeros((s_tile, 1), jnp.float32)
     _, mk, lsum, lmax, nval = jax.lax.fori_loop(
         0, n_windows, window_body, (seed, zero, zero, zero, zero),
         unroll=False)
-    zero_pad = jnp.broadcast_to(~lv, (t_tile, m_pad))
+    zero_pad = jnp.broadcast_to(~lv, (s_tile, m_pad))
     for row in range(N_ROWS):
-        final_table_ref[:, row, :] = jnp.where(zero_pad, 0.0, tbl[row])
+        ftab_write(row, jnp.where(zero_pad, 0.0, tbl[row]))
 
     # -- fused metrics: reduce the VMEM-resident latency block -------------
     # (policy_core.stream_metrics / nearest_rank_p99 are the bit-exact
     # host twins — keep the float ops in lockstep with them.)
-    lats_all = lats_ref[...]                                 # (t, N)
-    val_all = valid_ref[...] != 0
+    lats_all = all_req(lats_ref)                             # (s, N)
+    val_all = all_req(valid_ref) != 0
     k = jnp.ceil(jnp.float32(P99_Q) * nval)
-    lo = jnp.full((t_tile, 1), -1.0, jnp.float32)
+    lo = jnp.full((s_tile, 1), -1.0, jnp.float32)
     hi = lmax
 
     def bisect(_, lo_hi):
@@ -411,11 +494,74 @@ def _sched_stream_kernel(objs_ref, lens_ref, valid_ref, table_ref, seed_ref,
                   axis=-1, keepdims=True)
     p99 = jnp.where(nval > 0, p99, 0.0)
     mlane = jax.lax.broadcasted_iota(jnp.int32, (1, MET_PAD), 1)
-    metrics_ref[...] = (jnp.where(mlane == MET_MAKESPAN, mk, 0.0)
-                        + jnp.where(mlane == MET_P99, p99, 0.0)
-                        + jnp.where(mlane == MET_LAT_SUM, lsum, 0.0)
-                        + jnp.where(mlane == MET_LAT_MAX, lmax, 0.0)
-                        + jnp.where(mlane == MET_N_VALID, nval, 0.0))
+    met_row = (jnp.where(mlane == MET_MAKESPAN, mk, 0.0)
+               + jnp.where(mlane == MET_P99, p99, 0.0)
+               + jnp.where(mlane == MET_LAT_SUM, lsum, 0.0)
+               + jnp.where(mlane == MET_LAT_MAX, lmax, 0.0)
+               + jnp.where(mlane == MET_N_VALID, nval, 0.0))
+    if not grid_2d:
+        metrics_ref[...] = met_row
+        return
+    metrics_ref[...] = jnp.reshape(met_row,
+                                   (t_tile, client_tile, MET_PAD))
+
+    # -- cross-client merge (2-D grid, DESIGN.md §11) ----------------------
+    # Fold this block's client_tile client sublanes into per-TRIAL
+    # aggregates while everything is VMEM-resident, then accumulate into
+    # the (t_tile, ...) merge outputs revisited across the client grid
+    # dimension: within-block sums run the policy_core.tree_sum halving
+    # tree and blocks add SEQUENTIALLY in ascending client order — the
+    # exact association of policy_core.masked_client_sum, so the jax
+    # path's merge is bit-identical.  A client is REAL iff it scheduled
+    # at least one valid step (nval > 0 ⇔ any(valid) — phantom padded
+    # clients contribute exact zeros everywhere).
+    j = pl.program_id(1)
+    mk_c = jnp.reshape(mk, (t_tile, client_tile))
+    lsum_c = jnp.reshape(lsum, (t_tile, client_tile))
+    lmax_c = jnp.reshape(lmax, (t_tile, client_tile))
+    nval_c = jnp.reshape(nval, (t_tile, client_tile))
+    cvalid = nval_c > 0.0
+
+    def csum(x):
+        return tree_sum(jnp.where(cvalid, x, 0.0), axis=1)[:, 0:1]
+
+    def cmax(x):
+        return jnp.max(jnp.where(cvalid, x, 0.0), axis=1, keepdims=True)
+
+    blk_row = (jnp.where(mlane == MET_MAKESPAN, cmax(mk_c), 0.0)
+               + jnp.where(mlane == MET_LAT_SUM, csum(lsum_c), 0.0)
+               + jnp.where(mlane == MET_LAT_MAX, cmax(lmax_c), 0.0)
+               + jnp.where(mlane == MET_N_VALID, csum(nval_c), 0.0)
+               + jnp.where(mlane == MET_N_CLIENTS,
+                           csum(jnp.ones_like(nval_c)), 0.0))
+    wl_c = jnp.reshape(wloads_ref[...],
+                       (t_tile, client_tile, n_windows, m_pad))
+    blk_wl = tree_sum(jnp.where(cvalid[:, :, None, None], wl_c, 0.0),
+                      axis=1)[:, 0]                    # (t, n_win, m_pad)
+    is_max_lane = (mlane == MET_MAKESPAN) | (mlane == MET_LAT_MAX)
+
+    @pl.when(j == 0)
+    def _init_merge():
+        cm_wloads_ref[...] = blk_wl
+        cm_metrics_ref[...] = blk_row
+
+    @pl.when(j > 0)
+    def _acc_merge():
+        cm_wloads_ref[...] = cm_wloads_ref[...] + blk_wl
+        prev = cm_metrics_ref[...]
+        cm_metrics_ref[...] = jnp.where(is_max_lane,
+                                        jnp.maximum(prev, blk_row),
+                                        prev + blk_row)
+
+    @pl.when(j == n_client_blocks - 1)
+    def _finish_merge():
+        # masked client-MEAN of the window loads: divide the accumulated
+        # sum by the real-client count (>= 1) — masked_client_mean's twin
+        row = cm_metrics_ref[...]
+        n_real = jnp.sum(jnp.where(mlane == MET_N_CLIENTS, row, 0.0),
+                         axis=-1, keepdims=True)       # (t_tile, 1)
+        denom = jnp.maximum(n_real, 1.0)[:, :, None]   # (t_tile, 1, 1)
+        cm_wloads_ref[...] = cm_wloads_ref[...] / denom
 
 
 def sched_stream_call(object_ids: jax.Array, lengths: jax.Array,
@@ -480,6 +626,88 @@ def sched_stream_call(object_ids: jax.Array, lengths: jax.Array,
         ],
         scratch_shapes=[
             pltpu.VMEM((N_ROWS, tt, m_pad), jnp.float32),   # the log stack
+        ],
+        interpret=interpret,
+    )(object_ids, lengths, valid, tables, seeds, win_rates, win_dec)
+
+
+def sched_stream_grid_call(object_ids: jax.Array, lengths: jax.Array,
+                           valid: jax.Array, tables: jax.Array,
+                           seeds: jax.Array, win_rates: jax.Array, *,
+                           n_servers: int, window_size: int, threshold: float,
+                           lam: float, alpha: float, window_dt: float,
+                           policy: str, observe: bool, renorm: bool,
+                           trial_tile: int = 1, client_tile: int = 1,
+                           nltr_n: int = 2, probe_choices: int = 2,
+                           interpret: bool = False):
+    """2-D (trials × clients) grid form of the stream kernel (§11).
+
+    object_ids/lengths/valid: (T, C, N) per-stream request slices (N =
+    W * window_size); tables: (T, C, 4, M_pad) private log tensors;
+    seeds: (T, C) uint32; win_rates: (T, W, M_pad) per-TRIAL true rates
+    (all of a trial's clients share its trace — broadcast over the
+    client sublanes in-VMEM, never materialized per client).  T and C
+    must be multiples of ``trial_tile`` / ``client_tile``; the grid runs
+    ``(T / tt, C / ct)`` program instances, each vectorizing its
+    ``tt * ct`` streams over VMEM sublanes.
+
+    Returns (choices (T, C, N) int32, latencies (T, C, N) f32,
+    final_tables (T, C, 4, M_pad) f32, window_loads (T, C, W, M_pad)
+    f32, metrics (T, C, MET_PAD) f32 per stream, cm_wloads (T, W,
+    M_pad) f32 — the masked client-MEAN window loads — and cm_metrics
+    (T, MET_PAD) f32 cross-client merged rows, accumulated in-VMEM
+    across the client grid dimension).
+    """
+    t, c, n = object_ids.shape
+    m_pad = tables.shape[-1]
+    n_win = win_rates.shape[1]
+    assert n == n_win * window_size, (n, n_win, window_size)
+    assert t % trial_tile == 0, (t, trial_tile)
+    assert c % client_tile == 0, (c, client_tile)
+    tt, ct = trial_tile, client_tile
+    win_dec = window_decrements(win_rates, window_dt).astype(jnp.float32)
+    kernel = functools.partial(
+        _sched_stream_kernel, n_windows=n_win, window_size=window_size,
+        n_servers=n_servers, m_pad=m_pad, t_tile=tt, threshold=threshold,
+        lam=lam, alpha=alpha, window_dt=window_dt, policy=policy,
+        observe=observe, renorm=renorm, nltr_n=nltr_n,
+        probe_choices=probe_choices, client_tile=ct,
+        n_client_blocks=c // ct)
+    return pl.pallas_call(
+        kernel,
+        grid=(t // tt, c // ct),
+        in_specs=[
+            pl.BlockSpec((tt, ct, n), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((tt, ct, n), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((tt, ct, n), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((tt, ct, N_ROWS, m_pad), lambda i, j: (i, j, 0, 0)),
+            pl.BlockSpec((tt, ct), lambda i, j: (i, j)),
+            pl.BlockSpec((tt, n_win, m_pad), lambda i, j: (i, 0, 0)),
+            pl.BlockSpec((tt, n_win, m_pad), lambda i, j: (i, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((tt, ct, n), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((tt, ct, n), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((tt, ct, N_ROWS, m_pad), lambda i, j: (i, j, 0, 0)),
+            pl.BlockSpec((tt, ct, n_win, m_pad), lambda i, j: (i, j, 0, 0)),
+            pl.BlockSpec((tt, ct, MET_PAD), lambda i, j: (i, j, 0)),
+            # per-TRIAL cross-client accumulators: constant in j, so the
+            # block stays VMEM-resident across a trial row's client
+            # steps and retires once per trial tile (DESIGN.md §11)
+            pl.BlockSpec((tt, n_win, m_pad), lambda i, j: (i, 0, 0)),
+            pl.BlockSpec((tt, MET_PAD), lambda i, j: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((t, c, n), jnp.int32),
+            jax.ShapeDtypeStruct((t, c, n), jnp.float32),
+            jax.ShapeDtypeStruct((t, c, N_ROWS, m_pad), jnp.float32),
+            jax.ShapeDtypeStruct((t, c, n_win, m_pad), jnp.float32),
+            jax.ShapeDtypeStruct((t, c, MET_PAD), jnp.float32),
+            jax.ShapeDtypeStruct((t, n_win, m_pad), jnp.float32),
+            jax.ShapeDtypeStruct((t, MET_PAD), jnp.float32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((N_ROWS, tt * ct, m_pad), jnp.float32),
         ],
         interpret=interpret,
     )(object_ids, lengths, valid, tables, seeds, win_rates, win_dec)

@@ -1,6 +1,6 @@
 """Jit'd wrappers for the sched_select kernels (auto-interpret on CPU).
 
-Three entry points:
+Four entry points:
 
 * :func:`sched_select` — the legacy single-window static-load form
   (minload / two_random), kept bit-identical to the seed kernel;
@@ -14,6 +14,13 @@ Three entry points:
   ``trial_tile`` trials vectorized over VMEM sublanes and reduces its
   fused per-trial metrics in-VMEM.  ``engine.run_stream_batch`` (and
   through it ``simulate.run_trials(backend="kernel")``) dispatches here.
+* :func:`sched_stream_grid` — the 2-D (TRIALS × CLIENTS) grid form
+  (DESIGN.md §11): the per_client contention model's whole sweep — T
+  trials × C private-log clients — as ONE ``pallas_call`` with
+  ``grid = (ceil(T / trial_tile), ceil(C / client_tile))`` and the
+  cross-client merges fused in-VMEM.  ``engine.run_stream_batch`` with
+  a ``(T, C)`` leading batch (and through it ``simulate.run_trials(
+  backend="kernel", client_model="per_client")``) dispatches here.
 """
 
 from __future__ import annotations
@@ -24,9 +31,11 @@ from typing import Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.core.policy_core import N_METRICS, init_table
+from repro.core.policy_core import (N_CMETRICS, N_METRICS, init_table,
+                                    resolve_client_tile)
 from repro.kernels.sched_select.kernel import (sched_select_call,
-                                               sched_stream_call)
+                                               sched_stream_call,
+                                               sched_stream_grid_call)
 
 POLICIES = ("minload", "two_random", "ect", "trh", "rr", "two_choice",
             "mlml", "nltr")
@@ -215,3 +224,92 @@ def sched_stream_batch(object_ids: jax.Array, lengths: jax.Array,
         probe_choices=probe_choices, interpret=interpret)
     return (choices[:t], lats[:t], ftab[:t, :, :m], wloads[:t, :, :m],
             metrics[:t, :N_METRICS])
+
+
+@functools.partial(jax.jit, static_argnames=("n_servers", "window_size",
+                                             "threshold", "lam", "alpha",
+                                             "window_dt", "policy",
+                                             "observe", "renorm",
+                                             "trial_tile", "client_tile",
+                                             "nltr_n", "probe_choices",
+                                             "interpret"))
+def sched_stream_grid(object_ids: jax.Array, lengths: jax.Array,
+                      valid: jax.Array, tables: jax.Array, seeds: jax.Array,
+                      win_rates: jax.Array, *, n_servers: int,
+                      window_size: int, threshold: float = 0.0,
+                      lam: float = 32.0, alpha: float = 0.25,
+                      window_dt: float = 0.0, policy: str = "ect",
+                      observe: bool = True, renorm: bool = True,
+                      trial_tile: int = DEFAULT_TRIAL_TILE,
+                      client_tile: Optional[int] = None,
+                      nltr_n: int = 2, probe_choices: int = 2,
+                      interpret: Optional[bool] = None
+                      ) -> Tuple[jax.Array, jax.Array, jax.Array, jax.Array,
+                                 jax.Array, jax.Array, jax.Array]:
+    """2-D (trials × clients) grid kernel (DESIGN.md §11): T trials of C
+    private-log client streams — the per_client contention model's whole
+    Monte-Carlo sweep — as ONE ``pallas_call``.
+
+    object_ids/lengths/valid: (T, C, N) per-client request slices (N =
+    W * window_size, padding rows ``valid == False``; a client whose
+    slice is ALL padding is a phantom client and is masked out of every
+    cross-client aggregate); tables: (T, C, 4, M) private packed log
+    tensors; seeds: (T, C) uint32 LCG states; win_rates: (T, W, M)
+    per-TRIAL true service rates (a trial's clients share its trace).
+    T / C pad up to ``trial_tile`` / ``client_tile`` multiples with
+    inert streams and the grid runs ``(ceil(T/tt), ceil(C/ct))``
+    program instances — bit-exact per stream vs. mapping
+    :func:`sched_stream` over every (trial, client) pair.
+
+    Returns (choices (T, C, N) int32, latencies (T, C, N) f32,
+    final_tables (T, C, 4, M) f32, window_loads (T, C, W, M) f32,
+    metrics (T, C, N_METRICS) f32 per stream, cm_wloads (T, W, M) f32 —
+    the masked client-MEAN post-drain loads, `policy_core.
+    masked_client_mean`'s in-VMEM twin — and cm_metrics (T, N_CMETRICS)
+    f32 cross-client merged rows, `policy_core.client_stream_metrics`'s
+    twin)."""
+    _check_policy(policy, n_servers, nltr_n)
+    interpret = _auto_interpret(interpret)
+    t, c, n = object_ids.shape
+    m = tables.shape[-1]
+    tile_t = min(trial_tile, t) if t else 1
+    tile_c = resolve_client_tile(c, client_tile)
+    t_pad = -(-t // tile_t) * tile_t
+    c_pad = -(-c // tile_c) * tile_c
+    m_pad = _pad_servers(m)
+
+    def pad_streams(a, fill):
+        """Pad the client then the trial axis with inert streams."""
+        if c_pad != c:
+            extra = jnp.broadcast_to(fill, (a.shape[0], c_pad - c)
+                                     + a.shape[2:]).astype(a.dtype)
+            a = jnp.concatenate([a, extra], axis=1)
+        if t_pad != t:
+            extra = jnp.broadcast_to(fill, (t_pad - t,) + a.shape[1:]
+                                     ).astype(a.dtype)
+            a = jnp.concatenate([a, extra], axis=0)
+        return a
+
+    object_ids = pad_streams(object_ids.astype(jnp.int32), 0)
+    lengths = pad_streams(lengths.astype(jnp.float32), 0.0)
+    valid = pad_streams(valid.astype(jnp.int32), 0)
+    seeds = pad_streams(seeds.astype(jnp.uint32), jnp.uint32(0))
+    tables = pad_streams(tables.astype(jnp.float32), init_table(m))
+    if t_pad != t:   # inert trials: unit rates (never divided by ~0)
+        win_rates = jnp.concatenate(
+            [win_rates, jnp.ones((t_pad - t,) + win_rates.shape[1:],
+                                 win_rates.dtype)])
+    pad = ((0, 0), (0, 0), (0, m_pad - m))
+    tables_p = jnp.pad(tables, ((0, 0),) + pad)
+    rates_p = jnp.pad(win_rates.astype(jnp.float32), pad)
+    choices, lats, ftab, wloads, metrics, cm_wl, cm_met = \
+        sched_stream_grid_call(
+            object_ids, lengths, valid, tables_p, seeds, rates_p,
+            n_servers=n_servers, window_size=window_size,
+            threshold=threshold, lam=lam, alpha=alpha, window_dt=window_dt,
+            policy=policy, observe=observe, renorm=renorm,
+            trial_tile=tile_t, client_tile=tile_c, nltr_n=nltr_n,
+            probe_choices=probe_choices, interpret=interpret)
+    return (choices[:t, :c], lats[:t, :c], ftab[:t, :c, :, :m],
+            wloads[:t, :c, :, :m], metrics[:t, :c, :N_METRICS],
+            cm_wl[:t, :, :m], cm_met[:t, :N_CMETRICS])

@@ -16,10 +16,11 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.policy_core import (ROW_EST, ROW_EWMA, ROW_LOADS, ROW_PROBS,
-                                    bitonic_argsort_desc, drain_loads,
+                                    bitonic_argsort_desc, client_stream_metrics,
+                                    drain_loads, masked_client_mean,
                                     recursive_average_bounds,
-                                    renormalize_probs, stream_metrics,
-                                    window_decrements)
+                                    renormalize_probs, resolve_client_tile,
+                                    stream_metrics, window_decrements)
 
 
 def _lcg(rng: jax.Array) -> jax.Array:
@@ -260,3 +261,42 @@ def sched_stream_batch_ref(object_ids: jax.Array, lengths: jax.Array,
     metrics = stream_metrics(lats, valid.astype(bool), window_dt,
                              window_size)
     return choices, lats, finals, wloads, metrics
+
+
+def sched_stream_grid_ref(object_ids: jax.Array, lengths: jax.Array,
+                          valid: jax.Array, tables: jax.Array,
+                          seeds: jax.Array, win_rates: jax.Array, *,
+                          n_servers: int, window_size: int,
+                          threshold: float, lam: float, alpha: float = 0.25,
+                          window_dt: float = 0.0, policy: str = "ect",
+                          observe: bool = True, renorm: bool = True,
+                          client_tile=None, nltr_n: int = 2,
+                          probe_choices: int = 2):
+    """2-D (trials × clients) oracle for ``ops.sched_stream_grid``: the
+    per-stream scan replay vmapped over BOTH leading axes (a trial's
+    clients share its ``win_rates`` trace), plus the cross-client merge
+    twins — `policy_core.masked_client_mean` over the per-client window
+    loads and `policy_core.client_stream_metrics` over the per-client
+    fused metric rows, with a client REAL iff its slice holds any valid
+    request.  Same shapes as the grid kernel: object_ids/lengths/valid
+    (T, C, N), tables (T, C, 4, M), seeds (T, C), win_rates (T, W, M);
+    returns (choices, latencies, final_tables, window_loads, metrics
+    (T, C, N_METRICS), cm_wloads (T, W, M), cm_metrics (T, N_CMETRICS)).
+    """
+    one = functools.partial(
+        sched_stream_ref, n_servers=n_servers, window_size=window_size,
+        threshold=threshold, lam=lam, alpha=alpha, window_dt=window_dt,
+        policy=policy, observe=observe, renorm=renorm, nltr_n=nltr_n,
+        probe_choices=probe_choices)
+    per_trial = jax.vmap(one, in_axes=(0, 0, 0, 0, 0, None))
+    choices, lats, finals, wloads = jax.vmap(per_trial)(
+        object_ids, lengths, valid, tables, seeds, win_rates)
+    metrics = stream_metrics(lats, valid.astype(bool), window_dt,
+                             window_size)
+    ct = resolve_client_tile(object_ids.shape[1], client_tile)
+    cvalid = jnp.any(valid.astype(bool), axis=-1)            # (T, C)
+    cm_wl = jax.vmap(lambda w, v: masked_client_mean(w, v, ct))(
+        wloads, cvalid)
+    cm_met = jax.vmap(lambda m, v: client_stream_metrics(m, v, ct))(
+        metrics, cvalid)
+    return choices, lats, finals, wloads, metrics, cm_wl, cm_met

@@ -401,7 +401,7 @@ def test_run_stream_batch_engine_parity():
                           trace)
     for policy, rng_mode in (("ect", "jax"), ("trh", "lcg")):
         pol = PolicyConfig(name=policy, threshold=0.05, rng=rng_mode)
-        batch, metrics = engine.run_stream_batch(
+        batch, metrics, _ = engine.run_stream_batch(
             states, works, keys, policy=pol, log_cfg=cfg, window_size=win,
             traces=traces, window_dt=0.04, observe=True)
 
@@ -458,6 +458,167 @@ def test_stream_batch_sort_policy_all_invalid_final_window(policy):
                                           err_msg=name)
     # dead-window latencies are exactly zero (masked writes)
     np.testing.assert_array_equal(np.asarray(outs[1][:, -win:]), 0.0)
+
+
+# ---------------------------------------------------------------------------
+# 2-D (trials × clients) grid kernel: per_client contention on the kernel
+# path with in-VMEM cross-client merge (DESIGN.md §11)
+# ---------------------------------------------------------------------------
+
+from repro.kernels.sched_select import (sched_stream_grid,  # noqa: E402
+                                        sched_stream_grid_ref)
+
+
+def _grid_case(t, c, m, n_win, win, seed=0, dead_clients=()):
+    """(T, C, N) streams; ``dead_clients`` marks whole client slices
+    invalid in every trial (phantom clients)."""
+    rng = np.random.default_rng(seed)
+    n = n_win * win
+    valid = rng.random((t, c, n)) > 0.2
+    for dc in dead_clients:
+        valid[:, dc, :] = False
+    return (jnp.asarray(rng.integers(0, 8 * m, (t, c, n)), jnp.int32),
+            jnp.asarray(rng.uniform(1.0, 20.0, (t, c, n)), jnp.float32),
+            jnp.asarray(valid),
+            jnp.broadcast_to(statlog.init_state(
+                LogConfig(n_servers=m, lam=50.0)).log, (t, c, 4, m)),
+            jnp.asarray(rng.integers(0, 2**31, (t, c)), jnp.uint32),
+            jnp.asarray(rng.uniform(50.0, 300.0, (t, n_win, m)), jnp.float32))
+
+
+GRID_CASES = [
+    # (T, C, M, W, win, t_tile, c_tile, policy, dead_clients) — odd M,
+    # T % t_tile != 0 and C % c_tile != 0 (inert trial AND phantom client
+    # padding), multi-block client merges, whole dead client slices.
+    (3, 5, 37, 3, 20, 2, 2, "ect", ()),
+    (2, 3, 24, 2, 16, 8, 8, "trh", ()),          # tiles wider than T, C
+    (2, 4, 25, 2, 16, 1, 4, "nltr", ()),
+    (3, 2, 24, 2, 10, 2, 1, "mlml", ()),         # c_tile=1: per-client blocks
+    (2, 5, 17, 2, 12, 2, 2, "two_choice", (1,)),  # dead client mid-row
+    (2, 3, 24, 2, 10, 2, 3, "rr", (0, 2)),        # mostly-dead trials
+]
+
+
+@pytest.mark.parametrize("case", enumerate(GRID_CASES),
+                         ids=lambda c: str(c[1]) if isinstance(c, tuple)
+                         else None)
+def test_stream_grid_matches_ref_and_sequential(case):
+    """2-D grid kernel == vmap² oracle == per-stream sequential kernel:
+    choices, latencies, loads, window loads, per-stream metrics AND the
+    in-VMEM cross-client merges (masked client-mean window loads,
+    merged metric row) BIT-EXACT — the §11 tentpole contract.  Same
+    float-tolerance carve-out for the probability/EWMA table rows as
+    the 1-D grid (DESIGN.md §9).  Stable per-case seed — hash() varies
+    with PYTHONHASHSEED, and a failing bit-exactness case must
+    reproduce across processes."""
+    idx, (t, c, m, n_win, win, tt, ct, policy, dead) = case
+    obj, lens, valid, tables, seeds, rates = _grid_case(
+        t, c, m, n_win, win, seed=2000 + idx, dead_clients=dead)
+    kw = dict(n_servers=m, window_size=win, threshold=2.0, lam=50.0,
+              window_dt=0.02, policy=policy, observe=True, renorm=True)
+    outs = sched_stream_grid(obj, lens, valid, tables, seeds, rates,
+                             trial_tile=tt, client_tile=ct, **kw)
+    refs = sched_stream_grid_ref(obj, lens, valid, tables, seeds, rates,
+                                 client_tile=ct, **kw)
+    names = ("choices", "lats", "tables", "wloads", "metrics",
+             "cm_wloads", "cm_metrics")
+    for name, a, b in zip(names, outs, refs):
+        a, b = np.asarray(a), np.asarray(b)
+        if name == "tables":
+            np.testing.assert_array_equal(a[:, :, policy_core.ROW_LOADS],
+                                          b[:, :, policy_core.ROW_LOADS],
+                                          err_msg=name)
+            np.testing.assert_allclose(a, b, atol=1e-6, err_msg=name)
+        else:
+            np.testing.assert_array_equal(a, b, err_msg=name)
+    # per-stream == the sequential single-stream kernel (all of a
+    # trial's clients share its rate trace)
+    for i in range(t):
+        for j in range(c):
+            c1, l1, _, w1 = sched_stream(obj[i, j], lens[i, j], valid[i, j],
+                                         tables[i, j], seeds[i, j],
+                                         rates[i], **kw)
+            np.testing.assert_array_equal(np.asarray(outs[0][i, j]),
+                                          np.asarray(c1))
+            np.testing.assert_array_equal(np.asarray(outs[1][i, j]),
+                                          np.asarray(l1))
+            np.testing.assert_array_equal(np.asarray(outs[3][i, j]),
+                                          np.asarray(w1))
+
+
+def test_stream_grid_client_merge_masks_phantoms():
+    """The in-VMEM cross-client merge weights REAL clients only: with
+    dead (all-invalid) client slices, cm_metrics' client count excludes
+    them and cm_wloads equals the policy_core twins computed from the
+    surviving per-stream outputs — including across client-tile block
+    boundaries (C=5 over c_tile=2 -> 3 blocks with phantom padding)."""
+    t, c, m, n_win, win = 2, 5, 24, 2, 12
+    obj, lens, valid, tables, seeds, rates = _grid_case(
+        t, c, m, n_win, win, seed=77, dead_clients=(0, 3))
+    kw = dict(n_servers=m, window_size=win, threshold=2.0, lam=50.0,
+              window_dt=0.02, policy="ect", observe=True, renorm=True)
+    (_, lats, _, wloads, metrics, cm_wl, cm_met) = sched_stream_grid(
+        obj, lens, valid, tables, seeds, rates, trial_tile=2,
+        client_tile=2, **kw)
+    cvalid = jnp.any(valid, axis=-1)
+    np.testing.assert_array_equal(
+        np.asarray(cm_met[:, policy_core.MET_N_CLIENTS]),
+        np.asarray(jnp.sum(cvalid.astype(jnp.float32), axis=-1)))
+    assert (np.asarray(cm_met[:, policy_core.MET_N_CLIENTS]) == 3.0).all()
+    ref_wl = jax.vmap(
+        lambda w, v: policy_core.masked_client_mean(w, v, 2))(wloads, cvalid)
+    np.testing.assert_array_equal(np.asarray(cm_wl), np.asarray(ref_wl))
+    ref_met = jax.vmap(
+        lambda mm, v: policy_core.client_stream_metrics(mm, v, 2))(
+        metrics, cvalid)
+    np.testing.assert_array_equal(np.asarray(cm_met), np.asarray(ref_met))
+    # dead clients' latencies are exactly zero (masked writes)
+    np.testing.assert_array_equal(np.asarray(lats[:, 0]), 0.0)
+
+
+def test_run_stream_batch_2d_engine_parity():
+    """engine.run_stream_batch with a (T, C) leading batch == the vmap²
+    jax engine per stream, and its ClientMerge equals the policy_core
+    twins — the engine-layer contract the simulator's per_client kernel
+    dispatch rides on (trace shared per trial)."""
+    t, c, m, r, win = 2, 3, 25, 48, 16
+    trace = _transient_trace(m, slow_ids=(3,))
+    cfg = LogConfig(n_servers=m, lam=50.0)
+    rng = np.random.default_rng(13)
+    works = Workload(
+        jnp.asarray(rng.integers(0, 8 * m, (t, c, r)), jnp.int32),
+        jnp.asarray(rng.uniform(1.0, 20.0, (t, c, r)), jnp.float32),
+        jnp.asarray(rng.random((t, c, r)) > 0.1))
+    state = statlog.init_state(cfg, rates=trace.rates[0])
+    states = jax.tree.map(
+        lambda a: jnp.broadcast_to(a, (t, c) + a.shape), state)
+    traces = jax.tree.map(lambda a: jnp.broadcast_to(a, (t,) + a.shape),
+                          trace)
+    keys = jax.random.split(jax.random.key(5), t * c).reshape(t, c)
+    pol = PolicyConfig(name="trh", threshold=0.05, rng="lcg")
+    batch, metrics, merged = engine.run_stream_batch(
+        states, works, keys, policy=pol, log_cfg=cfg, window_size=win,
+        traces=traces, window_dt=0.04, observe=True, client_tile=2)
+    assert metrics.shape == (t, c, policy_core.N_METRICS)
+
+    def one(st, w, k):
+        return engine.run_stream(st, w, k, policy=pol, log_cfg=cfg,
+                                 window_size=win, trace=trace,
+                                 window_dt=0.04, observe=True,
+                                 backend="jax")
+    eng = jax.vmap(jax.vmap(one))(states, works, keys)
+    for f in ("chosen", "latencies", "redirected", "window_loads"):
+        np.testing.assert_array_equal(np.asarray(getattr(batch, f)),
+                                      np.asarray(getattr(eng, f)),
+                                      err_msg=f)
+    np.testing.assert_array_equal(np.asarray(batch.state.n_assigned),
+                                  np.asarray(eng.state.n_assigned))
+    cvalid = jnp.any(works.valid, axis=-1)
+    np.testing.assert_array_equal(
+        np.asarray(merged.window_loads_mean),
+        np.asarray(jax.vmap(
+            lambda w, v: policy_core.masked_client_mean(w, v, 2))(
+            batch.window_loads, cvalid)))
 
 
 def test_mlml_kernel_pairs_longest_with_lightest():

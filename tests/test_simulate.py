@@ -233,7 +233,7 @@ def test_kernel_batch_backend_matches_sequential_and_engine(scenario):
     batch = simulate.run_trials(KEY, cfg_k, pol, log)
     keys = jax.random.split(KEY, cfg_k.n_trials)
     seq = jax.jit(lambda ks: jax.lax.map(
-        lambda k: simulate._run_shared_log(k, cfg_k, pol, log), ks))(keys)
+        lambda k: simulate.run_one_trial(k, cfg_k, pol, log), ks))(keys)
     eng = simulate.run_trials(KEY, cfg_j, pol, log)
     for other, tag in ((seq, "lax.map kernel"), (eng, "vmapped engine")):
         for f in batch._fields:
@@ -279,7 +279,7 @@ def test_kernel_batch_sort_policies_all_scenarios(scenario, policy, rng):
     batch = simulate.run_trials(KEY, cfg_k, pol, log)
     keys = jax.random.split(KEY, cfg_k.n_trials)
     seq = jax.jit(lambda ks: jax.lax.map(
-        lambda k: simulate._run_shared_log(k, cfg_k, pol, log), ks))(keys)
+        lambda k: simulate.run_one_trial(k, cfg_k, pol, log), ks))(keys)
     eng = simulate.run_trials(KEY, cfg_j, pol, log)
     for other, tag in ((seq, "lax.map kernel"), (eng, "vmapped engine")):
         for f in batch._fields:
@@ -312,6 +312,98 @@ def test_kernel_batch_backend_runs_all_six_policies_bit_exact():
             np.testing.assert_array_equal(np.asarray(getattr(batch, f)),
                                           np.asarray(getattr(eng, f)),
                                           err_msg=f"{name}/{f}")
+
+
+# ---------------------------------------------------------------------------
+# 2-D (trials × clients) grid backend (DESIGN.md §11):
+# run_trials(backend="kernel", client_model="per_client")
+# ---------------------------------------------------------------------------
+
+# every §3.4 policy + both baselines (randomized ones replay the kernel
+# LCG so the jax path is its bit-exact twin)
+PC_POLICIES = (("rr", "jax", 5.0), ("mlml", "jax", 5.0),
+               ("trh", "lcg", 5.0), ("nltr", "lcg", 5.0),
+               ("two_choice", "lcg", 5.0), ("ect", "jax", 0.05))
+
+
+@pytest.mark.filterwarnings("ignore:per_client window clamp")
+@pytest.mark.parametrize("scenario", simulate.SCENARIOS)
+def test_per_client_kernel_backend_all_policies(scenario):
+    """Acceptance (§11 tentpole): run_trials(backend='kernel',
+    client_model='per_client') dispatches the whole sweep as ONE 2-D
+    grid pallas_call and every TrialResult field — choices, latencies,
+    loads, the masked cross-client window_loads mean, probe sums and
+    phase_time — is bit-exact vs the jax per_client path, for all six
+    §3.4 policies across all five scenarios (odd M, uneven 60/5 split
+    with window clamp 16 -> 12)."""
+    cfg_k = SimConfig(n_servers=17, n_clients=5, n_requests=60, n_trials=2,
+                      window_size=16, backend="kernel",
+                      client_model="per_client",
+                      scenario=ScenarioConfig(name=scenario))
+    cfg_j = dataclasses.replace(cfg_k, backend="jax")
+    log = simulate.default_log_cfg(cfg_k)
+    for name, rng, thr in PC_POLICIES:
+        pol = PolicyConfig(name=name, threshold=thr, rng=rng)
+        a = simulate.run_trials(KEY, cfg_k, pol, log)
+        b = simulate.run_trials(KEY, cfg_j, pol, log)
+        for f in a._fields:
+            np.testing.assert_array_equal(
+                np.asarray(getattr(a, f)), np.asarray(getattr(b, f)),
+                err_msg=f"{scenario}/{name}/{f}")
+
+
+@pytest.mark.filterwarnings("ignore:per_client window clamp")
+def test_per_client_kernel_phantom_clients_uneven_tiles():
+    """2-D grid edge cases: n_clients > n_requests (whole phantom
+    clients), n_clients not a multiple of client_tile, odd M — the
+    masked cross-client aggregates match the jax path bitwise, and
+    probe accounting stays 2 per scheduled request for two_choice."""
+    cfg_k = SimConfig(n_servers=11, n_clients=7, n_requests=5, n_trials=2,
+                      window_size=4, backend="kernel",
+                      client_model="per_client", client_tile=2,
+                      scenario=ScenarioConfig(name="permanent_slow"))
+    cfg_j = dataclasses.replace(cfg_k, backend="jax")
+    log = simulate.default_log_cfg(cfg_k)
+    for name, rng in (("two_choice", "lcg"), ("ect", "jax")):
+        pol = PolicyConfig(name=name, threshold=0.05, rng=rng)
+        a = simulate.run_trials(KEY, cfg_k, pol, log)
+        b = simulate.run_trials(KEY, cfg_j, pol, log)
+        for f in a._fields:
+            np.testing.assert_array_equal(
+                np.asarray(getattr(a, f)), np.asarray(getattr(b, f)),
+                err_msg=f"{name}/{f}")
+        if name == "two_choice":
+            np.testing.assert_array_equal(np.asarray(a.probe_msgs),
+                                          2 * cfg_k.n_requests)
+        # per-client slices are single requests: window clamp recorded
+        np.testing.assert_array_equal(np.asarray(a.window_size_eff), 1)
+
+
+def test_per_client_window_clamp_warns_and_records():
+    """Satellite: the silent `win = min(window_size, per)` clamp now
+    warns at dispatch (naming both sizes) and records the effective
+    window in TrialResult.window_size_eff; unclamped runs stay silent
+    and record the configured size."""
+    import warnings as _warnings
+    cfg = simulate.SimConfig(n_servers=6, n_clients=4, n_requests=12,
+                             n_trials=2, window_size=9,
+                             client_model="per_client")
+    log = simulate.default_log_cfg(cfg)
+    with pytest.warns(UserWarning, match="window_size=9.*window_size_eff=3"):
+        res = simulate.run_trials(KEY, cfg, PolicyConfig(name="rr"), log)
+    np.testing.assert_array_equal(np.asarray(res.window_size_eff), 3)
+    # no clamp -> no warning; shared_log never clamps
+    for cfg2 in (dataclasses.replace(cfg, window_size=3),
+                 dataclasses.replace(cfg, client_model="shared_log",
+                                     window_size=4)):
+        log2 = simulate.default_log_cfg(cfg2)
+        with _warnings.catch_warnings():
+            _warnings.filterwarnings("error",
+                                     message=".*window clamp.*")
+            res2 = simulate.run_trials(KEY, cfg2, PolicyConfig(name="rr"),
+                                       log2)
+        np.testing.assert_array_equal(np.asarray(res2.window_size_eff),
+                                      cfg2.window_size)
 
 
 def test_per_client_uneven_split_masks_padding():
@@ -380,7 +472,19 @@ def test_simconfig_rejects_bad_fields_with_values():
         SimConfig(client_model="p2p")
     with pytest.raises(ValueError, match="tpu"):
         SimConfig(backend="tpu")
-    with pytest.raises(ValueError, match="per_client"):
-        SimConfig(backend="kernel", client_model="per_client")
     with pytest.raises(ValueError, match="trial_tile=0"):
         SimConfig(backend="kernel", trial_tile=0)
+    # previously failed deep inside a reshape / ValueError'd at dispatch:
+    # now validated up front, naming the offending values
+    with pytest.raises(ValueError, match="n_clients=0"):
+        SimConfig(n_clients=0, client_model="per_client")
+    with pytest.raises(ValueError, match="n_clients=-3"):
+        SimConfig(n_clients=-3)
+    with pytest.raises(ValueError, match="client_tile=0"):
+        SimConfig(client_model="per_client", client_tile=0)
+    with pytest.raises(ValueError, match="client_tile=-2"):
+        SimConfig(client_tile=-2)
+    # kernel backend + per_client is a SUPPORTED combination now (the
+    # 2-D trials x clients grid, DESIGN.md §11)
+    cfg = SimConfig(backend="kernel", client_model="per_client")
+    assert cfg.n_clients == 200
