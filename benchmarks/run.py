@@ -7,10 +7,13 @@ trials) and adds the full-scale temporal scenario sweep; the default is a
 faster configuration with identical structure.  ``--trajectory`` skips
 the benchmarks and renders the BENCH_sched.json history instead: the
 phase-time/p99 delta table, the scheduling-throughput table
-(``engine_req_s`` / ``kernel_req_s`` / ``kernel_batch_req_s``, flagging
-runs where a kernel path fell behind the engine) and a two-panel
-figure.  The roofline section formats whatever ``dryrun_results.json``
-the dry-run has produced so far.
+(``engine_req_s`` / ``kernel_req_s`` / ``kernel_batch_req_s`` /
+``sharded_req_s_{d}d``, flagging runs where a kernel path fell behind
+its engine twin) and a two-panel figure.  BENCH_sched.json is the
+IN-REPO file at the repo root (``sched_perf.BENCH_PATH``), one point
+per git sha — re-running on the same commit replaces the point.  The
+roofline section formats whatever ``dryrun_results.json`` the dry-run
+has produced so far.
 """
 
 from __future__ import annotations
@@ -22,7 +25,7 @@ import time
 def main() -> None:
     if "--trajectory" in sys.argv:
         from benchmarks import sched_perf
-        sched_perf.trajectory("BENCH_sched.json")
+        sched_perf.trajectory(sched_perf.BENCH_PATH)
         return
     full = "--full" in sys.argv
     t0 = time.time()
@@ -35,8 +38,10 @@ def main() -> None:
 
     from benchmarks import sched_perf
     sched_perf.run_all()
-    # one perf-trajectory point per run (phase time + transient p99)
-    sched_perf.emit_bench_point("BENCH_sched.json")
+    # one perf-trajectory point per run, appended to the IN-REPO
+    # BENCH_sched.json (repo-root anchored, deduped by git sha — a
+    # re-run on the same commit replaces that commit's point)
+    sched_perf.emit_bench_point(sched_perf.BENCH_PATH)
 
     from benchmarks import kernels_bench
     kernels_bench.run_all()

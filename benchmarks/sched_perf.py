@@ -18,8 +18,11 @@ straggler trace.  ``emit_bench_point`` appends one JSON point per run to
 from __future__ import annotations
 
 import functools
+import hashlib
 import json
 import os
+import subprocess
+import sys
 import time
 from typing import Dict, Optional
 
@@ -28,6 +31,23 @@ import numpy as np
 from repro.core.policies import PolicyConfig
 from repro.io import IOClient, IOClientConfig, SimulatedCluster
 from repro.io.striping import MB
+
+# BENCH_sched.json lives at the REPO ROOT regardless of cwd — the
+# trajectory is one in-repo history, not a scatter of per-cwd files.
+_REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+BENCH_PATH = os.path.join(_REPO_ROOT, "BENCH_sched.json")
+
+
+def _git_sha() -> Optional[str]:
+    """HEAD sha for bench-point dedup (one point per commit); None when
+    git is unavailable (e.g. a source tarball)."""
+    try:
+        out = subprocess.run(["git", "rev-parse", "HEAD"], cwd=_REPO_ROOT,
+                             capture_output=True, text=True, timeout=10)
+    except OSError:
+        return None
+    sha = out.stdout.strip()
+    return sha if out.returncode == 0 and sha else None
 
 
 # Memoized: run_all prints a full iteration table and emit_bench_point
@@ -319,6 +339,124 @@ def kernel_per_client_throughput(n_servers: int = 100,
     return out
 
 
+def _sharded_env(n_devices: int) -> Dict[str, str]:
+    """Env for a sharded-worker subprocess: force ``n_devices`` host
+    devices (replacing any count already in XLA_FLAGS) and make sure
+    ``src`` is importable."""
+    env = dict(os.environ)
+    flags = [t for t in env.get("XLA_FLAGS", "").split()
+             if "xla_force_host_platform_device_count" not in t]
+    flags.append(f"--xla_force_host_platform_device_count={n_devices}")
+    env["XLA_FLAGS"] = " ".join(flags)
+    src = os.path.join(_REPO_ROOT, "src")
+    pp = env.get("PYTHONPATH", "")
+    if src not in pp.split(os.pathsep):
+        env["PYTHONPATH"] = src + (os.pathsep + pp if pp else "")
+    return env
+
+
+def _sharded_worker(spec: dict) -> None:
+    """Body of one ``--sharded-worker`` subprocess: run the 100-OSS
+    transient Monte-Carlo sweep at ``mesh_shape=(devices,)`` (plain
+    single-device dispatch when ``devices == 1``) on BOTH backends and
+    print one ``SHARDED_RESULT`` json line with req/s plus a sha1 digest
+    of the per-trial decisions/latencies/phase times — the parent
+    compares digests across device counts for the DESIGN.md §12
+    bit-exactness claim."""
+    import jax
+    from repro.core import simulate
+    from repro.core.simulate import ScenarioConfig, SimConfig
+
+    d = int(spec["devices"])
+    assert jax.device_count() == d, (jax.device_count(), d)
+    key = jax.random.key(0)
+    pol = PolicyConfig(name="ect", threshold=0.05)
+    out: Dict[str, object] = {"devices": d}
+    for backend in ("kernel", "jax"):
+        cfg = SimConfig(n_servers=spec["n_servers"],
+                        n_requests=spec["n_requests"],
+                        n_trials=spec["n_trials"],
+                        window_size=spec["window_size"], backend=backend,
+                        mesh_shape=None if d == 1 else (d,),
+                        scenario=ScenarioConfig(name="transient"))
+        log_cfg = simulate.default_log_cfg(cfg)
+        dt, warm = _median_time(
+            lambda: simulate.run_trials(key, cfg, pol, log_cfg),
+            spec["reps"])
+        h = hashlib.sha1()
+        for f in ("chosen", "latencies", "phase_time"):
+            h.update(np.asarray(getattr(warm, f)).tobytes())
+        out[f"{backend}_s"] = dt
+        out[f"{backend}_req_s"] = spec["n_trials"] * spec["n_requests"] / dt
+        out[f"{backend}_digest"] = h.hexdigest()
+    print("SHARDED_RESULT " + json.dumps(out), flush=True)
+
+
+@functools.lru_cache(maxsize=None)   # run_all + emit_bench_point share it
+def sharded_sweep_throughput(n_servers: int = 100, n_requests: int = 2000,
+                             window_size: int = 100, n_trials: int = 100,
+                             reps: int = 1,
+                             devices: tuple = (1, 2, 4, 8)
+                             ) -> Dict[str, object]:
+    """Sharded sweep throughput (DESIGN.md §12): the full Monte-Carlo
+    sweep through ``parallel/sweep.py`` at each host device count in
+    ``devices``, both backends, vs the single-device dispatch (the
+    ``devices == 1`` row).
+
+    Each device count runs in its own SUBPROCESS under
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` — XLA fixes
+    the host device count at first jax init, so one process cannot
+    measure two counts.  The workers' sha1 digests of (chosen,
+    latencies, phase_time) must agree across every device count AND
+    across backends — the sharded dispatch is a pure re-layout.
+
+    Scaling honesty: forced host "devices" are threads on the same CPU,
+    so aggregate req/s tracks ``min(devices, physical cores)`` — on a
+    1-core CI box the sharded rows measure dispatch overhead, not
+    speedup; the series exists so multi-core/multi-chip runs of the same
+    benchmark expose real scaling against the same baseline."""
+    spec = {"n_servers": n_servers, "n_requests": n_requests,
+            "window_size": window_size, "n_trials": n_trials, "reps": reps}
+    out: Dict[str, object] = dict(spec)
+    out["devices"] = list(devices)
+    rows = {}
+    for d in devices:
+        r = subprocess.run(
+            [sys.executable, "-m", "benchmarks.sched_perf",
+             "--sharded-worker", json.dumps({**spec, "devices": d})],
+            cwd=_REPO_ROOT, env=_sharded_env(d),
+            capture_output=True, text=True)
+        line = next((ln for ln in r.stdout.splitlines()
+                     if ln.startswith("SHARDED_RESULT ")), None)
+        if r.returncode != 0 or line is None:
+            raise RuntimeError(
+                f"sharded worker (devices={d}) failed:\n"
+                f"{r.stdout[-2000:]}\n{r.stderr[-2000:]}")
+        rows[d] = json.loads(line[len("SHARDED_RESULT "):])
+    base = rows[devices[0]]
+    out["sharded_bit_exact"] = all(
+        rows[d][f"{b}_digest"] == base[f"{b}_digest"]
+        for d in devices for b in ("kernel", "jax"))
+    out["sharded_cross_backend_exact"] = all(
+        rows[d]["kernel_digest"] == rows[d]["jax_digest"] for d in devices)
+    for d in devices:
+        out[f"sharded_req_s_{d}d"] = rows[d]["kernel_req_s"]
+        out[f"sharded_engine_req_s_{d}d"] = rows[d]["jax_req_s"]
+    print(f"\n== sharded sweep throughput ({n_servers} OSS x "
+          f"{n_requests} reqs x {n_trials} trials, mesh=(d,), "
+          f"median of {reps}) ==")
+    print(f"{'devices':>8s} {'kernel req/s':>14s} {'engine req/s':>14s}")
+    for d in devices:
+        print(f"{d:>8d} {out[f'sharded_req_s_{d}d']:14.0f} "
+              f"{out[f'sharded_engine_req_s_{d}d']:14.0f}")
+    print(f"  bit-exact across device counts: {out['sharded_bit_exact']}"
+          + ("" if out["sharded_bit_exact"] else "  <-- DIVERGED"))
+    print(f"  bit-exact across backends:      "
+          f"{out['sharded_cross_backend_exact']}"
+          + ("" if out["sharded_cross_backend_exact"] else "  <-- DIVERGED"))
+    return out
+
+
 def scenario_ranking(n_trials: int = 25) -> Dict[str, Dict[str, dict]]:
     """Policy ranking per scenario: p50/p95/p99 latency + makespan +
     straggler-hit fraction (jitted run_trials sweep)."""
@@ -359,18 +497,23 @@ def transient_latency_cdf(n_trials: int = 25) -> None:
                       f"(x: 0..{xs[-1]:.1f}s, p99={analysis.latency_stats(res.latencies)['p99']:.2f}s)"))
 
 
-def emit_bench_point(path: str = "BENCH_sched.json",
+def emit_bench_point(path: str = BENCH_PATH,
                      n_trials: int = 25,
                      kernel_scale: int = 100,
                      batch_trials: int = 100) -> dict:
     """Append one perf-trajectory point: the §Perf C phase time per policy,
     the transient-scenario p99 for the log-assisted policies, the
     kernel-backend numbers (wall time of scheduling the 100-OSS transient
-    stream through the Pallas backend + req/s for both backends), and the
+    stream through the Pallas backend + req/s for both backends), the
     trial-grid sweep throughput (`kernel_batch_req_s`: the full
-    100 OSS x 2000 req x ``batch_trials`` sweep as ONE pallas_call).
+    100 OSS x 2000 req x ``batch_trials`` sweep as ONE pallas_call), and
+    the sharded-sweep series (`sharded_req_s_{d}d`, DESIGN.md §12) at
+    the device counts in ``SCHED_SHARDED_DEVICES`` (comma list, default
+    "1,2,4,8"; set empty to skip the subprocess sweeps).
     All throughput cells are medians of ``reps`` repeats (recorded in
-    the point).  Reuses this process's cached run_all results."""
+    the point).  Points are keyed by ``git_sha``: re-running on the same
+    commit REPLACES that commit's point instead of appending a
+    duplicate.  Reuses this process's cached run_all results."""
     from repro.core import analysis
     point: Dict[str, object] = {"ts": time.time(), "metric_unit": "seconds"}
     # call signatures mirror run_all's rows so the lru_cache hits
@@ -415,6 +558,24 @@ def emit_bench_point(path: str = "BENCH_sched.json",
         if n_c == 16:
             point["kernel_per_client_bit_exact"] = \
                 pc.get("per_client_bit_exact")
+    # sharded sweep series (DESIGN.md §12): the same full-scale sweep
+    # through parallel/sweep.py at forced host device counts, one
+    # subprocess each; env-gated because each count pays its own
+    # compile + warmup
+    dev_env = os.environ.get("SCHED_SHARDED_DEVICES", "1,2,4,8")
+    devs = tuple(int(t) for t in dev_env.split(",") if t.strip())
+    if devs:
+        sh = sharded_sweep_throughput(n_servers=kernel_scale,
+                                      n_trials=batch_trials, devices=devs)
+        for d in devs:
+            point[f"sharded_req_s_{d}d"] = sh[f"sharded_req_s_{d}d"]
+            point[f"sharded_engine_req_s_{d}d"] = \
+                sh[f"sharded_engine_req_s_{d}d"]
+        point["sharded_bit_exact"] = bool(
+            sh["sharded_bit_exact"] and sh["sharded_cross_backend_exact"])
+    sha = _git_sha()
+    if sha:
+        point["git_sha"] = sha
     history = []
     if os.path.exists(path):
         try:
@@ -424,6 +585,12 @@ def emit_bench_point(path: str = "BENCH_sched.json",
                 history = [history]
         except (json.JSONDecodeError, OSError):
             history = []
+    # one point per commit: a re-run on the same HEAD replaces its
+    # earlier point (uncommitted tweaks would otherwise pile up
+    # same-sha near-duplicates and skew the delta table)
+    if sha:
+        history = [p for p in history
+                   if not (isinstance(p, dict) and p.get("git_sha") == sha)]
     history.append(point)
     with open(path, "w") as f:
         json.dump(history, f, indent=1)
@@ -433,8 +600,9 @@ def emit_bench_point(path: str = "BENCH_sched.json",
     return point
 
 
-def trajectory(path: str = "BENCH_sched.json",
-               fig_path: str = "BENCH_sched_trajectory.png") -> list:
+def trajectory(path: str = BENCH_PATH,
+               fig_path: str = os.path.join(
+                   _REPO_ROOT, "BENCH_sched_trajectory.png")) -> list:
     """Perf trajectory across benchmark runs: stdout table of phase-time
     deltas plus a plotted figure (matplotlib when available, ascii-plot
     file otherwise).  Each `benchmarks/run.py` invocation appends one
@@ -472,7 +640,8 @@ def trajectory(path: str = "BENCH_sched.json",
     # a tolerant .get.
     thr_cols = ("engine_req_s", "kernel_req_s", "kernel_batch_req_s",
                 "kernel_batch_req_s_mlml", "kernel_batch_req_s_nltr",
-                "kernel_batch_req_s_per_client", "engine_req_s_per_client")
+                "kernel_batch_req_s_per_client", "engine_req_s_per_client",
+                "sharded_req_s_8d", "sharded_engine_req_s_8d")
     print(f"\n== perf trajectory ({len(history)} runs, {path}) ==")
     print(f"{'run':>4s} {'when':>16s} " +
           " ".join(f"{c.replace('phase_s_', 'ph_'):>14s}" for c in cols))
@@ -513,6 +682,14 @@ def trajectory(path: str = "BENCH_sched.json",
         pce = pt.get("engine_req_s_per_client")
         if pck is not None and pce is not None and pck < pce:
             behind.append("kernel_batch_per_client")
+        # sharded series compare ONLY against the same-device-count
+        # engine twin — a 2-device sharded row vs the 1-device engine
+        # number would conflate scaling with backend speed
+        for d_ct in (2, 4, 8):
+            sk = pt.get(f"sharded_req_s_{d_ct}d")
+            se = pt.get(f"sharded_engine_req_s_{d_ct}d")
+            if sk is not None and se is not None and sk < se:
+                behind.append(f"sharded_{d_ct}d")
         flag = ("  <-- " + ", ".join(behind) + " BEHIND engine"
                 if behind else "")
         print(f"{i:>4d} " + " ".join(cells) + flag)
@@ -595,6 +772,36 @@ def run_smoke() -> None:
                                       n_clients=5, client_tile=2, reps=1,
                                       check_bit_exact=True)
     assert pc["per_client_bit_exact"], "per_client 2-D grid divergence"
+    # sharded sweep (DESIGN.md §12) when the process has devices to
+    # shard over (CI's multidevice job forces 8): the whole mesh=(dc,)
+    # sweep must be bit-exact vs this process's single-device dispatch,
+    # both backends
+    import jax
+    dc = jax.device_count()
+    if dc >= 2:
+        from repro.core import simulate
+        from repro.core.simulate import ScenarioConfig, SimConfig
+        key = jax.random.key(0)
+        pol = PolicyConfig(name="ect", threshold=0.05)
+        for backend in ("kernel", "jax"):
+            res = {}
+            for ms in (None, (dc,)):
+                cfg = SimConfig(n_servers=24, n_requests=480,
+                                window_size=60, n_trials=10,
+                                backend=backend, mesh_shape=ms,
+                                scenario=ScenarioConfig(name="transient"))
+                res[ms] = simulate.run_trials(
+                    key, cfg, pol, simulate.default_log_cfg(cfg))
+            same = all(
+                (np.asarray(getattr(res[None], f))
+                 == np.asarray(getattr(res[(dc,)], f))).all()
+                for f in ("chosen", "latencies", "phase_time"))
+            assert same, f"sharded {backend} sweep != single-device"
+            print(f"  sharded mesh=({dc},) {backend} sweep bit-exact vs "
+                  f"single-device: True")
+    else:
+        print("  sharded smoke skipped (1 device; set XLA_FLAGS="
+              "--xla_force_host_platform_device_count=N)")
     _scenario_sweep(("transient",), ("rr", "ect"), 4)
     print(f"[smoke] ok in {time.time() - t0:.1f}s")
 
@@ -655,8 +862,10 @@ def run_all() -> None:
 
 
 if __name__ == "__main__":
-    import sys
-    if "--smoke" in sys.argv:
+    if "--sharded-worker" in sys.argv:
+        _sharded_worker(
+            json.loads(sys.argv[sys.argv.index("--sharded-worker") + 1]))
+    elif "--smoke" in sys.argv:
         run_smoke()
     elif "--trajectory" in sys.argv:
         trajectory()

@@ -12,6 +12,9 @@ rest of the code reads as if on the newest API:
   (newer JAX) falling back to the positional form.
 * ``shard_map``      — ``jax.shard_map`` falling back to
   ``jax.experimental.shard_map.shard_map``.
+* ``shard_map_unchecked`` — ``shard_map`` with the static replication
+  check disabled on every version (``check_rep=False`` on older
+  releases, ``check_vma=False`` after the rename).
 """
 
 from __future__ import annotations
@@ -43,6 +46,26 @@ def simple_keystr(kp, separator: str = "/") -> str:
         return jtu.keystr(kp, simple=True, separator=separator)
     except TypeError:
         return separator.join(_simple_key(k) for k in kp)
+
+
+def shard_map_unchecked(f, mesh, in_specs, out_specs):
+    """``shard_map`` with the static replication check disabled.
+
+    The sharded sweep (parallel/sweep.py) replicates its merged outputs
+    across the client mesh axis via ``all_gather`` + the pinned
+    ``policy_core.tree_sum`` fold; the checker cannot infer replication
+    through tree_sum's pad/slice ops and rejects the ``out_specs``, so
+    the check is turned off (the replication is real: every device
+    gathers identical operands and folds them with the same
+    deterministic tree).  Newer JAX renamed ``check_rep`` to
+    ``check_vma`` — try both so either version works.
+    """
+    try:
+        return shard_map(f, mesh=mesh, in_specs=in_specs,
+                         out_specs=out_specs, check_rep=False)
+    except TypeError:  # pragma: no cover - version-dependent
+        return shard_map(f, mesh=mesh, in_specs=in_specs,
+                         out_specs=out_specs, check_vma=False)
 
 
 def make_mesh(shape, axis_names):

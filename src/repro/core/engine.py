@@ -449,8 +449,10 @@ def run_stream_batch(states: SchedState, works: Workload, keys: jax.Array, *,
                      window_dt: float = 0.0,
                      observe: Optional[bool] = None,
                      trial_tile: Optional[int] = None,
-                     client_tile: Optional[int] = None
-                     ) -> Tuple[ScheduleResult, jax.Array,
+                     client_tile: Optional[int] = None,
+                     merge_mean: bool = True,
+                     backend: str = "kernel"
+                     ) -> Tuple[ScheduleResult, Optional[jax.Array],
                                 Optional[ClientMerge]]:
     """Batched dispatch: a whole batch of `run_stream` traces as ONE
     pallas_call, for an arbitrary leading batch shape.
@@ -478,16 +480,47 @@ def run_stream_batch(states: SchedState, works: Workload, keys: jax.Array, *,
     round-trip of the latency blocks; ``client_merge`` is the
     :class:`ClientMerge` cross-client row for the (T, C) form and
     ``None`` for the (T,) form.
+
+    ``backend="jax"`` runs the same batch on the vmapped lax.scan
+    engine instead (the dispatch `simulate._run_batched` used inline
+    before the sharded sweep unified both backends behind this one
+    entry point): bit-exact per stream vs. the kernel path, returning
+    ``(result, None, None)`` — no fused metrics/merge rows; callers
+    compute the `policy_core` merge twins host-side.  ``merge_mean``
+    (kernel (T, C) form only): ``False`` ships `ClientMerge.
+    window_loads_mean` as the raw masked client SUM instead of the mean
+    — the pre-reduced per-device block that the sharded sweep
+    (`parallel/sweep.py`, DESIGN.md §12) folds across devices with
+    `policy_core.psum_tree` before dividing once, globally.
     """
     from repro.kernels.sched_select import ops as kops
+
+    if backend not in ("jax", "kernel"):
+        raise ValueError(f"backend={backend!r} must be 'jax' or 'kernel'")
+    P.validate_policy(policy, states.n_servers)
+    if observe is None:
+        observe = traces is not None
+
+    if backend == "jax":
+        run1 = functools.partial(
+            run_stream, policy=policy, log_cfg=log_cfg,
+            window_size=window_size, group_steps=group_steps,
+            window_dt=window_dt, observe=observe, backend="jax")
+        fn = lambda st, w, k, tr: run1(st, w, k, trace=tr)  # noqa: E731
+        tr_ax = None if traces is None else 0
+        if works.object_ids.ndim == 3:   # (T, C): traces stay per-trial
+            inner = jax.vmap(fn, in_axes=(0, 0, 0, None))
+            res = jax.vmap(inner, in_axes=(0, 0, 0, tr_ax))(
+                states, works, keys, traces)
+        else:
+            res = jax.vmap(fn, in_axes=(0, 0, 0, tr_ax))(
+                states, works, keys, traces)
+        return res, None, None
 
     if policy.name not in KERNEL_POLICIES:
         raise ValueError(
             f"run_stream_batch supports {KERNEL_POLICIES}, got "
             f"{policy.name!r}")
-    P.validate_policy(policy, states.n_servers)
-    if observe is None:
-        observe = traces is not None
     if trial_tile is None:
         trial_tile = kops.DEFAULT_TRIAL_TILE
     batch_shape = works.object_ids.shape[:-1]     # (T,) or (T, C)
@@ -534,7 +567,8 @@ def run_stream_batch(states: SchedState, works: Workload, keys: jax.Array, *,
         choices, lats, tables, wloads, metrics, cm_wl, cm_met = \
             kops.sched_stream_grid(
                 g_obj, g_lens, g_val, states.log, seeds, win_rates,
-                trial_tile=trial_tile, client_tile=client_tile, **kw)
+                trial_tile=trial_tile, client_tile=client_tile,
+                merge_mean=merge_mean, **kw)
         merged = ClientMerge(window_loads_mean=cm_wl, metrics=cm_met)
     else:
         choices, lats, tables, wloads, metrics = kops.sched_stream_batch(

@@ -625,3 +625,78 @@ def client_stream_metrics(metrics, client_valid, client_tile: int, xp=jnp):
     return xp.stack([mx[MET_MAKESPAN], xp.zeros((), f32),
                      sm[MET_LAT_SUM], mx[MET_LAT_MAX], sm[MET_N_VALID],
                      n_real])
+
+
+# ---------------------------------------------------------------------------
+# Sharded cross-client merge — the device axis as one more association
+# parameter (DESIGN.md §12)
+# ---------------------------------------------------------------------------
+
+
+def resolve_shard_width(n_clients: int, n_shards: int) -> int:
+    """Clients per contiguous device shard of the client axis — the
+    device-axis twin of :func:`resolve_client_tile`, shared by the
+    sharded sweep dispatch (``parallel/sweep.py``) and the host oracle
+    :func:`sharded_client_sum` so both layers pad and split the client
+    axis identically (trailing shards fill up with phantom clients)."""
+    if n_shards < 1:
+        raise ValueError(f"n_shards={n_shards!r} must be >= 1")
+    return -(-n_clients // n_shards)
+
+
+def psum_tree(x, axis_name: str):
+    """Deterministic cross-device sum over mesh axis ``axis_name``: the
+    collective twin of :func:`tree_sum`.  ``all_gather`` stacks every
+    device's pre-reduced partial in mesh-coordinate order, then the
+    pinned halving tree folds the stack — NEVER ``jax.lax.psum``, whose
+    reduction order is backend/topology-dependent.  Every device gathers
+    identical operands and folds them through the same tree, so the
+    result is replicated across the axis and bit-identical to the host
+    oracle (:func:`sharded_client_sum`'s outer fold)."""
+    g = jax.lax.all_gather(x, axis_name, axis=0)
+    return tree_sum(g, axis=0)[0]
+
+
+def sharded_client_sum(x, client_valid, client_tile, n_shards: int, xp=jnp):
+    """Host oracle of the SHARDED cross-client merge (DESIGN.md §12):
+    what ``parallel/sweep.py`` computes when the client axis is split
+    over ``n_shards`` mesh devices.  Two association levels stack:
+
+    1. pad the client axis with phantoms to ``n_shards`` equal
+       contiguous shards of :func:`resolve_shard_width` clients and run
+       :func:`masked_client_sum` WITHIN each shard — the per-device
+       partial, with ``client_tile`` re-resolved against the shard
+       width exactly as each device's 2-D grid kernel resolves it
+       against its local client count;
+    2. fold the per-shard partials with :func:`tree_sum` over the shard
+       axis — what :func:`psum_tree` computes via ``all_gather``.
+
+    ``n_shards == 1`` degenerates bit-exactly to ``masked_client_sum``
+    with the no-mesh tile resolution.  ``client_tile`` may be ``None``
+    (the package default), matching the config-level knob."""
+    c = x.shape[0]
+    w = resolve_shard_width(c, n_shards)
+    c_pad = w * n_shards
+    if c_pad != c:
+        pad = [(0, c_pad - c)] + [(0, 0)] * (x.ndim - 1)
+        x = xp.pad(x, pad)
+        client_valid = xp.pad(client_valid, (0, c_pad - c))
+    ct = resolve_client_tile(w, client_tile)
+    parts = xp.stack([
+        masked_client_sum(x[s * w:(s + 1) * w],
+                          client_valid[s * w:(s + 1) * w], ct, xp)
+        for s in range(n_shards)])
+    return tree_sum(parts, 0, xp)[0]
+
+
+def sharded_client_mean(x, client_valid, client_tile, n_shards: int, xp=jnp):
+    """Sharded twin of :func:`masked_client_mean`: the shard-merged sum
+    over the shard-merged real-client count (at least 1) — the division
+    happens ONCE, globally, after the cross-device fold (a mean is not
+    composable across devices; the kernel ships raw sums with
+    ``merge_mean=False`` for exactly this reason)."""
+    total = sharded_client_sum(x, client_valid, client_tile, n_shards, xp)
+    dtype = total.dtype
+    n_real = sharded_client_sum(xp.ones(client_valid.shape, dtype),
+                                client_valid, client_tile, n_shards, xp)
+    return total / xp.maximum(n_real, xp.ones((), dtype))

@@ -130,6 +130,14 @@ class SimConfig:
     # cross-client merge association (`policy_core.masked_client_sum`),
     # so it is resolved identically on the jax backend.
     client_tile: Optional[int] = None
+    # device mesh of the sharded sweep dispatch (parallel/sweep.py,
+    # DESIGN.md §12): None = single-device; ``(t_dev,)`` shards the
+    # trial axis over t_dev devices; ``(t_dev, c_dev)`` also shards the
+    # per_client client axis, lifting the cross-client merges to
+    # psum_tree/pmax collectives.  The shape's product must divide
+    # `jax.device_count()` (checked at dispatch by
+    # `launch.mesh.make_sweep_mesh`, which names the device count).
+    mesh_shape: Optional[Tuple[int, ...]] = None
     # size-class boundaries (MB) per §4
     small_lo: float = 0.25
     small_hi: float = 4.0
@@ -164,6 +172,28 @@ class SimConfig:
                 f"client_tile={self.client_tile!r} must be a positive"
                 " client count per 2-D-grid program instance (or None for"
                 f" the policy_core default; n_clients={self.n_clients})")
+        if self.mesh_shape is not None:
+            try:
+                ms = tuple(int(s) for s in self.mesh_shape)
+            except (TypeError, ValueError):
+                raise ValueError(
+                    f"mesh_shape={self.mesh_shape!r} must be a tuple of "
+                    "1 or 2 positive device counts ((trials,) or "
+                    "(trials, clients)), or None for the single-device "
+                    "dispatch") from None
+            # normalize (lists hash differently; jit statics need a tuple)
+            object.__setattr__(self, "mesh_shape", ms)
+            if len(ms) not in (1, 2) or any(s < 1 for s in ms):
+                raise ValueError(
+                    f"mesh_shape={ms!r} must be (trials,) or "
+                    "(trials, clients) positive device counts (or None "
+                    "for the single-device dispatch)")
+            if len(ms) == 2 and ms[1] > 1 \
+                    and self.client_model != "per_client":
+                raise ValueError(
+                    f"mesh_shape={ms} shards a client axis but "
+                    f"client_model={self.client_model!r} has none — use "
+                    "client_model='per_client' or a (trials,) mesh")
 
     @property
     def n_windows(self) -> int:
@@ -509,27 +539,30 @@ def _run_batched(keys: jax.Array, cfg: SimConfig, policy: PolicyConfig,
         win = cfg.window_size
         run_works, run_keys, run_states = works, k_sched, states
 
-    metrics = merged = None
-    if cfg.backend == "kernel":
+    metrics = merged = smerge = None
+    if cfg.mesh_shape is not None:
+        # sharded sweep: the same dispatch wrapped in shard_map over the
+        # sweep mesh, cross-client merges lifted to collectives
+        # (parallel/sweep.py, DESIGN.md §12)
+        from repro.parallel import sweep
+        res, metrics, smerge = sweep.run_sweep(
+            run_states, run_works, run_keys, mesh_shape=cfg.mesh_shape,
+            policy=policy, log_cfg=log_cfg, window_size=win,
+            backend=cfg.backend, group_steps=True, traces=traces,
+            window_dt=window_dt, observe=observe,
+            trial_tile=cfg.trial_tile, client_tile=cfg.client_tile)
+    elif cfg.backend == "kernel":
         res, metrics, merged = engine.run_stream_batch(
             run_states, run_works, run_keys, policy=policy,
             log_cfg=log_cfg, window_size=win, group_steps=True,
             traces=traces, window_dt=window_dt, observe=observe,
             trial_tile=cfg.trial_tile, client_tile=cfg.client_tile)
     else:
-        run1 = functools.partial(
-            engine.run_stream, policy=policy, log_cfg=log_cfg,
-            window_size=win, group_steps=True, window_dt=window_dt,
-            observe=observe, backend="jax")
-        fn = lambda st, w, k, tr: run1(st, w, k, trace=tr)  # noqa: E731
-        tr_ax = None if traces is None else 0
-        if per_client:
-            inner = jax.vmap(fn, in_axes=(0, 0, 0, None))
-            res = jax.vmap(inner, in_axes=(0, 0, 0, tr_ax))(
-                run_states, run_works, run_keys, traces)
-        else:
-            res = jax.vmap(fn, in_axes=(0, 0, 0, tr_ax))(
-                run_states, run_works, run_keys, traces)
+        res, _, _ = engine.run_stream_batch(
+            run_states, run_works, run_keys, policy=policy,
+            log_cfg=log_cfg, window_size=win, group_steps=True,
+            traces=traces, window_dt=window_dt, observe=observe,
+            backend="jax")
 
     if per_client:
         # cross-client fold: true loads are the cross-client sums (the
@@ -543,7 +576,14 @@ def _run_batched(keys: jax.Array, cfg: SimConfig, policy: PolicyConfig,
         latencies = res.latencies.reshape(t, c * per)[:, :r]
         probes = jnp.sum(jnp.where(cvalid, res.probe_msgs, 0),
                          axis=-1).astype(jnp.int32)
-        if merged is not None:
+        if smerge is not None:
+            # the sharded sweep's collective merge (parallel/sweep.py):
+            # already the global mean/max/sum rows, uniform across
+            # backends
+            wl = smerge.window_loads_mean
+            phase = smerge.phase_time
+            probes = smerge.probe_msgs
+        elif merged is not None:
             # the 2-D grid kernel's in-VMEM merge (bit-identical to the
             # jax branch below — asserted in tests/test_simulate.py)
             wl = merged.window_loads_mean

@@ -131,7 +131,7 @@ def _sched_stream_kernel(objs_ref, lens_ref, valid_ref, table_ref, seed_ref,
                          alpha: float, window_dt: float, policy: str,
                          observe: bool, renorm: bool, nltr_n: int,
                          probe_choices: int, client_tile: int = 0,
-                         n_client_blocks: int = 1):
+                         n_client_blocks: int = 1, merge_mean: bool = True):
     """One program instance of the stream kernel.
 
     Trial-grid form (``client_tile == 0``): refs carry a leading
@@ -553,15 +553,21 @@ def _sched_stream_kernel(objs_ref, lens_ref, valid_ref, table_ref, seed_ref,
                                         jnp.maximum(prev, blk_row),
                                         prev + blk_row)
 
-    @pl.when(j == n_client_blocks - 1)
-    def _finish_merge():
-        # masked client-MEAN of the window loads: divide the accumulated
-        # sum by the real-client count (>= 1) — masked_client_mean's twin
-        row = cm_metrics_ref[...]
-        n_real = jnp.sum(jnp.where(mlane == MET_N_CLIENTS, row, 0.0),
-                         axis=-1, keepdims=True)       # (t_tile, 1)
-        denom = jnp.maximum(n_real, 1.0)[:, :, None]   # (t_tile, 1, 1)
-        cm_wloads_ref[...] = cm_wloads_ref[...] / denom
+    if merge_mean:
+        @pl.when(j == n_client_blocks - 1)
+        def _finish_merge():
+            # masked client-MEAN of the window loads: divide the
+            # accumulated sum by the real-client count (>= 1) —
+            # masked_client_mean's twin.  ``merge_mean=False`` skips the
+            # divide and ships the raw masked client SUM instead: a mean
+            # is not composable across devices, so the sharded sweep
+            # (DESIGN.md §12) psum_tree's these per-device sum blocks and
+            # divides once, globally.
+            row = cm_metrics_ref[...]
+            n_real = jnp.sum(jnp.where(mlane == MET_N_CLIENTS, row, 0.0),
+                             axis=-1, keepdims=True)      # (t_tile, 1)
+            denom = jnp.maximum(n_real, 1.0)[:, :, None]  # (t_tile, 1, 1)
+            cm_wloads_ref[...] = cm_wloads_ref[...] / denom
 
 
 def sched_stream_call(object_ids: jax.Array, lengths: jax.Array,
@@ -639,6 +645,7 @@ def sched_stream_grid_call(object_ids: jax.Array, lengths: jax.Array,
                            policy: str, observe: bool, renorm: bool,
                            trial_tile: int = 1, client_tile: int = 1,
                            nltr_n: int = 2, probe_choices: int = 2,
+                           merge_mean: bool = True,
                            interpret: bool = False):
     """2-D (trials × clients) grid form of the stream kernel (§11).
 
@@ -654,9 +661,11 @@ def sched_stream_grid_call(object_ids: jax.Array, lengths: jax.Array,
     Returns (choices (T, C, N) int32, latencies (T, C, N) f32,
     final_tables (T, C, 4, M_pad) f32, window_loads (T, C, W, M_pad)
     f32, metrics (T, C, MET_PAD) f32 per stream, cm_wloads (T, W,
-    M_pad) f32 — the masked client-MEAN window loads — and cm_metrics
-    (T, MET_PAD) f32 cross-client merged rows, accumulated in-VMEM
-    across the client grid dimension).
+    M_pad) f32 — the masked client-MEAN window loads, or the raw masked
+    client SUM when ``merge_mean=False`` (the pre-reduced per-device
+    block the sharded sweep's ``psum_tree`` consumes, DESIGN.md §12) —
+    and cm_metrics (T, MET_PAD) f32 cross-client merged rows,
+    accumulated in-VMEM across the client grid dimension).
     """
     t, c, n = object_ids.shape
     m_pad = tables.shape[-1]
@@ -672,7 +681,7 @@ def sched_stream_grid_call(object_ids: jax.Array, lengths: jax.Array,
         lam=lam, alpha=alpha, window_dt=window_dt, policy=policy,
         observe=observe, renorm=renorm, nltr_n=nltr_n,
         probe_choices=probe_choices, client_tile=ct,
-        n_client_blocks=c // ct)
+        n_client_blocks=c // ct, merge_mean=merge_mean)
     return pl.pallas_call(
         kernel,
         grid=(t // tt, c // ct),

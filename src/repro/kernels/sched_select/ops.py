@@ -232,7 +232,7 @@ def sched_stream_batch(object_ids: jax.Array, lengths: jax.Array,
                                              "observe", "renorm",
                                              "trial_tile", "client_tile",
                                              "nltr_n", "probe_choices",
-                                             "interpret"))
+                                             "merge_mean", "interpret"))
 def sched_stream_grid(object_ids: jax.Array, lengths: jax.Array,
                       valid: jax.Array, tables: jax.Array, seeds: jax.Array,
                       win_rates: jax.Array, *, n_servers: int,
@@ -243,6 +243,7 @@ def sched_stream_grid(object_ids: jax.Array, lengths: jax.Array,
                       trial_tile: int = DEFAULT_TRIAL_TILE,
                       client_tile: Optional[int] = None,
                       nltr_n: int = 2, probe_choices: int = 2,
+                      merge_mean: bool = True,
                       interpret: Optional[bool] = None
                       ) -> Tuple[jax.Array, jax.Array, jax.Array, jax.Array,
                                  jax.Array, jax.Array, jax.Array]:
@@ -265,9 +266,11 @@ def sched_stream_grid(object_ids: jax.Array, lengths: jax.Array,
     final_tables (T, C, 4, M) f32, window_loads (T, C, W, M) f32,
     metrics (T, C, N_METRICS) f32 per stream, cm_wloads (T, W, M) f32 —
     the masked client-MEAN post-drain loads, `policy_core.
-    masked_client_mean`'s in-VMEM twin — and cm_metrics (T, N_CMETRICS)
-    f32 cross-client merged rows, `policy_core.client_stream_metrics`'s
-    twin)."""
+    masked_client_mean`'s in-VMEM twin, or the raw masked client SUM
+    when ``merge_mean=False`` (the per-device partial the sharded
+    sweep's `policy_core.psum_tree` folds across devices, DESIGN.md
+    §12) — and cm_metrics (T, N_CMETRICS) f32 cross-client merged rows,
+    `policy_core.client_stream_metrics`'s twin)."""
     _check_policy(policy, n_servers, nltr_n)
     interpret = _auto_interpret(interpret)
     t, c, n = object_ids.shape
@@ -309,7 +312,8 @@ def sched_stream_grid(object_ids: jax.Array, lengths: jax.Array,
             threshold=threshold, lam=lam, alpha=alpha, window_dt=window_dt,
             policy=policy, observe=observe, renorm=renorm,
             trial_tile=tile_t, client_tile=tile_c, nltr_n=nltr_n,
-            probe_choices=probe_choices, interpret=interpret)
+            probe_choices=probe_choices, merge_mean=merge_mean,
+            interpret=interpret)
     return (choices[:t, :c], lats[:t, :c], ftab[:t, :c, :, :m],
             wloads[:t, :c, :, :m], metrics[:t, :c, :N_METRICS],
             cm_wl[:t, :, :m], cm_met[:t, :N_CMETRICS])

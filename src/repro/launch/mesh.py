@@ -5,13 +5,24 @@ this module never touches jax device state — the dry-run sets
 ``XLA_FLAGS=--xla_force_host_platform_device_count=512`` before first jax
 init; smoke tests see the real single device.
 
+``make_sweep_mesh`` is the Monte-Carlo sweep's mesh (DESIGN.md §12):
+unlike the hard-coded 256/512-chip production meshes it adapts to
+whatever ``jax.device_count()`` the process actually has — one forced
+host device in CPU tests, {2, 4, 8} under
+``XLA_FLAGS=--xla_force_host_platform_device_count=N``, real chips on
+TPU — so the sharded sweep dispatch (``parallel/sweep.py``) and its
+parity tests construct meshes everywhere.
+
 Hardware constants for the roofline model live here too (per chip):
 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s per ICI link.
 """
 
 from __future__ import annotations
 
+from typing import Optional, Tuple
+
 import jax
+import numpy as np
 
 # TPU v5e per-chip roofline constants (used by benchmarks/roofline.py)
 PEAK_FLOPS_BF16 = 197e12      # FLOP/s
@@ -27,6 +38,40 @@ def make_production_mesh(*, multi_pod: bool = False):
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
     from repro.compat import make_mesh
     return make_mesh(shape, axes)
+
+
+def make_sweep_mesh(shape: Optional[Tuple[int, ...]] = None):
+    """Sweep mesh over the process's actual devices (DESIGN.md §12).
+
+    ``shape=None`` puts every device on one ``("trials",)`` axis.  An
+    explicit 1-tuple names the trial-axis device count; a 2-tuple
+    ``(t_dev, c_dev)`` adds a ``"clients"`` axis for the per_client
+    contention model.  The shape's product must divide
+    ``jax.device_count()`` (the mesh takes the first ``prod(shape)``
+    devices), so a config validated on an 8-device CI shard fails
+    loudly — naming the actual device count — on a 1-device box instead
+    of silently resharding.
+    """
+    n = jax.device_count()
+    if shape is None:
+        shape = (n,)
+    shape = tuple(int(s) for s in shape)
+    if len(shape) not in (1, 2) or any(s < 1 for s in shape):
+        raise ValueError(
+            f"sweep mesh shape must be (trials,) or (trials, clients) "
+            f"positive device counts, got {shape!r}")
+    total = 1
+    for s in shape:
+        total *= s
+    if n % total != 0:
+        raise ValueError(
+            f"sweep mesh shape {shape} needs {total} devices, which does "
+            f"not divide jax.device_count()={n}; pick axis sizes whose "
+            "product divides the device count (or run under "
+            f"XLA_FLAGS=--xla_force_host_platform_device_count={total})")
+    axes = ("trials",) if len(shape) == 1 else ("trials", "clients")
+    devices = np.asarray(jax.devices()[:total]).reshape(shape)
+    return jax.sharding.Mesh(devices, axes)
 
 
 def n_chips(multi_pod: bool = False) -> int:

@@ -1,0 +1,383 @@
+"""Sharded sweep dispatch (parallel/sweep.py, DESIGN.md §12).
+
+Collective-contract coverage: the sharded sweep must equal the
+single-device dispatch BITWISE — per-stream outputs because the trial
+axis is embarrassingly parallel (with the trial tile pinned from the
+global T), merged outputs because the device axis is one more pinned
+association level (`psum_tree` on top of `masked_client_sum`).
+
+The bitwise claim is backend-scoped: the KERNEL backend carries it for
+all six policies (pinned tiles make the lowering device-count
+invariant); the jax engine carries it only for the lowering-insensitive
+policies (ect, rr), because its sort-policy estimate math moves 1 ulp
+with vmap batch size / compilation context and near-tied sort decisions
+flip (DESIGN.md §12).
+
+The multi-device tests skip at ``jax.device_count() == 1``; the CI
+``multidevice`` shard runs them under
+``XLA_FLAGS=--xla_force_host_platform_device_count={2,4,8}``
+(tests/conftest.py deliberately does NOT force a device count — the
+smoke benchmarks must see the real device).  Shapes are chosen so T and
+C do NOT divide the mesh axes (padded trial shards, phantom client
+shards).
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.compat import shard_map_unchecked
+from repro.core import engine, policy_core, simulate, statlog
+from repro.core.policies import PolicyConfig
+from repro.core.simulate import SCENARIOS, ScenarioConfig, SimConfig
+from repro.launch.mesh import make_sweep_mesh
+from repro.parallel import sweep
+
+DC = jax.device_count()
+
+needs_mesh = pytest.mark.skipif(
+    DC < 2, reason="needs >= 2 devices: run under "
+    "XLA_FLAGS=--xla_force_host_platform_device_count=N")
+
+# all six kernel policies; the randomized ones pin rng="lcg" so jax and
+# kernel backends consume an identical randomness stream
+POLICY_SPECS = (("ect", "jax", 0.05), ("rr", "jax", 5.0),
+                ("mlml", "jax", 5.0), ("trh", "lcg", 5.0),
+                ("nltr", "lcg", 5.0), ("two_choice", "lcg", 5.0))
+
+# T=5 does not divide 2, 4 or 8 -> every mesh pads trial shards
+BASE = dict(n_servers=16, n_requests=48, n_trials=5, window_size=16)
+
+
+def _mk_policy(name, rng, thr):
+    return PolicyConfig(name=name, threshold=thr, rng=rng)
+
+
+def _assert_trials_equal(got, want, label, fields=None):
+    for f in fields or simulate.TrialResult._fields:
+        np.testing.assert_array_equal(
+            np.asarray(getattr(got, f)), np.asarray(getattr(want, f)),
+            err_msg=f"{label}: TrialResult.{f}")
+
+
+# ---------------------------------------------------------------------------
+# single-device-runnable: config validation, mesh factory, host oracles
+# ---------------------------------------------------------------------------
+
+
+def test_make_sweep_mesh_default_factors_device_count():
+    mesh = make_sweep_mesh()
+    assert mesh.axis_names == ("trials",)
+    assert mesh.shape["trials"] == DC
+    mesh2 = make_sweep_mesh((1, 1))
+    assert mesh2.axis_names == ("trials", "clients")
+
+
+def test_make_sweep_mesh_rejects_non_dividing_shape():
+    bad = 3 * DC  # never divides the device count
+    with pytest.raises(ValueError, match=f"jax.device_count..={DC}"):
+        make_sweep_mesh((bad,))
+    with pytest.raises(ValueError, match="positive device counts"):
+        make_sweep_mesh((0,))
+    with pytest.raises(ValueError, match="positive device counts"):
+        make_sweep_mesh((1, 1, 1))
+
+
+def test_simconfig_mesh_shape_validation():
+    assert SimConfig(mesh_shape=None).mesh_shape is None
+    # lists normalize to (hashable) tuples for the jit static arg
+    assert SimConfig(mesh_shape=[1]).mesh_shape == (1,)
+    with pytest.raises(ValueError, match="mesh_shape"):
+        SimConfig(mesh_shape=(0,))
+    with pytest.raises(ValueError, match="mesh_shape"):
+        SimConfig(mesh_shape=(1, 2, 3))
+    with pytest.raises(ValueError, match="client_model"):
+        SimConfig(mesh_shape=(1, 2), client_model="shared_log")
+    SimConfig(mesh_shape=(1, 2), client_model="per_client")  # fine
+
+
+def test_sharded_client_sum_degenerates_to_masked_sum():
+    """n_shards=1 must reproduce the no-mesh merge bit-for-bit."""
+    rng = np.random.default_rng(0)
+    x = rng.normal(size=(5, 3)).astype(np.float32)
+    cv = np.array([True, True, False, True, True])
+    for ct in (None, 2, 8):
+        want = policy_core.masked_client_sum(
+            x, cv, policy_core.resolve_client_tile(5, ct), xp=np)
+        got = policy_core.sharded_client_sum(x, cv, ct, 1, xp=np)
+        np.testing.assert_array_equal(got, want)
+
+
+def test_sharded_client_sum_matches_manual_two_level_fold():
+    """The oracle really is per-shard masked sums folded by tree_sum."""
+    rng = np.random.default_rng(1)
+    c, shards = 5, 2              # width 3: shard 1 gets a phantom pad
+    x = rng.normal(size=(c, 4)).astype(np.float32)
+    cv = np.array([True, False, True, True, True])
+    w = policy_core.resolve_shard_width(c, shards)
+    assert w == 3
+    ct = policy_core.resolve_client_tile(w, 2)
+    xp_pad = np.concatenate([x, np.zeros((1, 4), np.float32)])
+    cv_pad = np.concatenate([cv, [False]])
+    parts = np.stack([
+        policy_core.masked_client_sum(xp_pad[:3], cv_pad[:3], ct, xp=np),
+        policy_core.masked_client_sum(xp_pad[3:], cv_pad[3:], ct, xp=np)])
+    want = policy_core.tree_sum(parts, 0, xp=np)[0]
+    got = policy_core.sharded_client_sum(x, cv, 2, shards, xp=np)
+    np.testing.assert_array_equal(got, want)
+
+
+def test_resolve_shard_width():
+    assert policy_core.resolve_shard_width(5, 2) == 3
+    assert policy_core.resolve_shard_width(8, 4) == 2
+    assert policy_core.resolve_shard_width(1, 4) == 1
+    with pytest.raises(ValueError):
+        policy_core.resolve_shard_width(5, 0)
+
+
+# ---------------------------------------------------------------------------
+# collective primitives
+# ---------------------------------------------------------------------------
+
+
+@needs_mesh
+def test_psum_tree_matches_host_tree_sum():
+    """psum_tree == all_gather + pinned tree fold == the host oracle."""
+    mesh = make_sweep_mesh()
+    x = jax.random.normal(jax.random.key(0), (DC, 3, 7), jnp.float32)
+    f = shard_map_unchecked(
+        lambda a: policy_core.psum_tree(a[0], "trials"), mesh,
+        in_specs=(jax.sharding.PartitionSpec("trials"),),
+        out_specs=jax.sharding.PartitionSpec())
+    got = f(x)
+    want = policy_core.tree_sum(x, axis=0)[0]
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+# ---------------------------------------------------------------------------
+# trial-axis sharding: the acceptance bar — all six policies x five
+# scenarios, sharded kernel == single-device kernel == single-device jax
+# ---------------------------------------------------------------------------
+
+
+@needs_mesh
+@pytest.mark.parametrize("scenario", SCENARIOS)
+@pytest.mark.parametrize("name,rng,thr", POLICY_SPECS)
+def test_sharded_trials_bit_exact_vs_single_device(scenario, name, rng, thr):
+    pol = _mk_policy(name, rng, thr)
+    cfg_k = SimConfig(backend="kernel", scenario=ScenarioConfig(
+        name=scenario), **BASE)
+    log_cfg = simulate.default_log_cfg(cfg_k)
+    key = jax.random.key(0)
+    single_k = simulate.run_trials(key, cfg_k, pol, log_cfg)
+    single_j = simulate.run_trials(
+        key, dataclasses.replace(cfg_k, backend="jax"), pol, log_cfg)
+    sharded = simulate.run_trials(
+        key, dataclasses.replace(cfg_k, mesh_shape=(DC,)), pol, log_cfg)
+    _assert_trials_equal(sharded, single_k, f"mesh=({DC},) vs kernel")
+    _assert_trials_equal(sharded, single_j, f"mesh=({DC},) vs jax")
+
+
+@needs_mesh
+@pytest.mark.parametrize("scenario,polspec",
+                         list(zip(SCENARIOS, POLICY_SPECS[:2])))
+def test_sharded_jax_backend_matches_single_device(scenario, polspec):
+    """The jax engine under the mesh == the jax engine on one device —
+    for the lowering-insensitive policies (ect, rr).  The sort-based
+    policies' estimate math is 1-ulp sensitive to the vmap BATCH SIZE
+    (the jax engine has no block abstraction to pin it with, unlike the
+    kernel's trial tile — DESIGN.md §12), so their device-count
+    invariance is covered by the kernel-backend test above and the
+    pure-partition test below."""
+    pol = _mk_policy(*polspec)
+    cfg = SimConfig(backend="jax", scenario=ScenarioConfig(name=scenario),
+                    **BASE)
+    log_cfg = simulate.default_log_cfg(cfg)
+    key = jax.random.key(1)
+    single = simulate.run_trials(key, cfg, pol, log_cfg)
+    sharded = simulate.run_trials(
+        key, dataclasses.replace(cfg, mesh_shape=(DC,)), pol, log_cfg)
+    _assert_trials_equal(sharded, single, f"jax mesh=({DC},)")
+
+
+@needs_mesh
+@pytest.mark.parametrize("name,rng,thr", POLICY_SPECS[:2])
+def test_sharded_jax_dispatch_is_pure_partition(name, rng, thr):
+    """run_sweep(backend="jax") == the SAME gather-padded trial
+    partition dispatched shard-by-shard WITHOUT shard_map (traces +
+    window_dt threaded through): the sweep layer adds nothing beyond
+    the partition.
+
+    ect/rr only, like the test above: for the sort-based policies the
+    jax engine's estimate math drifts 1 ulp with COMPILATION CONTEXT
+    (vmap batch size, eager vs jit vs the shard_map-staged body — all
+    verified empirically to flip near-tied sort decisions), so no
+    eager- or jit-side reference reproduces the staged body's bits.
+    The kernel backend's pinned tiles are what make sort policies
+    device-count-invariant — the 30-case kernel test above and
+    DESIGN.md §12."""
+    t, n, m = 5, 24, 8
+    lcfg = statlog.LogConfig(n_servers=m)
+    k = jax.random.key(3)
+    ko, kl, ki, kk, kt = jax.random.split(k, 5)
+    works = engine.Workload(
+        jax.random.randint(ko, (t, n), 0, 8 * m, dtype=jnp.int32),
+        jax.random.uniform(kl, (t, n), minval=1.0, maxval=4.0),
+        jnp.ones((t, n), bool))
+    states = jax.vmap(lambda il: statlog.init_state(lcfg, init_loads=il))(
+        jax.random.uniform(ki, (t, m), minval=5.0, maxval=15.0))
+    keys = jax.random.split(kk, t)
+    traces = engine.ClusterTrace(
+        times=jnp.broadcast_to(jnp.array([0.0, 2.0]), (t, 2)),
+        rates=jax.random.uniform(kt, (t, 2, m), minval=50.0, maxval=200.0))
+    pol = _mk_policy(name, rng, thr)
+    kw = dict(policy=pol, log_cfg=lcfg, window_size=8, window_dt=0.3)
+    res, _, sm = sweep.run_sweep(states, works, keys, mesh_shape=(DC,),
+                                 backend="jax", traces=traces, **kw)
+    assert sm is None                    # (T,) batch: nothing to merge
+    # manual reference: the identical gather-padded partition, each
+    # shard dispatched as its own (t_loc,) batch
+    t_loc = -(-t // DC)
+    ar = jnp.arange(t_loc * DC)
+    idx = jnp.where(ar < t, ar, 0)
+    pad_s, pad_w, pad_k, pad_tr = (jax.tree.map(lambda a: a[idx], x)
+                                   for x in (states, works, keys, traces))
+    sl = lambda tree, s: jax.tree.map(                       # noqa: E731
+        lambda a: a[s * t_loc:(s + 1) * t_loc], tree)
+    # jit the reference: the shard_map body is staged out and compiled
+    # as one program per device, so the apples-to-apples reference is
+    # the whole-program-compiled shard, not eager op-by-op dispatch
+    ref_fn = jax.jit(lambda s_, w_, k_, tr_: engine.run_stream_batch(
+        s_, w_, k_, traces=tr_, backend="jax", **kw)[0])
+    parts = [ref_fn(sl(pad_s, s), sl(pad_w, s), sl(pad_k, s),
+                    sl(pad_tr, s))
+             for s in range(DC)]
+    for f in ("chosen", "latencies", "probe_msgs", "redirected"):
+        ref = jnp.concatenate([getattr(p, f) for p in parts], 0)[:t]
+        np.testing.assert_array_equal(
+            np.asarray(getattr(res, f)), np.asarray(ref),
+            err_msg=f"pure-partition: {f} ({name})")
+
+
+# ---------------------------------------------------------------------------
+# client-axis sharding: the two-level merge association vs. the oracle
+# ---------------------------------------------------------------------------
+
+
+def _client_mesh_shape():
+    """(t_dev, 2) using all devices — 2 client shards of C=5 (phantom
+    pad on the last shard)."""
+    return (DC // 2, 2) if DC % 2 == 0 else (DC, 1)
+
+
+def _synthetic_grid(t=3, c=5, per=8, m=5, ws=4):
+    lcfg = statlog.LogConfig(n_servers=m)
+    k = jax.random.key(7)
+    ko, kl, kk, ki = jax.random.split(k, 4)
+    obj = jax.random.randint(ko, (t, c, per), 0, 8 * m, dtype=jnp.int32)
+    lens = jax.random.uniform(kl, (t, c, per), minval=1.0, maxval=4.0)
+    valid = jnp.ones((t, c, per), bool)
+    valid = valid.at[:, -1, :].set(False)       # whole phantom client
+    valid = valid.at[:, 1, per // 2:].set(False)  # partial client
+    works = engine.Workload(obj, lens, valid)
+    ils = jax.random.uniform(ki, (t, m), minval=10.0, maxval=20.0)
+    states = jax.vmap(lambda il: statlog.init_state(lcfg, init_loads=il))(ils)
+    states = jax.tree.map(
+        lambda a: jnp.broadcast_to(a[:, None], (t, c) + a.shape[1:]), states)
+    keys = jax.vmap(lambda kk_: jax.random.split(kk_, c))(
+        jax.random.split(kk, t))
+    return lcfg, works, states, keys, ws
+
+
+@needs_mesh
+@pytest.mark.parametrize("backend", ["kernel", "jax"])
+def test_run_sweep_client_axis_merge_matches_oracle(backend):
+    """C=5 over 2 client shards: merged rows == the two-level host
+    oracle `sharded_client_sum/mean`; per-stream outputs == the no-mesh
+    jax dispatch of the same (T, C) batch; order-free merges (phase
+    max, integer probe sum) == the no-mesh values."""
+    mesh_shape = _client_mesh_shape()
+    lcfg, works, states, keys, ws = _synthetic_grid()
+    pol = PolicyConfig(name="ect", threshold=0.05)
+    kw = dict(policy=pol, log_cfg=lcfg, window_size=ws)
+    res, _, smerge = sweep.run_sweep(states, works, keys,
+                                     mesh_shape=mesh_shape,
+                                     backend=backend, **kw)
+    # per-stream comparator: the jax engine is shape-independent, so the
+    # no-mesh jax dispatch is its bitwise reference; the kernel backend
+    # re-tiles streams per device, so ITS bitwise reference is the jax
+    # engine under the SAME mesh (same shard shapes — the §11 per-shape
+    # kernel==jax contract); merged rows are held to the exact host
+    # oracle either way
+    if backend == "jax":
+        ref, _, _ = engine.run_stream_batch(states, works, keys,
+                                            backend="jax", **kw)
+    else:
+        ref, _, _ = sweep.run_sweep(states, works, keys,
+                                    mesh_shape=mesh_shape,
+                                    backend="jax", **kw)
+    np.testing.assert_array_equal(np.asarray(res.chosen),
+                                  np.asarray(ref.chosen))
+    np.testing.assert_array_equal(np.asarray(res.latencies),
+                                  np.asarray(ref.latencies))
+
+    c_dev = mesh_shape[1]
+    cvalid = np.asarray(jnp.any(works.valid, axis=-1))
+    wl = np.asarray(res.window_loads)
+    want_wl = np.stack([
+        policy_core.sharded_client_mean(wl[i], cvalid[i], None, c_dev,
+                                        xp=np)
+        for i in range(wl.shape[0])])
+    np.testing.assert_array_equal(np.asarray(smerge.window_loads_mean),
+                                  want_wl)
+    # order-free merges: masked max / integer sum over ALL clients
+    lat = np.asarray(res.latencies)
+    want_phase = np.max(np.where(np.asarray(works.valid), lat, 0.0),
+                        axis=(1, 2))
+    np.testing.assert_array_equal(np.asarray(smerge.phase_time),
+                                  want_phase)
+    want_probes = np.sum(np.where(cvalid, np.asarray(res.probe_msgs), 0),
+                         axis=-1).astype(np.int32)
+    np.testing.assert_array_equal(np.asarray(smerge.probe_msgs),
+                                  want_probes)
+
+
+@needs_mesh
+def test_client_axis_sharded_sim_backend_parity():
+    """per_client simulate under a (t_dev, c_dev) mesh: kernel and jax
+    backends agree BITWISE (same shard shapes, same association), and
+    order-free fields agree bitwise with the no-mesh dispatch; the
+    client-mean window loads differ only in association (allclose)."""
+    mesh_shape = _client_mesh_shape()
+    cfg = SimConfig(client_model="per_client", n_clients=5, client_tile=2,
+                    mesh_shape=mesh_shape, backend="kernel",
+                    scenario=ScenarioConfig(name="transient"), **BASE)
+    log_cfg = simulate.default_log_cfg(cfg)
+    pol = PolicyConfig(name="ect", threshold=0.05)
+    key = jax.random.key(2)
+    mesh_k = simulate.run_trials(key, cfg, pol, log_cfg)
+    mesh_j = simulate.run_trials(
+        key, dataclasses.replace(cfg, backend="jax"), pol, log_cfg)
+    _assert_trials_equal(mesh_k, mesh_j, f"mesh={mesh_shape} kernel vs jax")
+    single = simulate.run_trials(
+        key, dataclasses.replace(cfg, mesh_shape=None), pol, log_cfg)
+    order_free = tuple(f for f in simulate.TrialResult._fields
+                       if f != "window_loads")
+    _assert_trials_equal(mesh_k, single, f"mesh={mesh_shape} vs single",
+                         fields=order_free)
+    np.testing.assert_allclose(np.asarray(mesh_k.window_loads),
+                               np.asarray(single.window_loads), rtol=1e-6)
+
+
+@needs_mesh
+def test_sharded_rejects_client_mesh_without_client_axis():
+    with pytest.raises(ValueError, match="client axis"):
+        lcfg, works, states, keys, ws = _synthetic_grid()
+        one_d = jax.tree.map(lambda a: a[:, 0], (states, works, keys))
+        sweep.run_sweep(one_d[0], one_d[1], one_d[2],
+                        mesh_shape=(1, 2),
+                        policy=PolicyConfig(name="ect", threshold=0.05),
+                        log_cfg=lcfg, window_size=ws)
