@@ -8,12 +8,15 @@ faster configuration with identical structure.  ``--trajectory`` skips
 the benchmarks and renders the BENCH_sched.json history instead: the
 phase-time/p99 delta table, the scheduling-throughput table
 (``engine_req_s`` / ``kernel_req_s`` / ``kernel_batch_req_s`` /
+the sort-policy pairs ``kernel_batch_req_s_{mlml,nltr}`` vs their
+same-policy engine twins ``engine_req_s_{mlml,nltr}`` /
 ``sharded_req_s_{d}d``, flagging runs where a kernel path fell behind
-its engine twin) and a two-panel figure.  BENCH_sched.json is the
+its engine twin — including, since the §13 fast path, the sort-policy
+kernel series) and a two-panel figure.  BENCH_sched.json is the
 IN-REPO file at the repo root (``sched_perf.BENCH_PATH``), one point
-per git sha — re-running on the same commit replaces the point.  The
-roofline section formats whatever ``dryrun_results.json`` the dry-run
-has produced so far.
+per git sha (each point stamps ``git_dirty``) — re-running on the same
+commit replaces the point.  The roofline section formats whatever
+``dryrun_results.json`` the dry-run has produced so far.
 """
 
 from __future__ import annotations

@@ -50,6 +50,21 @@ def _git_sha() -> Optional[str]:
     return sha if out.returncode == 0 and sha else None
 
 
+def _git_dirty() -> Optional[bool]:
+    """True when the working tree differs from HEAD — stamped alongside
+    ``git_sha`` so the sha-keyed dedupe can't silently merge points
+    measured on different trees; None when git is unavailable."""
+    try:
+        out = subprocess.run(["git", "status", "--porcelain"],
+                             cwd=_REPO_ROOT, capture_output=True,
+                             text=True, timeout=10)
+    except OSError:
+        return None
+    if out.returncode != 0:
+        return None
+    return bool(out.stdout.strip())
+
+
 # Memoized: run_all prints a full iteration table and emit_bench_point
 # re-reads three of the same cells — don't pay for the simulation twice.
 @functools.lru_cache(maxsize=None)
@@ -209,7 +224,9 @@ def kernel_batch_throughput(n_servers: int = 100, n_requests: int = 2000,
                             window_size: int = 100, n_trials: int = 100,
                             reps: int = 3, policy: str = "ect",
                             threshold: float = 0.05,
-                            check_bit_exact: bool = True) -> Dict[str, float]:
+                            check_bit_exact: bool = True,
+                            measure_engine: bool = False
+                            ) -> Dict[str, float]:
     """Trial-grid kernel throughput (DESIGN.md §9): the WHOLE Monte-Carlo
     sweep — ``n_trials`` independent transient-scenario streams — as ONE
     pallas_call (`simulate.run_trials(backend='kernel')`), vs. the same
@@ -217,14 +234,17 @@ def kernel_batch_throughput(n_servers: int = 100, n_requests: int = 2000,
 
     ``policy`` selects the in-kernel decision rule — since the in-VMEM
     sorts (DESIGN.md §10) this includes the sort-based ``mlml``/``nltr``,
-    whose per-window bitonic request sort + one-hot gather loop is the
-    costliest kernel shape (tracked per run in BENCH_sched.json as
-    ``kernel_batch_req_s_<policy>``).
+    which now run the §13 permutation-apply fast path (one all-pairs
+    rank + a constant number of permutation applies per window, tracked
+    per run in BENCH_sched.json as ``kernel_batch_req_s_<policy>``).
 
     ``kernel_batch_req_s`` is aggregate (trials x requests) / median
     wall seconds; ``batch_bit_exact`` asserts every per-trial decision,
     latency and load of the grid kernel equals the ``lax.map`` path —
-    the tentpole contract of the trial-grid form."""
+    the tentpole contract of the trial-grid form.  ``measure_engine``
+    also times the SAME sweep through the vmapped jax engine
+    (``engine_batch_req_s``) — the same-policy engine twin the
+    trajectory's behind-engine flag compares against."""
     import jax
     from repro.core import simulate
     from repro.core.simulate import ScenarioConfig, SimConfig
@@ -249,6 +269,16 @@ def kernel_batch_throughput(n_servers: int = 100, n_requests: int = 2000,
         "batch_s": dt,
         "kernel_batch_req_s": n_trials * n_requests / dt,
     }
+    if measure_engine:
+        ecfg = SimConfig(n_servers=n_servers, n_requests=n_requests,
+                         n_trials=n_trials, window_size=window_size,
+                         backend="jax",
+                         scenario=ScenarioConfig(name="transient"))
+        elog = simulate.default_log_cfg(ecfg)
+        edt, _ = _median_time(
+            lambda: simulate.run_trials(key, ecfg, pol, elog), reps)
+        out["engine_batch_s"] = edt
+        out["engine_batch_req_s"] = n_trials * n_requests / edt
     if check_bit_exact:
         keys = jax.random.split(key, n_trials)
         seq = jax.jit(lambda ks: jax.lax.map(
@@ -267,6 +297,10 @@ def kernel_batch_throughput(n_servers: int = 100, n_requests: int = 2000,
           f"median of {reps}) ==")
     print(f"  one pallas_call for the whole sweep: {dt:8.3f}s  "
           f"{out['kernel_batch_req_s']:10.0f} req/s aggregate")
+    if measure_engine:
+        print(f"  vmapped jax engine, same sweep:    "
+              f"{out['engine_batch_s']:8.3f}s  "
+              f"{out['engine_batch_req_s']:10.0f} req/s aggregate")
     if check_bit_exact:
         print(f"  per-trial decisions/latencies/loads bit-exact vs "
               f"sequential kernel path: {out['batch_bit_exact']}"
@@ -513,7 +547,11 @@ def emit_bench_point(path: str = BENCH_PATH,
     All throughput cells are medians of ``reps`` repeats (recorded in
     the point).  Points are keyed by ``git_sha``: re-running on the same
     commit REPLACES that commit's point instead of appending a
-    duplicate.  Reuses this process's cached run_all results."""
+    duplicate, and each point stamps ``git_dirty`` so points measured
+    on an uncommitted tree are distinguishable from their commit's.
+    The sort-policy rows carry same-policy engine twins
+    (``engine_req_s_{mlml,nltr}``) for the behind-engine flag.
+    Reuses this process's cached run_all results."""
     from repro.core import analysis
     point: Dict[str, object] = {"ts": time.time(), "metric_unit": "seconds"}
     # call signatures mirror run_all's rows so the lru_cache hits
@@ -534,13 +572,17 @@ def emit_bench_point(path: str = BENCH_PATH,
     point["kernel_batch_req_s"] = bat["kernel_batch_req_s"]
     point["kernel_batch_trials"] = bat["n_trials"]
     point["kernel_batch_bit_exact"] = bat.get("batch_bit_exact")
-    # sort-based policies through the same trial-grid kernel (DESIGN.md
-    # §10); parity is covered by tests, so skip the lax.map re-check here
+    # sort-based policies through the same trial-grid kernel (§13 fast
+    # path), with their SAME-POLICY engine twins so the trajectory's
+    # behind-engine flag can fire for them; parity is covered by tests,
+    # so skip the lax.map re-check here
     for spol in ("mlml", "nltr"):
         sb = kernel_batch_throughput(n_servers=kernel_scale,
                                      n_trials=batch_trials, policy=spol,
-                                     threshold=5.0, check_bit_exact=False)
+                                     threshold=5.0, check_bit_exact=False,
+                                     measure_engine=True)
         point[f"kernel_batch_req_s_{spol}"] = sb["kernel_batch_req_s"]
+        point[f"engine_req_s_{spol}"] = sb["engine_batch_req_s"]
     # per_client contention sweeps on the 2-D (trials × clients) grid
     # (DESIGN.md §11): kernel vs the vmapped jax path at {4, 16, 64}
     # clients; 16 is the headline pair tracked by --trajectory and
@@ -576,6 +618,9 @@ def emit_bench_point(path: str = BENCH_PATH,
     sha = _git_sha()
     if sha:
         point["git_sha"] = sha
+        dirty = _git_dirty()
+        if dirty is not None:
+            point["git_dirty"] = dirty
     history = []
     if os.path.exists(path):
         try:
@@ -639,7 +684,8 @@ def trajectory(path: str = BENCH_PATH,
     # sort-policy rows, the per_client 2-D-grid pair) — every access is
     # a tolerant .get.
     thr_cols = ("engine_req_s", "kernel_req_s", "kernel_batch_req_s",
-                "kernel_batch_req_s_mlml", "kernel_batch_req_s_nltr",
+                "kernel_batch_req_s_mlml", "engine_req_s_mlml",
+                "kernel_batch_req_s_nltr", "engine_req_s_nltr",
                 "kernel_batch_req_s_per_client", "engine_req_s_per_client",
                 "sharded_req_s_8d", "sharded_engine_req_s_8d")
     print(f"\n== perf trajectory ({len(history)} runs, {path}) ==")
@@ -661,10 +707,11 @@ def trajectory(path: str = BENCH_PATH,
         print(f"{i:>4d} {when:>16s} " + " ".join(cells))
         prev = pt
 
-    # only the SAME-policy kernel series compare against engine_req_s
-    # (the sort-policy rows have no engine twin in the point — flagging
-    # them against the ect engine number would be apples-to-oranges);
-    # the per_client kernel series compares against ITS jax twin.
+    # only the SAME-policy kernel series compare against engine_req_s;
+    # the sort-policy rows compare against THEIR engine twins
+    # (engine_req_s_{mlml,nltr}, emitted since the §13 fast path) and
+    # the per_client kernel series against ITS jax twin — flagging any
+    # of them against the ect engine number would be apples-to-oranges.
     flag_cols = ("kernel_req_s", "kernel_batch_req_s")
     print(f"\n{'run':>4s} " + " ".join(f"{c:>20s}" for c in thr_cols)
           + "  kernel vs engine")
@@ -682,6 +729,11 @@ def trajectory(path: str = BENCH_PATH,
         pce = pt.get("engine_req_s_per_client")
         if pck is not None and pce is not None and pck < pce:
             behind.append("kernel_batch_per_client")
+        for spol in ("mlml", "nltr"):
+            sk = pt.get(f"kernel_batch_req_s_{spol}")
+            se = pt.get(f"engine_req_s_{spol}")
+            if sk is not None and se is not None and sk < se:
+                behind.append(f"kernel_batch_{spol}")
         # sharded series compare ONLY against the same-device-count
         # engine twin — a 2-device sharded row vs the 1-device engine
         # number would conflate scaling with backend speed
@@ -762,6 +814,18 @@ def run_smoke() -> None:
                                   window_size=60, n_trials=10, reps=1,
                                   policy="nltr", threshold=4.0)
     assert srt["batch_bit_exact"], "sort-policy trial-grid divergence"
+    # mlml rides the same §13 permutation-apply fast path (all-pairs
+    # rank + vectorized sort/unsort applies): bit-exactness AND a
+    # timing guard — the fast path keeps a sort policy within a small
+    # factor of the ect batch wall time (the pre-§13 bitonic networks
+    # sat ~10x behind; 8x leaves headroom for CI jitter at reps=1)
+    sml = kernel_batch_throughput(n_servers=24, n_requests=480,
+                                  window_size=60, n_trials=10, reps=1,
+                                  policy="mlml", threshold=4.0)
+    assert sml["batch_bit_exact"], "mlml trial-grid divergence"
+    assert sml["batch_s"] <= 8.0 * bat["batch_s"], (
+        "mlml batch fell behind the §13 fast-path envelope",
+        sml["batch_s"], bat["batch_s"])
     # per_client on the 2-D (trials × clients) grid (DESIGN.md §11):
     # T=10 vs trial tile 8 AND C=5 over client_tile=2 exercise inert
     # trial padding, phantom-client padding AND the multi-block
@@ -854,7 +918,8 @@ def run_all() -> None:
     kernel_batch_throughput(n_servers=100, n_trials=100)
     for spol in ("mlml", "nltr"):
         kernel_batch_throughput(n_servers=100, n_trials=100, policy=spol,
-                                threshold=5.0, check_bit_exact=False)
+                                threshold=5.0, check_bit_exact=False,
+                                measure_engine=True)
     for n_c in (4, 16, 64):
         kernel_per_client_throughput(n_servers=100, n_trials=100,
                                      n_clients=n_c,

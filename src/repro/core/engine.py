@@ -198,7 +198,11 @@ def run_window(state: SchedState, work: Workload, key: jax.Array, *,
     if log_cfg.renorm:
         state = statlog.renormalize(state)
 
-    # scatter back: plan order -> step order -> original request order
+    # scatter back: plan order -> step order -> original request order.
+    # The engine keeps XLA's gather/scatter here; the kernel's §13
+    # inverse permutation apply (permute_from_sorted) computes the SAME
+    # relocation (property-pinned in tests/test_policies.py), so the
+    # backends stay bit-exact without sharing this code path.
     inv = jnp.zeros((r,), jnp.int32).at[plan.order].set(pos)
     chosen = chosen_sorted[inv]
     redirected = redir_sorted[inv] & work.valid

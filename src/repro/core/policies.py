@@ -152,12 +152,13 @@ def plan_window(cfg: PolicyConfig, state: SchedState, object_ids: jax.Array,
                 lengths: jax.Array, valid: jax.Array) -> WindowPlan:
     """Build the window-start plan (sorts + sections) for a policy.
 
-    The engine keeps XLA's stable ``argsort`` (fast on the scan hot
-    path); the Pallas kernel runs `policy_core.bitonic_argsort_desc`
-    in-VMEM.  Both order by (key desc, index asc) — a STRICT TOTAL
-    order, so the permutation is unique and the two sorts agree
-    bit-for-bit by construction (property-pinned in
-    tests/test_policies.py; DESIGN.md §10).
+    The engine keeps XLA's stable ``argsort`` + take (fast on the scan
+    hot path); the Pallas kernel runs `policy_core.rank_desc` +
+    `permute_to_sorted` in-VMEM — the §13 fast path: one all-pairs
+    comparison and masked-sum permutation applies, no sort network.
+    Both order by (key desc, index asc) — a STRICT TOTAL order, so the
+    permutation is unique and the two agree bit-for-bit by construction
+    (property-pinned in tests/test_policies.py; DESIGN.md §10/§13).
     """
     r = object_ids.shape[0]
     m = state.n_servers
@@ -335,7 +336,7 @@ class HostScheduler:
     # -- window machinery ---------------------------------------------------
     def begin_window(self, lengths: Optional[Sequence[float]] = None) -> None:
         """Snapshot the window-start sorts.  Stable np.argsort == the
-        kernel's bitonic network (strict total order; DESIGN.md §10).
+        kernel's §13 all-pairs rank (strict total order; DESIGN.md §10).
         ``lengths`` (all requests queued in this window) is needed by
         nLTR's request sectioning."""
         order = np.argsort(-self.log.probs, kind="stable")

@@ -188,45 +188,20 @@ def _next_pow2(n: int) -> int:
     return size
 
 
-def bitonic_argsort_desc(keys, valid=None, xp=jnp):
-    """Stable descending argsort as an EXPLICIT bitonic compare-exchange
-    network — the in-VMEM sort of DESIGN.md §10.
+def _bitonic_network(keys, idx, payloads, xp, descending: bool):
+    """Run the textbook bitonic schedule on pre-padded power-of-two lanes.
 
-    ``keys``: (..., R) sort keys; ``valid`` (same shape, optional) masks
-    rows to ``-inf`` keys so they sink to the end.  The last axis pads to
-    the next power of two with ``-inf`` keys and continuing indices, then
-    runs the textbook bitonic schedule (outer width ``k = 2..R_pad``,
-    inner stride ``j = k/2..1``); each stage is two circular rolls plus
-    selects, so the whole network is fixed elementwise HLO — no gather,
-    no backend sort, legal inside a fused Pallas body (``jnp.argsort``
-    is not; see DESIGN.md §10).
-
-    The comparator orders by ``(key desc, index asc)`` — a strict total
-    order, so ANY correct network yields the one permutation that equals
-    ``argsort(-keys, stable)``; using the same schedule in the engine,
-    the host twin and the kernel makes the match structural rather than
-    coincidental (like :func:`lane_sum`).
-
-    Returns ``(order, sorted_keys)``: ``order`` int32 (..., R_pad) maps
-    sorted position -> original index (positions ``>= R`` are padding);
-    ``sorted_keys`` are the masked keys in that order (``-inf`` at
-    invalid/padding positions).
+    ``keys``/``idx`` order the elements by ``(key desc|asc, index asc)``
+    — a strict total order either way; every compare-exchange also moves
+    the ``payloads`` lanes with the SAME swap mask, so payload values are
+    only ever relocated by selects (never combined arithmetically) and
+    land bit-identical to a take along the resulting permutation
+    (DESIGN.md §13).  Each stage is two circular rolls plus selects —
+    fixed elementwise HLO, no gather, legal inside a fused Pallas body.
     """
-    r = keys.shape[-1]
-    rp = _next_pow2(r)
-    neg = xp.asarray(-xp.inf, keys.dtype)
-    if valid is not None:
-        keys = xp.where(valid, keys, neg)
-    if rp != r:
-        pad = [(0, 0)] * (keys.ndim - 1) + [(0, rp - r)]
-        keys = xp.pad(keys, pad, constant_values=-xp.inf)
-    if xp is np:
-        pos = np.broadcast_to(np.arange(rp, dtype=np.int32), keys.shape)
-    else:
-        # broadcasted_iota, not arange: 1-D iota does not lower inside
-        # TPU Pallas bodies (this runs in the kernel too)
-        pos = jax.lax.broadcasted_iota(jnp.int32, keys.shape, keys.ndim - 1)
-    idx = pos
+    pos = idx
+    rp = keys.shape[-1]
+    payloads = list(payloads)
     k = 2
     while k <= rp:
         asc = (pos & k) == 0          # comparator-ascending region
@@ -239,14 +214,171 @@ def bitonic_argsort_desc(keys, valid=None, xp=jnp):
                           xp.roll(keys, j, axis=-1))
             pi = xp.where(is_lo, xp.roll(idx, -j, axis=-1),
                           xp.roll(idx, j, axis=-1))
-            # partner ranks before self in (key desc, index asc) order
-            p_first = (pk > keys) | ((pk == keys) & (pi < idx))
+            # partner ranks before self in (key desc|asc, index asc) order
+            if descending:
+                p_first = (pk > keys) | ((pk == keys) & (pi < idx))
+            else:
+                p_first = (pk < keys) | ((pk == keys) & (pi < idx))
             swap = xp.where(asc == is_lo, p_first, ~p_first)
             keys = xp.where(swap, pk, keys)
             idx = xp.where(swap, pi, idx)
+            for n, p in enumerate(payloads):
+                pp = xp.where(is_lo, xp.roll(p, -j, axis=-1),
+                              xp.roll(p, j, axis=-1))
+                payloads[n] = xp.where(swap, pp, p)
             j //= 2
         k *= 2
-    return idx.astype(np.int32 if xp is np else jnp.int32), keys
+    return keys, idx, tuple(payloads)
+
+
+def _sort_iota(shape, xp):
+    if xp is np:
+        return np.broadcast_to(np.arange(shape[-1], dtype=np.int32), shape)
+    # broadcasted_iota, not arange: 1-D iota does not lower inside
+    # TPU Pallas bodies (this runs in the kernel too)
+    return jax.lax.broadcasted_iota(jnp.int32, shape, len(shape) - 1)
+
+
+def bitonic_sort_with_payload(keys, payloads=(), valid=None, xp=jnp):
+    """Stable descending sort as an EXPLICIT bitonic compare-exchange
+    network, carrying ``payloads`` through every compare-exchange — the
+    in-VMEM sort of DESIGN.md §10 extended with the permutation-apply
+    fast path of §13.
+
+    ``keys``: (..., R) sort keys; ``valid`` (same shape, optional) masks
+    rows to ``-inf`` keys so they sink to the end; each payload has the
+    keys' shape and any dtype.  The last axis pads to the next power of
+    two with ``-inf`` keys, continuing indices and zero payloads, then
+    runs the bitonic schedule (outer width ``k = 2..R_pad``, inner
+    stride ``j = k/2..1``).
+
+    The comparator orders by ``(key desc, index asc)`` — a strict total
+    order, so ANY correct network yields the one permutation that equals
+    ``argsort(-keys, stable)``; using the same schedule in the engine,
+    the host twin and the kernel makes the match structural rather than
+    coincidental (like :func:`lane_sum`).  Payloads are moved by the
+    same swaps, so ``sorted_payloads[i] == payload[order[i]]`` exactly
+    (property-pinned against stable argsort + take in
+    tests/test_policies.py); the R real elements always sort before the
+    R_pad - R padding, so positions ``< R`` never see a padding payload.
+
+    Returns ``(order, sorted_keys, sorted_payloads)``: ``order`` int32
+    (..., R_pad) maps sorted position -> original index (positions
+    ``>= R`` are padding); ``sorted_keys`` are the masked keys in that
+    order (``-inf`` at invalid/padding positions); ``sorted_payloads``
+    the payload tuple in that order.
+    """
+    r = keys.shape[-1]
+    rp = _next_pow2(r)
+    neg = xp.asarray(-xp.inf, keys.dtype)
+    if valid is not None:
+        keys = xp.where(valid, keys, neg)
+    if rp != r:
+        pad = [(0, 0)] * (keys.ndim - 1) + [(0, rp - r)]
+        keys = xp.pad(keys, pad, constant_values=-xp.inf)
+        payloads = tuple(xp.pad(p, pad) for p in payloads)
+    idx = _sort_iota(keys.shape, xp)
+    keys, idx, payloads = _bitonic_network(keys, idx, payloads, xp,
+                                           descending=True)
+    return (idx.astype(np.int32 if xp is np else jnp.int32), keys,
+            payloads)
+
+
+def bitonic_argsort_desc(keys, valid=None, xp=jnp):
+    """Stable descending argsort — :func:`bitonic_sort_with_payload`
+    with no payload lanes.  Returns ``(order, sorted_keys)``."""
+    order, skeys, _ = bitonic_sort_with_payload(keys, (), valid=valid, xp=xp)
+    return order, skeys
+
+
+def bitonic_apply_inverse(order, payloads, xp=jnp):
+    """Apply the INVERSE of a sort permutation to payload lanes — the
+    one permutation apply per window of DESIGN.md §13.
+
+    ``order``: (..., R_pad) int32 permutation of ``0..R_pad-1`` mapping
+    sorted position -> original index (a ``bitonic_sort_with_payload``
+    order, R_pad a power of two); ``payloads``: tuple of (..., R_pad)
+    arrays in SORTED order.  Returns the payloads moved back to
+    ORIGINAL-index order, i.e. ``out[order[p]] = payload[p]``, as one
+    ascending bitonic pass keyed on the distinct integers of ``order``
+    (strict total order, so the network computes THE unique inverse).
+    Values are only relocated — never combined — so the result equals
+    the one-hot scatter oracle bit-for-bit (property-pinned in
+    tests/test_policies.py); no scatter/gather op, legal inside a fused
+    Pallas body.
+    """
+    idx = _sort_iota(order.shape, xp)
+    _, _, payloads = _bitonic_network(order, idx, payloads, xp,
+                                      descending=False)
+    return payloads
+
+
+def rank_desc(keys, valid=None, xp=jnp):
+    """Rank of every element under ``(key desc, index asc)`` — the sort
+    permutation WITHOUT running a sort network (DESIGN.md §13).
+
+    ``rank[i] = #{k : key_k > key_i  or  (key_k == key_i and k < i)}`` —
+    one broadcasted all-pairs comparison over an ``(..., R, R)`` tile
+    plus an integer row count.  The comparator is the strict total order
+    shared with :func:`bitonic_sort_with_payload`, so ``rank`` is exactly
+    the INVERSE of the stable ``argsort(-keys)`` permutation: element
+    ``i`` lands at sorted position ``rank[i]``.  ``valid`` masks keys to
+    ``-inf`` first (invalid rows rank after every valid one, index-asc
+    among themselves — the §10 ordering invariant).  Integer compares and
+    counts only — bit-exact on every backend, and unlike the network this
+    needs no power-of-two padding.
+
+    Returns ``(rank, masked_keys)``: ``rank`` int32 (..., R), and the
+    keys after the validity mask (``-inf`` at invalid rows — the
+    ``sorted_keys`` source for :func:`permute_to_sorted`).
+    """
+    i32 = np.int32 if xp is np else jnp.int32
+    if valid is not None:
+        keys = xp.where(valid, keys, xp.asarray(-xp.inf, keys.dtype))
+    idx = _sort_iota(keys.shape, xp)
+    a, ia = keys[..., :, None], idx[..., :, None]         # self
+    b, ib = keys[..., None, :], idx[..., None, :]         # other
+    before = (b > a) | ((b == a) & (ib < ia))
+    return xp.sum(before.astype(i32), axis=-1), keys
+
+
+def _rank_onehot(rank, xp):
+    """(..., i, p) boolean: element ``i`` occupies sorted position ``p``."""
+    pos = _sort_iota(rank.shape, xp)
+    return rank[..., :, None] == pos[..., None, :]
+
+
+def permute_to_sorted(rank, payloads, xp=jnp):
+    """Gather payload lanes into sorted order: ``out[p] = payload[i]``
+    where ``rank[i] == p`` (DESIGN.md §13).
+
+    ``rank`` is a :func:`rank_desc` permutation, so exactly ONE element
+    maps to each position: the masked sum below has a single non-zero
+    term per output lane and is therefore a pure relocation — bit-exact
+    for floats too (``x + 0.0 == x``; no value here is ``-0.0``).  One
+    ``(..., R, R)`` select + sum per payload, no gather op, no sort
+    network — legal inside a fused Pallas body.
+    """
+    oh = _rank_onehot(rank, xp)
+    outs = []
+    for x in payloads:
+        z = xp.zeros((), x.dtype)
+        outs.append(xp.sum(xp.where(oh, x[..., :, None], z), axis=-2))
+    return tuple(outs)
+
+
+def permute_from_sorted(rank, payloads, xp=jnp):
+    """Scatter sorted payload lanes back to original-index order:
+    ``out[i] = payload[rank[i]]`` — the inverse apply of DESIGN.md §13,
+    same single-non-zero-term masked sum as :func:`permute_to_sorted`
+    (property-pinned against the one-hot scatter oracle in
+    tests/test_policies.py)."""
+    oh = _rank_onehot(rank, xp)
+    outs = []
+    for x in payloads:
+        z = xp.zeros((), x.dtype)
+        outs.append(xp.sum(xp.where(oh, x[..., None, :], z), axis=-1))
+    return tuple(outs)
 
 
 def recursive_average_bounds(sorted_len, nvalid, n_levels: int, xp=jnp):

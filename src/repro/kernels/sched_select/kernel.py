@@ -65,20 +65,25 @@ in as a ``(W, M)`` input).  Policies (selected statically):
 All policies except ``rr`` apply the paper's redirect-threshold guard
 against the round-robin default ``object_id mod M`` and the Eq. (1)-(3)
 updates with one-hot *vector* writes (no scatter — TPU lanes update
-masked).  SORT-BASED POLICIES (DESIGN.md §10): the per-window server
-ranking AND the MLML/nLTR request ordering run IN-VMEM through
-`policy_core.bitonic_argsort_desc` — an explicit, shape-pinned bitonic
-compare-exchange network (rolls + selects only; ``jnp.argsort`` does not
-lower inside a fused Pallas body, and its tie/tree behaviour is a
-backend choice).  Its (key desc, index asc) comparator is a strict total
-order, so the permutation equals the engine's stable ``argsort``
-bit-for-bit; nLTR's section bounds come from the shared
-`policy_core.recursive_average_bounds` evaluated on ``(t_tile, R_pad)``
-tiles with `lane_sum`-associated means.  MLML/nLTR process the window in
-sorted order — requests are gathered per step by one-hot masked sums
-over the window block (no gather op), decisions scattered back to
-request order the same way — while the fused metrics accumulate in
-ORIGINAL request order, matching `policy_core.stream_metrics`.
+masked).  SORT-BASED POLICIES (DESIGN.md §10, §13): the per-window
+server ranking AND the MLML/nLTR request ordering run IN-VMEM through
+`policy_core.rank_desc` — ONE all-pairs (key desc, index asc)
+comparison per ranking instead of a compare-exchange network — and
+`policy_core.permute_to_sorted`, which lands obj/len/valid (and the
+server ids) in sorted order as a single masked-sum permutation apply
+(no gather op; ``jnp.argsort`` does not lower inside a fused Pallas
+body, and its tie/tree behaviour is a backend choice).  The comparator
+is a strict total order, so the permutation equals the engine's stable
+``argsort`` bit-for-bit; nLTR's section bounds come from the shared
+`policy_core.recursive_average_bounds` on the natural-width sorted keys
+with `lane_sum`-associated means.  MLML/nLTR loop the window in sorted
+order via POSITION one-hots, accumulate decisions/latencies in sorted
+order, and unsort both with ONE vectorized
+`policy_core.permute_from_sorted` apply per window; the fused metrics
+then reduce in ORIGINAL request order, matching
+`policy_core.stream_metrics` (maxima and the valid count are order-free
+exact and collapse to vectorized masked reductions — only the latency
+sum keeps the host twin's sequential per-request float-add chain).
 
 FUSED METRICS (DESIGN.md §9): before a program instance retires, it
 reduces its trials' per-step latencies — still VMEM-resident — into a
@@ -105,10 +110,10 @@ from repro.core.policy_core import (LCG_A, LCG_C, MET_LAT_MAX, MET_LAT_SUM,
                                     MET_MAKESPAN, MET_N_CLIENTS, MET_N_VALID,
                                     MET_P99, MET_PAD, N_ROWS,
                                     P99_BISECT_ITERS, P99_Q, ROW_EST,
-                                    ROW_EWMA, ROW_LOADS, ROW_PROBS,
-                                    bitonic_argsort_desc, lane_sum,
-                                    recursive_average_bounds, tree_sum,
-                                    window_decrements)
+                                    ROW_EWMA, ROW_LOADS, ROW_PROBS, lane_sum,
+                                    permute_from_sorted, permute_to_sorted,
+                                    rank_desc, recursive_average_bounds,
+                                    tree_sum, window_decrements)
 
 _BIG = 3.4e38  # padding-lane load: never selected, never drained
 
@@ -224,12 +229,16 @@ def _sched_stream_kernel(objs_ref, lens_ref, valid_ref, table_ref, seed_ref,
         sort_policy = policy in ("mlml", "nltr")
 
         if policy in ("trh", "mlml", "nltr"):
-            # Window-start plan: servers by probability desc, via the
-            # shared bitonic network (DESIGN.md §10).  Padding lanes get
-            # -inf keys so positions [0, M) are exactly the engine's
-            # stable argsort(-probs) permutation.
-            order_srv, _ = bitonic_argsort_desc(
+            # Window-start plan (DESIGN.md §13): rank servers by
+            # probability desc with ONE all-pairs comparison, then land
+            # the server ids in rank order with a single permutation
+            # apply.  Padding lanes get -inf keys so positions [0, M)
+            # are exactly the engine's stable argsort(-probs)
+            # permutation — same strict total order, no sort network.
+            rank_srv, _ = rank_desc(
                 tbl[ROW_PROBS], valid=jnp.broadcast_to(lv, (s_tile, m_pad)))
+            (order_srv,) = permute_to_sorted(
+                rank_srv, (jnp.broadcast_to(lane, (s_tile, m_pad)),))
             srt_lane = jax.lax.broadcasted_iota(
                 jnp.int32, (1, order_srv.shape[-1]), 1)
 
@@ -240,19 +249,26 @@ def _sched_stream_kernel(objs_ref, lens_ref, valid_ref, table_ref, seed_ref,
 
         if sort_policy:
             # MLML/nLTR process the window's requests in length-desc
-            # order: sort the request block in-VMEM (same network), then
-            # gather per step / scatter decisions back by one-hot sums.
+            # order (DESIGN.md §13): rank the request block with one
+            # all-pairs comparison, land obj/len/valid in sorted order
+            # with one permutation apply, and loop over POSITIONS — the
+            # per-step one-hot selects by position, no gathered order
+            # value and no per-step ref reads.
             start = w * window_size
             obj_w = req_read(objs_ref, start, window_size)   # (s, ws)
             len_w = req_read(lens_ref, start, window_size)
             val_w = req_read(valid_ref, start, window_size) != 0
-            order_req, skeys = bitonic_argsort_desc(len_w, valid=val_w)
-            rp = order_req.shape[-1]
-            sort_lane = jax.lax.broadcasted_iota(jnp.int32, (1, rp), 1)
+            rank_req, mkeys = rank_desc(len_w, valid=val_w)
+            obj_s, len_s, val_s = permute_to_sorted(
+                rank_req, (obj_w, len_w, val_w.astype(jnp.int32)))
             ws_lane = jax.lax.broadcasted_iota(jnp.int32, (1, window_size), 1)
             if policy == "nltr":
                 nvalid = jnp.sum(val_w.astype(jnp.int32), axis=-1,
                                  keepdims=True)
+                # sorted keys (-inf at invalid) for the section bounds;
+                # natural width — lane_sum's zero-padded halving tree is
+                # width-independent, so the bounds match the engine's
+                skeys = permute_to_sorted(rank_req, (mkeys,))[0]
                 bounds = recursive_average_bounds(skeys, nvalid, nltr_n)
                 sec_size = max(m // 2 ** nltr_n, 1)
                 n_sections = 2 ** nltr_n
@@ -379,18 +395,16 @@ def _sched_stream_kernel(objs_ref, lens_ref, valid_ref, table_ref, seed_ref,
         if sort_policy:
             def sorted_req_body(j, carry):
                 rng, ch_acc, lat_acc = carry
-                # original window position of the j-th longest request
-                ord_j = jnp.sum(jnp.where(sort_lane == j, order_req, 0),
-                                axis=-1, keepdims=True)
-                sel = ws_lane == ord_j                       # (t, ws)
-                obj = jnp.sum(jnp.where(sel, obj_w, 0), axis=-1,
+                sel = ws_lane == j              # PROCESSING position j
+                obj = jnp.sum(jnp.where(sel, obj_s, 0), axis=-1,
                               keepdims=True)
-                ln = jnp.sum(jnp.where(sel, len_w, 0.0), axis=-1,
+                ln = jnp.sum(jnp.where(sel, len_s, 0.0), axis=-1,
                              keepdims=True)
-                v = jnp.sum(jnp.where(sel, val_w.astype(jnp.int32), 0),
-                            axis=-1, keepdims=True) != 0
+                v = jnp.sum(jnp.where(sel, val_s, 0), axis=-1,
+                            keepdims=True) != 0
                 choose, lat, latv, rng = schedule_one(j, obj, ln, v, rng)
-                # scatter back to request order (one-hot writes)
+                # accumulate in SORTED order; ONE inverse apply at the
+                # window close moves everything back at once (§13)
                 ch_acc = jnp.where(sel, choose, ch_acc)
                 lat_acc = jnp.where(sel, latv, lat_acc)
                 return rng, ch_acc, lat_acc
@@ -400,27 +414,31 @@ def _sched_stream_kernel(objs_ref, lens_ref, valid_ref, table_ref, seed_ref,
                 (rng, jnp.zeros((s_tile, window_size), jnp.int32),
                  jnp.zeros((s_tile, window_size), jnp.float32)),
                 unroll=False)
-            req_write(choices_ref, start, ch_acc)
-            req_write(lats_ref, start, lat_acc)
+            ch_req, lat_req = permute_from_sorted(rank_req,
+                                                  (ch_acc, lat_acc))
+            req_write(choices_ref, start, ch_req)
+            req_write(lats_ref, start, lat_req)
 
-            def met_body(j, carry):
-                # fused metrics accumulate in ORIGINAL request order —
-                # the float accumulation order of the stream_metrics twin
-                mk, lsum, lmax, nval = carry
-                sel = ws_lane == j
-                latj = jnp.sum(jnp.where(sel, lat_acc, 0.0), axis=-1,
-                               keepdims=True)
-                vj = jnp.sum(jnp.where(sel, val_w.astype(jnp.int32), 0),
-                             axis=-1, keepdims=True) != 0
-                mk = jnp.where(vj, jnp.maximum(mk, wopen + latj), mk)
-                lsum = lsum + latj
-                lmax = jnp.maximum(lmax, latj)
-                nval = nval + jnp.where(vj, 1.0, 0.0)
-                return mk, lsum, lmax, nval
+            # fused metrics in ORIGINAL request order (stream_metrics
+            # twin).  makespan/lat_max are exact order-free f32 maxima
+            # and the valid count is integer-exact under any summation
+            # tree, so they collapse to vectorized masked reductions;
+            # ONLY the latency sum keeps the host twin's sequential
+            # per-request float-add chain (f32 adds do not reassociate).
+            mk = jnp.maximum(mk, jnp.max(
+                jnp.where(val_w, wopen + lat_req, -_BIG), axis=-1,
+                keepdims=True))
+            lmax = jnp.maximum(lmax, jnp.max(lat_req, axis=-1,
+                                             keepdims=True))
+            nval = nval + jnp.sum(jnp.where(val_w, 1.0, 0.0), axis=-1,
+                                  keepdims=True)
 
-            mk, lsum, lmax, nval = jax.lax.fori_loop(
-                0, window_size, met_body, (mk, lsum, lmax, nval),
-                unroll=False)
+            def lsum_body(j, acc):
+                return acc + jnp.sum(jnp.where(ws_lane == j, lat_req, 0.0),
+                                     axis=-1, keepdims=True)
+
+            lsum = jax.lax.fori_loop(0, window_size, lsum_body, lsum,
+                                     unroll=False)
             carry = (rng, mk, lsum, lmax, nval)
         else:
             def req_body(j, carry):

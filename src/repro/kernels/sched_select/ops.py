@@ -39,8 +39,10 @@ from repro.kernels.sched_select.kernel import (sched_select_call,
 
 POLICIES = ("minload", "two_random", "ect", "trh", "rr", "two_choice",
             "mlml", "nltr")
-# the paper's policies that need per-window sorts — served by the
-# in-VMEM bitonic network since DESIGN.md §10
+# the paper's policies that need per-window sorts — in-VMEM since
+# DESIGN.md §10, on the §13 permutation-apply fast path (one all-pairs
+# rank + a constant number of permutation applies per window, no sort
+# network) since PR 7
 SORT_POLICIES = ("mlml", "nltr")
 # policies available through the legacy static entry point
 STATIC_POLICIES = ("minload", "two_random")

@@ -16,8 +16,9 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.policy_core import (ROW_EST, ROW_EWMA, ROW_LOADS, ROW_PROBS,
-                                    bitonic_argsort_desc, client_stream_metrics,
-                                    drain_loads, masked_client_mean,
+                                    client_stream_metrics, drain_loads,
+                                    masked_client_mean, permute_from_sorted,
+                                    permute_to_sorted, rank_desc,
                                     recursive_average_bounds,
                                     renormalize_probs, resolve_client_tile,
                                     stream_metrics, window_decrements)
@@ -93,9 +94,10 @@ def sched_stream_ref(object_ids: jax.Array, lengths: jax.Array,
     uint32, win_rates (W, M).  Scan-carried replay of the identical
     per-request decision math, per-window renormalization and drain; the
     sort-based policies (mlml/nltr) replay the kernel's in-VMEM window
-    plan — the shared bitonic request/server sorts and recursive-average
-    section bounds (DESIGN.md §10) — processing in length-desc order and
-    scattering decisions back by the same permutation.
+    plan — the shared all-pairs rank / permutation-apply primitives and
+    recursive-average section bounds (DESIGN.md §10, §13) — processing
+    in length-desc order and unsorting decisions with the same inverse
+    apply.
     """
     m = n_servers
     n_win = win_rates.shape[0]
@@ -115,16 +117,25 @@ def sched_stream_ref(object_ids: jax.Array, lengths: jax.Array,
     def window(carry, xs):
         loads, probs, ewma, est, rng = carry
         obj, lens, val, rates, dec = xs
-        # window-start plan: servers by probability desc (shared bitonic
-        # network == stable argsort(-probs); DESIGN.md §10)
-        order = bitonic_argsort_desc(probs)[0][:m]   # server at position k
+        # window-start plan (DESIGN.md §13, shared with the kernel):
+        # all-pairs rank == inverse of the stable argsort(-probs)
+        # permutation; one permutation apply lands the server ids in
+        # rank order — no sort network, no backend argsort
+        rank_srv, _ = rank_desc(probs)
+        order = permute_to_sorted(rank_srv,
+                                  (lane.astype(jnp.int32),))[0]
         if sort_policy:
-            req_order_full, skeys = bitonic_argsort_desc(lens, valid=val)
-            req_order = req_order_full[:window_size]
-            obj_p, len_p, val_p = obj[req_order], lens[req_order], \
-                val[req_order]
+            # §13 fast path: rank the request block once, land
+            # obj/len/valid in length-desc order with one permutation
+            # apply — the same relocations a stable argsort + take
+            # would perform
+            rank_req, mkeys = rank_desc(lens, valid=val)
+            obj_p, len_p, val_p = permute_to_sorted(
+                rank_req, (obj, lens, val.astype(jnp.int32)))
+            val_p = val_p != 0
             if policy == "nltr":
                 nvalid = jnp.sum(val).astype(jnp.int32).reshape(1)
+                skeys = permute_to_sorted(rank_req, (mkeys,))[0]
                 bounds = recursive_average_bounds(skeys, nvalid, nltr_n)
         else:
             obj_p, len_p, val_p = obj, lens, val
@@ -214,9 +225,9 @@ def sched_stream_ref(object_ids: jax.Array, lengths: jax.Array,
         (loads, probs, ewma, est, rng), (ch, lt) = jax.lax.scan(
             step, (loads, probs, ewma, est, rng), (pos, obj_p, len_p, val_p))
         if sort_policy:
-            # scatter decisions back to request order (pure permutation)
-            ch = jnp.zeros_like(ch).at[req_order].set(ch)
-            lt = jnp.zeros_like(lt).at[req_order].set(lt)
+            # unsort with ONE vectorized inverse apply (§13) — bit-equal
+            # to the one-hot scatter it replaces: every value only MOVES
+            ch, lt = permute_from_sorted(rank_req, (ch, lt))
         if renorm:
             # shared core: lane_sum's explicit halving tree (§9 contract)
             probs = renormalize_probs(probs)

@@ -368,3 +368,141 @@ def test_recursive_average_bounds_batched_matches_engine_form():
         batched = np.asarray(policy_core.recursive_average_bounds(
             skeysb, nvb, n))
         np.testing.assert_array_equal(batched, np.stack(rows), err_msg=str(n))
+
+
+# ---------------------------------------------------------------------------
+# Permutation-apply contract (DESIGN.md §13): the payload-carrying bitonic
+# network and the inverse-permutation apply are PURE RELOCATIONS — bit-equal
+# to (stable argsort + take) and to the one-hot scatter they replaced on the
+# kernel's sort-policy window path.
+# ---------------------------------------------------------------------------
+
+
+def test_payload_bitonic_equals_stable_argsort_take():
+    """Payload lanes ride the compare-exchange network under the same swap
+    mask as the keys, so the sorted payloads equal payload[stable_argsort]
+    element-for-element (no arithmetic touches them) — across odd sizes,
+    R not a power of two, heavy duplicate keys, all-invalid windows, and
+    both xp twins."""
+    rng = np.random.default_rng(7)
+    for r in (1, 3, 17, 33, 60, 100, 128):
+        for tie_pool in (None, 3):
+            if tie_pool is None:
+                keys = rng.uniform(0.0, 50.0, r).astype(np.float32)
+            else:  # duplicate keys: the index tiebreak must carry payloads
+                keys = rng.choice(np.linspace(0, 2, tie_pool),
+                                  r).astype(np.float32)
+            obj = rng.integers(0, 997, r).astype(np.int32)
+            vali = (rng.random(r) > 0.3).astype(np.int32)
+            for valid in (vali != 0, np.zeros(r, bool)):   # + all-invalid
+                ref_ord = np.argsort(-np.where(valid, keys, -np.inf),
+                                     kind="stable")
+                want = (obj[ref_ord], keys[ref_ord], vali[ref_ord])
+                got_np = policy_core.bitonic_sort_with_payload(
+                    keys, (obj, keys, vali), valid=valid, xp=np)
+                got_jnp = policy_core.bitonic_sort_with_payload(
+                    jnp.asarray(keys),
+                    (jnp.asarray(obj), jnp.asarray(keys),
+                     jnp.asarray(vali)),
+                    valid=jnp.asarray(valid))
+                for got in (got_np, got_jnp):
+                    order, skeys, pays = got
+                    np.testing.assert_array_equal(
+                        np.asarray(order)[:r], ref_ord, err_msg=str(r))
+                    for p, w in zip(pays, want):
+                        p = np.asarray(p)
+                        np.testing.assert_array_equal(p[:r], w,
+                                                      err_msg=str(r))
+                        # pad positions carry exact zero payloads
+                        np.testing.assert_array_equal(
+                            p[r:], np.zeros_like(p[r:]))
+
+
+def test_bitonic_apply_inverse_equals_onehot_scatter():
+    """The inverse-permutation apply (ascending bitonic pass keyed on the
+    DISTINCT order integers) lands value j at position order[j] — exactly
+    the one-hot scatter oracle ``out[order] = values`` — for permutations
+    produced by the payload sort at odd / non-pow2 sizes, duplicate keys,
+    all-invalid windows; int and float payloads, both xp twins."""
+    rng = np.random.default_rng(11)
+    for r in (1, 3, 17, 33, 60, 128):
+        keys = rng.choice(np.linspace(0, 2, 3), r).astype(np.float32)
+        for valid in ((rng.random(r) > 0.3), np.zeros(r, bool)):
+            order, _, _ = policy_core.bitonic_sort_with_payload(
+                keys, (), valid=valid, xp=np)
+            rp = order.shape[-1]
+            vf = rng.uniform(-5.0, 5.0, rp).astype(np.float32)
+            vi = rng.integers(0, 100, rp).astype(np.int32)
+            want_f = np.empty_like(vf)
+            want_i = np.empty_like(vi)
+            want_f[order] = vf                    # one-hot scatter oracle
+            want_i[order] = vi
+            got_np = policy_core.bitonic_apply_inverse(order, (vf, vi),
+                                                       xp=np)
+            got_jnp = policy_core.bitonic_apply_inverse(
+                jnp.asarray(order), (jnp.asarray(vf), jnp.asarray(vi)))
+            for gf, gi in (got_np, got_jnp):
+                np.testing.assert_array_equal(np.asarray(gf), want_f,
+                                              err_msg=str(r))
+                np.testing.assert_array_equal(np.asarray(gi), want_i,
+                                              err_msg=str(r))
+
+
+def test_rank_desc_equals_argsort_and_network():
+    """The all-pairs rank (DESIGN.md §13 hot path) is the INVERSE of the
+    stable argsort(-keys) permutation, and permute_to_sorted /
+    permute_from_sorted reproduce take / one-hot scatter exactly — single
+    non-zero term per output lane, pure relocation even for floats.
+    Pinned against the argsort oracle AND the bitonic network form
+    (both compute THE unique strict-total-order permutation), across odd
+    and non-pow2 sizes, duplicate keys, all-invalid windows, batched 2-D
+    tiles, and both xp twins."""
+    rng = np.random.default_rng(13)
+    for r in (1, 3, 17, 33, 60, 100, 128):
+        keys = rng.choice(np.linspace(0, 2, 3), r).astype(np.float32)
+        obj = rng.integers(0, 997, r).astype(np.int32)
+        lat = rng.uniform(0.0, 9.0, r).astype(np.float32)
+        for valid in ((rng.random(r) > 0.3), np.zeros(r, bool)):
+            ref_ord = np.argsort(-np.where(valid, keys, -np.inf),
+                                 kind="stable")
+            for xp, as_a in ((np, np.asarray), (jnp, jnp.asarray)):
+                rank, mkeys = policy_core.rank_desc(as_a(keys),
+                                                    valid=as_a(valid),
+                                                    xp=xp)
+                # rank == inverse of the stable argsort permutation
+                inv = np.empty(r, np.int64)
+                inv[ref_ord] = np.arange(r)
+                np.testing.assert_array_equal(np.asarray(rank), inv,
+                                              err_msg=str(r))
+                # gather to sorted order == take along the argsort
+                obj_s, key_s = policy_core.permute_to_sorted(
+                    rank, (as_a(obj), mkeys), xp=xp)
+                np.testing.assert_array_equal(np.asarray(obj_s),
+                                              obj[ref_ord])
+                np.testing.assert_array_equal(
+                    np.asarray(key_s),
+                    np.where(valid, keys, -np.inf)[ref_ord])
+                # network form lands the same payloads at positions < r
+                _, _, (obj_net,) = policy_core.bitonic_sort_with_payload(
+                    keys, (obj,), valid=valid, xp=np)
+                np.testing.assert_array_equal(np.asarray(obj_s),
+                                              obj_net[:r])
+                # inverse apply == one-hot scatter oracle out[ord] = v
+                want = np.empty_like(lat)
+                want[ref_ord] = lat
+                (back,) = policy_core.permute_from_sorted(
+                    rank, (as_a(lat),), xp=xp)
+                np.testing.assert_array_equal(np.asarray(back), want,
+                                              err_msg=str(r))
+    # batched 2-D tile (the kernel's (t_tile, R) shape): every stream row
+    # ranks independently
+    keys2 = rng.uniform(0.0, 4.0, (5, 33)).astype(np.float32)
+    val2 = rng.random((5, 33)) > 0.4
+    rank2, _ = policy_core.rank_desc(jnp.asarray(keys2),
+                                     valid=jnp.asarray(val2))
+    for i in range(5):
+        ref = np.argsort(-np.where(val2[i], keys2[i], -np.inf),
+                         kind="stable")
+        inv = np.empty(33, np.int64)
+        inv[ref] = np.arange(33)
+        np.testing.assert_array_equal(np.asarray(rank2)[i], inv)
