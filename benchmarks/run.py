@@ -10,9 +10,14 @@ phase-time/p99 delta table, the scheduling-throughput table
 (``engine_req_s`` / ``kernel_req_s`` / ``kernel_batch_req_s`` /
 the sort-policy pairs ``kernel_batch_req_s_{mlml,nltr}`` vs their
 same-policy engine twins ``engine_req_s_{mlml,nltr}`` /
-``sharded_req_s_{d}d``, flagging runs where a kernel path fell behind
-its engine twin — including, since the §13 fast path, the sort-policy
-kernel series) and a two-panel figure.  BENCH_sched.json is the
+``sharded_req_s_{d}d`` / the §14 batched-pipeline e2e pairs
+``e2e_req_s_{kernel,jax}`` vs their same-backend sequential
+(lax.map-halo) twins ``e2e_seq_req_s_{kernel,jax}``, flagging runs
+where a kernel path fell behind its engine twin or a batched e2e fell
+behind its sequential twin) and a two-panel figure.  Each point also
+records the prep/sched/post stage wall times
+(``prep_s``/``sched_s_{kernel,jax}``/``post_s``) of the batched trial
+pipeline at the 64-client short-stream instance.  BENCH_sched.json is the
 IN-REPO file at the repo root (``sched_perf.BENCH_PATH``), one point
 per git sha (each point stamps ``git_dirty``) — re-running on the same
 commit replaces the point.  The roofline section formats whatever

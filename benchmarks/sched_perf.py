@@ -373,6 +373,108 @@ def kernel_per_client_throughput(n_servers: int = 100,
     return out
 
 
+@functools.lru_cache(maxsize=None)   # run_all + emit_bench_point share it
+def per_client_phase_breakdown(n_servers: int = 100,
+                               n_requests: int = 2000,
+                               window_size: int = 100,
+                               n_trials: int = 100, n_clients: int = 64,
+                               reps: int = 3, policy: str = "ect",
+                               threshold: float = 0.05
+                               ) -> Dict[str, float]:
+    """End-to-end ``run_trials`` throughput + the prep/sched/post phase
+    breakdown of the batched trial pipeline (DESIGN.md §14), per backend,
+    on the per_client contention instance — default the 64-client
+    SHORT-STREAM case (2000 requests over 64 clients = 32-request
+    slices), where the lax.map prep/post halo used to dominate the wall
+    clock.
+
+    * ``e2e_req_s_{kernel,jax}`` — jitted ``run_trials`` end-to-end
+      (workload sampling through TrialResult stack), aggregate
+      trials×requests / median wall seconds, batched pipeline
+      (``SimConfig.prep="batched"``, the default);
+    * ``e2e_seq_req_s_{kernel,jax}`` — the same dispatch with
+      ``prep="sequential"`` (the lax.map halo, the pre-§14 shape);
+    * ``e2e_speedup_{kernel,jax}`` — sequential wall / batched wall;
+    * ``prep_s`` / ``sched_s_{kernel,jax}`` / ``post_s`` (+ the
+      ``*_seq`` twins for prep/post) — each pipeline stage jitted and
+      timed alone (``cfg``/``policy``/``log_cfg`` are jit statics);
+    * ``e2e_batched_bit_exact`` — every TrialResult field of the
+      batched pipeline equals the sequential oracle, both backends.
+    """
+    import dataclasses
+
+    import jax
+    from repro.core import simulate
+    from repro.core.simulate import ScenarioConfig, SimConfig
+
+    out: Dict[str, float] = {
+        "n_servers": n_servers, "n_requests": n_requests,
+        "n_trials": n_trials, "n_clients": n_clients, "reps": reps,
+        "policy": policy}
+    key = jax.random.key(0)
+    rng = "lcg" if policy in ("trh", "nltr", "two_choice") else "jax"
+    pol = PolicyConfig(name=policy, threshold=threshold, rng=rng)
+    prep_jit = jax.jit(simulate._prep_trials, static_argnums=(1, 2))
+    sched_jit = jax.jit(simulate._sched_trials, static_argnums=(0, 1, 2))
+    post_jit = jax.jit(simulate._post_trials, static_argnums=(0,))
+    bit_exact = True
+    print(f"\n== per_client batched-pipeline breakdown ({n_servers} OSS x "
+          f"{n_requests} reqs x {n_trials} trials x {n_clients} clients, "
+          f"policy={policy}, median of {reps}) ==")
+    for backend in ("kernel", "jax"):
+        cfg = SimConfig(n_servers=n_servers, n_requests=n_requests,
+                        n_trials=n_trials, window_size=window_size,
+                        n_clients=n_clients, client_model="per_client",
+                        backend=backend,
+                        scenario=ScenarioConfig(name="transient"))
+        log_cfg = simulate.default_log_cfg(cfg)
+        cfg_seq = dataclasses.replace(cfg, prep="sequential")
+        dt_b, warm_b = _median_time(
+            lambda: simulate.run_trials(key, cfg, pol, log_cfg), reps)
+        dt_s, warm_s = _median_time(
+            lambda: simulate.run_trials(key, cfg_seq, pol, log_cfg), reps)
+        bit_exact &= bool(all(
+            (np.asarray(getattr(warm_b, f))
+             == np.asarray(getattr(warm_s, f))).all()
+            for f in warm_b._fields))
+        out[f"e2e_req_s_{backend}"] = n_trials * n_requests / dt_b
+        out[f"e2e_seq_req_s_{backend}"] = n_trials * n_requests / dt_s
+        out[f"e2e_speedup_{backend}"] = dt_s / dt_b
+        # stage breakdown: each stage jitted alone (prep/post batched
+        # AND sequential; scheduling is prep-agnostic so once per
+        # backend)
+        keys = jax.random.split(key, n_trials)
+        p_t, prep = _median_time(lambda: prep_jit(keys, cfg, log_cfg),
+                                 reps)
+        init, strag, works, states, traces, k_sched = prep
+        s_t, sched = _median_time(
+            lambda: sched_jit(cfg, pol, log_cfg, works, states, k_sched,
+                              traces), reps)
+        o_t, _ = _median_time(
+            lambda: post_jit(cfg, init, strag, works, traces, *sched),
+            reps)
+        out[f"sched_s_{backend}"] = s_t
+        if backend == "kernel":    # prep/post are backend-independent
+            out["prep_s"], out["post_s"] = p_t, o_t
+            ps_t, _ = _median_time(
+                lambda: prep_jit(keys, cfg_seq, log_cfg), reps)
+            os_t, _ = _median_time(
+                lambda: post_jit(cfg_seq, init, strag, works, traces,
+                                 *sched), reps)
+            out["prep_seq_s"], out["post_seq_s"] = ps_t, os_t
+        print(f"  {backend:>6s}: e2e {out[f'e2e_req_s_{backend}']:10.0f} "
+              f"req/s batched vs "
+              f"{out[f'e2e_seq_req_s_{backend}']:10.0f} sequential "
+              f"({out[f'e2e_speedup_{backend}']:.2f}x) | stages "
+              f"prep {p_t:.3f}s sched {s_t:.3f}s post {o_t:.3f}s")
+    out["e2e_batched_bit_exact"] = bit_exact
+    print(f"  prep {out['prep_s']:.3f}s vs sequential "
+          f"{out['prep_seq_s']:.3f}s; post {out['post_s']:.3f}s vs "
+          f"{out['post_seq_s']:.3f}s; TrialResult bit-exact: {bit_exact}"
+          + ("" if bit_exact else "  <-- DIVERGED"))
+    return out
+
+
 def _sharded_env(n_devices: int) -> Dict[str, str]:
     """Env for a sharded-worker subprocess: force ``n_devices`` host
     devices (replacing any count already in XLA_FLAGS) and make sure
@@ -600,6 +702,17 @@ def emit_bench_point(path: str = BENCH_PATH,
         if n_c == 16:
             point["kernel_per_client_bit_exact"] = \
                 pc.get("per_client_bit_exact")
+    # batched trial pipeline (DESIGN.md §14): end-to-end run_trials and
+    # the prep/sched/post phase breakdown at the 64-client short-stream
+    # instance — the case where the lax.map prep/post halo dominated
+    pb = per_client_phase_breakdown(n_servers=kernel_scale,
+                                    n_trials=batch_trials, n_clients=64)
+    for k in ("e2e_req_s_kernel", "e2e_req_s_jax",
+              "e2e_seq_req_s_kernel", "e2e_seq_req_s_jax",
+              "prep_s", "sched_s_kernel", "sched_s_jax", "post_s",
+              "prep_seq_s", "post_seq_s"):
+        point[k] = pb[k]
+    point["e2e_batched_bit_exact"] = pb["e2e_batched_bit_exact"]
     # sharded sweep series (DESIGN.md §12): the same full-scale sweep
     # through parallel/sweep.py at forced host device counts, one
     # subprocess each; env-gated because each count pays its own
@@ -687,6 +800,8 @@ def trajectory(path: str = BENCH_PATH,
                 "kernel_batch_req_s_mlml", "engine_req_s_mlml",
                 "kernel_batch_req_s_nltr", "engine_req_s_nltr",
                 "kernel_batch_req_s_per_client", "engine_req_s_per_client",
+                "e2e_req_s_kernel", "e2e_seq_req_s_kernel",
+                "e2e_req_s_jax", "e2e_seq_req_s_jax",
                 "sharded_req_s_8d", "sharded_engine_req_s_8d")
     print(f"\n== perf trajectory ({len(history)} runs, {path}) ==")
     print(f"{'run':>4s} {'when':>16s} " +
@@ -742,7 +857,16 @@ def trajectory(path: str = BENCH_PATH,
             se = pt.get(f"sharded_engine_req_s_{d_ct}d")
             if sk is not None and se is not None and sk < se:
                 behind.append(f"sharded_{d_ct}d")
-        flag = ("  <-- " + ", ".join(behind) + " BEHIND engine"
+        # batched-pipeline series compare ONLY against their SAME-backend
+        # sequential (lax.map-halo) twin — the regression the §14 batched
+        # prep/post exists to prevent is "batched slower than the halo",
+        # not "jax e2e slower than kernel e2e"
+        for be in ("kernel", "jax"):
+            eb = pt.get(f"e2e_req_s_{be}")
+            es = pt.get(f"e2e_seq_req_s_{be}")
+            if eb is not None and es is not None and eb < es:
+                behind.append(f"e2e_batched_{be}")
+        flag = ("  <-- " + ", ".join(behind) + " BEHIND baseline"
                 if behind else "")
         print(f"{i:>4d} " + " ".join(cells) + flag)
 
@@ -836,6 +960,61 @@ def run_smoke() -> None:
                                       n_clients=5, client_tile=2, reps=1,
                                       check_bit_exact=True)
     assert pc["per_client_bit_exact"], "per_client 2-D grid divergence"
+    # merged-p99 lane (DESIGN.md §14): on a small per_client grid the
+    # kernel's in-VMEM MET_P99 == the host `nearest_rank_p99` bisection
+    # over its merged latency block == the bisection over the jax
+    # grouped-block twin rebuilt from the request-order latencies
+    import jax
+    import jax.numpy as jnp
+    from repro.core import engine, policy_core, statlog
+    t_g, c_g, m_g, ws_g, per = 2, 3, 12, 4, 8
+    lcfg = statlog.LogConfig(n_servers=m_g)
+    ko, kl, kk2 = jax.random.split(jax.random.key(9), 3)
+    works = engine.Workload(
+        jax.random.randint(ko, (t_g, c_g, per), 0, 8 * m_g,
+                           dtype=jnp.int32),
+        jax.random.uniform(kl, (t_g, c_g, per), minval=1.0, maxval=4.0),
+        jnp.ones((t_g, c_g, per), bool).at[:, -1, per // 2:].set(False))
+    states = jax.tree.map(
+        lambda a: jnp.broadcast_to(a, (t_g, c_g) + a.shape),
+        statlog.init_state(lcfg))
+    gkeys = jax.vmap(lambda k_: jax.random.split(k_, c_g))(
+        jax.random.split(kk2, t_g))
+    res_g, _, merged = engine.run_stream_batch(
+        states, works, gkeys,
+        policy=PolicyConfig(name="ect", threshold=0.05), log_cfg=lcfg,
+        window_size=ws_g, backend="kernel")
+    host = policy_core.nearest_rank_p99(
+        merged.lats.reshape(t_g, -1),
+        merged.lats_valid.reshape(t_g, -1) != 0.0)[:, 0]
+    assert (np.asarray(merged.metrics[:, policy_core.MET_P99])
+            == np.asarray(host)).all(), "kernel MET_P99 != host bisection"
+    g_lat, g_val = engine.grouped_latency_block(works, res_g.latencies,
+                                                ws_g)
+    twin = policy_core.nearest_rank_p99(
+        g_lat.reshape(t_g, -1), g_val.reshape(t_g, -1))[:, 0]
+    assert (np.asarray(host) == np.asarray(twin)).all(), \
+        "kernel merged latency block != jax grouped-block twin"
+    print("  merged p99 (in-VMEM block vs host bisection vs jax twin) "
+          "bit-exact: True")
+    # batched trial pipeline (DESIGN.md §14): the vmapped prep/post
+    # stack must equal the lax.map sequential oracle bit-for-bit
+    import dataclasses
+    from repro.core import simulate
+    from repro.core.simulate import ScenarioConfig, SimConfig
+    cfg_b = SimConfig(n_servers=24, n_requests=240, n_trials=5,
+                      window_size=60, backend="kernel",
+                      scenario=ScenarioConfig(name="transient"))
+    log_b = simulate.default_log_cfg(cfg_b)
+    pol_b = PolicyConfig(name="ect", threshold=0.05)
+    key_b = jax.random.key(0)
+    r_bat = simulate.run_trials(key_b, cfg_b, pol_b, log_b)
+    r_seq = simulate.run_trials(
+        key_b, dataclasses.replace(cfg_b, prep="sequential"), pol_b, log_b)
+    assert all((np.asarray(getattr(r_bat, f))
+                == np.asarray(getattr(r_seq, f))).all()
+               for f in r_bat._fields), "batched prep != sequential oracle"
+    print("  batched prep/post pipeline bit-exact vs lax.map oracle: True")
     # sharded sweep (DESIGN.md §12) when the process has devices to
     # shard over (CI's multidevice job forces 8): the whole mesh=(dc,)
     # sweep must be bit-exact vs this process's single-device dispatch,

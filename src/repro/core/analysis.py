@@ -16,6 +16,8 @@ from typing import Dict, Optional, Tuple
 
 import numpy as np
 
+from repro.core import policy_core
+
 
 def _np(a) -> np.ndarray:
     return np.asarray(a)
@@ -102,12 +104,31 @@ def latency_stats(latencies) -> Dict[str, float]:
     ``latencies``: (R,) or (T, R) seconds (temporal model).  Percentiles
     pool all trials' requests — the paper-scale question is "what does the
     99th-percentile request see", not "the 99th-percentile trial".
+
+    Two p99 definitions coexist (pinned against a hand-computed example
+    in tests/test_simulate.py):
+
+    * ``p99`` — ``np.percentile``'s LINEAR-interpolated quantile (a
+      weighted average of the two order statistics straddling rank
+      0.99·(n-1)+1), kept for the figures so existing plots don't move;
+    * ``p99_nearest`` — the NEAREST-RANK definition (the smallest value
+      with at least ``ceil(0.99·n)`` values ≤ it), computed by the SAME
+      `policy_core.nearest_rank_p99` f32 value bisection the kernel
+      runs on its in-VMEM merged latency block (DESIGN.md §14) — the
+      host-side number that matches ``MET_P99`` / ``SweepMerge.p99``
+      bit-for-bit.  Nearest-rank is always an actual observed latency;
+      linear interpolation generally is not, so the two differ whenever
+      0.99·n falls between order statistics.
     """
     lat = _np(latencies).astype(np.float64).reshape(-1)
+    lat32 = lat.astype(np.float32)
+    p99_nr = policy_core.nearest_rank_p99(
+        lat32, np.ones(lat32.shape, bool), xp=np)
     return {
         "p50": float(np.percentile(lat, 50)),
         "p95": float(np.percentile(lat, 95)),
         "p99": float(np.percentile(lat, 99)),
+        "p99_nearest": float(np.asarray(p99_nr).reshape(-1)[0]),
         "mean": float(lat.mean()),
         "max": float(lat.max()),
     }

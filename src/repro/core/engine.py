@@ -243,6 +243,53 @@ def _window_rates(state: SchedState, trace: Optional[ClusterTrace],
     return jnp.broadcast_to(state.rates, (n_win, state.n_servers))
 
 
+def grouped_latency_block(works: Workload, latencies: jax.Array,
+                          window_size: int, group_steps: bool = True
+                          ) -> Tuple[jax.Array, jax.Array]:
+    """Recover the kernel's MERGED LATENCY BLOCK on the jax backend
+    (DESIGN.md §14): grouped-step latencies + validity per stream.
+
+    The kernel path schedules pre-grouped streams, so its in-VMEM block
+    (``ClientMerge.lats``/``lats_valid``) holds GROUPED-STEP latencies;
+    `run_stream` instead scatters step latencies back to original
+    request order (duplicate same-object requests share their step's
+    bits).  This helper replays the identical window split + grouping
+    and recovers each step's latency with a ``segment_min`` over its
+    requests — pure selection over identical f32 values, so the result
+    is bit-exact with the kernel block's multiset and
+    `policy_core.nearest_rank_p99` over either is bit-identical.
+
+    ``works`` fields and ``latencies`` share a shape ``(..., R)`` with
+    any number of leading batch axes; returns ``(lats, valid)`` shaped
+    ``(..., N)`` where ``N = ceil(R / window_size) * window_size``
+    (invalid steps masked to 0.0; ``valid`` is bool).
+    """
+
+    def one(obj_r, len_r, val_r, lat_r):
+        n_win, obj, lens, val = _window_split(
+            Workload(object_ids=obj_r, lengths=len_r, valid=val_r),
+            window_size)
+        pad = n_win * window_size - obj_r.shape[0]
+        lat_p = (jnp.concatenate([lat_r, jnp.zeros((pad,), lat_r.dtype)])
+                 if pad else lat_r)
+        lat_w = lat_p.reshape(n_win, window_size)
+        if not group_steps:
+            return (jnp.where(val, lat_w, 0.0).reshape(-1),
+                    val.reshape(-1))
+        grouped, req_to_step = jax.vmap(group_by_object_with_map)(
+            Workload(object_ids=obj, lengths=lens, valid=val))
+        g_lat = jax.vmap(lambda lr, mp, v: jax.ops.segment_min(
+            jnp.where(v, lr, jnp.float32(jnp.inf)), mp,
+            num_segments=window_size))(lat_w, req_to_step, val)
+        g_lat = jnp.where(grouped.valid, g_lat, 0.0)
+        return g_lat.reshape(-1), grouped.valid.reshape(-1)
+
+    fn = one
+    for _ in range(latencies.ndim - 1):
+        fn = jax.vmap(fn)
+    return fn(works.object_ids, works.lengths, works.valid, latencies)
+
+
 def run_stream(state: SchedState, work: Workload, key: jax.Array, *,
                policy: P.PolicyConfig, log_cfg: LogConfig, window_size: int,
                group_steps: bool = True,
@@ -440,10 +487,23 @@ class ClientMerge(NamedTuple):
     contention model's "typical client" view, merged over REAL clients
     (a client is real iff its slice scheduled at least one valid
     request; phantom padded clients are masked out with the
-    `policy_core.masked_client_sum` association)."""
+    `policy_core.masked_client_sum` association).
+
+    ``lats``/``lats_valid`` are the MERGED LATENCY BLOCK (DESIGN.md
+    §14): every client's grouped-step latencies (masked to 0 where
+    invalid) and 0/1 validity, accumulated in VMEM across the client
+    grid steps.  With ``merge_mean=True`` the kernel has already
+    bisected the trial's cross-client nearest-rank p99 out of it into
+    ``metrics[:, MET_P99]``; with ``merge_mean=False`` (the sharded
+    sweep) the lane is 0 and the raw block ships so
+    `parallel.sweep.run_sweep` can all-gather it and bisect the GLOBAL
+    p99 once — `policy_core.nearest_rank_p99` is order- and
+    layout-insensitive, so the gather order cannot drift it."""
 
     window_loads_mean: jax.Array  # (T, W, M) masked client-mean snapshots
     metrics: jax.Array            # (T, N_CMETRICS) merged MET_* rows
+    lats: jax.Array               # (T, C, N) masked grouped-step latencies
+    lats_valid: jax.Array         # (T, C, N) 0/1 f32 validity
 
 
 def run_stream_batch(states: SchedState, works: Workload, keys: jax.Array, *,
@@ -568,12 +628,13 @@ def run_stream_batch(states: SchedState, works: Workload, keys: jax.Array, *,
               policy=policy.name, observe=observe, renorm=log_cfg.renorm,
               nltr_n=policy.nltr_n, probe_choices=policy.probe_choices)
     if two_d:
-        choices, lats, tables, wloads, metrics, cm_wl, cm_met = \
-            kops.sched_stream_grid(
-                g_obj, g_lens, g_val, states.log, seeds, win_rates,
-                trial_tile=trial_tile, client_tile=client_tile,
-                merge_mean=merge_mean, **kw)
-        merged = ClientMerge(window_loads_mean=cm_wl, metrics=cm_met)
+        (choices, lats, tables, wloads, metrics,
+         cm_wl, cm_met, cm_lats, cm_lval) = kops.sched_stream_grid(
+            g_obj, g_lens, g_val, states.log, seeds, win_rates,
+            trial_tile=trial_tile, client_tile=client_tile,
+            merge_mean=merge_mean, **kw)
+        merged = ClientMerge(window_loads_mean=cm_wl, metrics=cm_met,
+                             lats=cm_lats, lats_valid=cm_lval)
     else:
         choices, lats, tables, wloads, metrics = kops.sched_stream_batch(
             g_obj, g_lens, g_val, states.log, seeds, win_rates,

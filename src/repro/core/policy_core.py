@@ -56,12 +56,14 @@ N_METRICS = 5
 MET_NAMES = ("makespan", "p99_lat", "lat_sum", "lat_max", "n_valid")
 MET_PAD = 128          # kernel metrics row padded to one f32 lane tile
 
-# Cross-client merged metrics (DESIGN.md §11): the 2-D (trials × clients)
-# grid kernel reduces its clients' per-stream metric rows into one
-# per-TRIAL row before the block retires — lanes [0, N_METRICS) keep the
-# MET_* meaning merged over REAL clients (makespan/lat_max by max,
-# lat_sum/n_valid through `masked_client_sum`; the p99 lane is 0 — a
-# cross-client quantile would need the merged latency block), plus the
+# Cross-client merged metrics (DESIGN.md §11/§14): the 2-D (trials ×
+# clients) grid kernel reduces its clients' per-stream metric rows into
+# one per-TRIAL row before the block retires — lanes [0, N_METRICS) keep
+# the MET_* meaning merged over REAL clients (makespan/lat_max by max,
+# lat_sum/n_valid through `masked_client_sum`; the p99 lane is the
+# nearest-rank p99 of the MERGED latency block the kernel accumulates in
+# VMEM across its client grid steps — `nearest_rank_p99` is layout- and
+# order-insensitive, so merging needs no association contract), plus the
 # real-client count.  `client_stream_metrics` below is the bit-exact
 # host/engine twin.
 MET_N_CLIENTS = 5
@@ -69,12 +71,17 @@ N_CMETRICS = 6
 CMET_NAMES = MET_NAMES + ("n_clients",)
 
 # Clients per program-instance block in the 2-D grid (DESIGN.md §11).
-# Like the trial tile, 8 keeps stream-sublane counts at multiples of the
+# Like the trial tile it keeps stream-sublane counts at multiples of the
 # native f32 sublane count; it is ALSO an association parameter — the
 # cross-client float merges sum client blocks of this width (see
 # `masked_client_sum`) — so the jax path resolves it through
-# `resolve_client_tile` too, even when no kernel runs.
-DEFAULT_CLIENT_TILE = 8
+# `resolve_client_tile` too, even when no kernel runs.  32 (up from 8,
+# DESIGN.md §14): per_client blocks stay small because the per-client
+# slice shrinks as the client count grows (tt·ct·per ≈ tt·R floats once
+# C ≥ ct), and a deeper tile quarters the grid's program count — at the
+# 64-client short-stream instance that measured 1.4× end-to-end under
+# interpret, where per-program dispatch dominates.
+DEFAULT_CLIENT_TILE = 32
 
 
 def resolve_client_tile(n_clients: int, client_tile=None) -> int:
@@ -534,6 +541,55 @@ def renormalize_probs(probs, xp=jnp):
     return p / lane_sum(p)
 
 
+def absorb_probs(loads, lam: float, m: int, xp=jnp):
+    """Probability row absorbing known initial loads — the vectorized
+    fixed point of Eq. (2): ``p_i ∝ (1/M) · e^{-l_i/λ}`` (DESIGN.md §14).
+
+    The normalization runs through :func:`lane_sum` so the batched trial
+    prep (vmapped over the trial axis, ``(T, M)`` rows) and the
+    sequential ``lax.map`` prep (``(M,)`` rows) associate the sum
+    identically — the halving tree is batch-shape-invariant, whereas
+    ``jnp.sum``'s reduction tree is a lowering choice that may differ
+    between the two contexts.  Works on any ``(..., M)`` batch."""
+    if xp is np:
+        p = np.exp(-loads / lam) / m
+        return p / p.sum(axis=-1, keepdims=True)
+    p = jnp.exp(-loads / lam) / m
+    return p / lane_sum(p)
+
+
+def server_segment_sum(values, idx, m: int, xp=jnp, block: int = 128):
+    """Pinned per-server float sum: ``out[s] = Σ values[r] · [idx[r] == s]``
+    with an EXPLICIT association no backend may reshuffle — sequential
+    (ascending) over ``ceil(R / block)`` request chunks, each chunk's
+    one-hot contributions folded by :func:`tree_sum` over the request
+    axis (DESIGN.md §14).
+
+    ``jax.ops.segment_sum`` lowers to a scatter-add whose duplicate-index
+    combine order is a backend choice that may differ between the vmapped
+    batched post step and the per-trial ``lax.map`` oracle; this
+    formulation is the same in both contexts by construction (the chunk
+    walk mirrors `masked_client_sum`'s sequential-over-blocks /
+    tree-within-block shape).  Integer sums don't need it — they are
+    exact under any order.  ``values``/``idx``: (..., R); returns
+    (..., m)."""
+    r = values.shape[-1]
+    n_blocks = max(-(-r // block), 1)
+    if xp is np:
+        lane = np.arange(m, dtype=np.int64)
+    else:
+        lane = jnp.arange(m, dtype=jnp.int32)
+    out = None
+    for b in range(n_blocks):
+        v = values[..., b * block:(b + 1) * block]
+        i = idx[..., b * block:(b + 1) * block]
+        onehot = i[..., :, None] == lane            # (..., blk, m)
+        contrib = xp.where(onehot, v[..., :, None], xp.zeros_like(v)[..., None])
+        blk_sum = tree_sum(contrib, axis=-2, xp=xp)[..., 0, :]
+        out = blk_sum if out is None else out + blk_sum
+    return out
+
+
 def window_decrements(rates, dt, xp=jnp):
     """Per-window drain decrement ``max(rates, 1e-6) * dt`` — computed
     ONCE, outside the fused loop body that subtracts it.
@@ -741,20 +797,34 @@ def masked_client_max(x, client_valid, xp=jnp):
     return xp.max(_mask_clients(x, client_valid, xp), axis=0)
 
 
-def client_stream_metrics(metrics, client_valid, client_tile: int, xp=jnp):
+def client_stream_metrics(metrics, client_valid, client_tile: int, xp=jnp,
+                          merged_lats=None, merged_valid=None):
     """Merge per-client stream-metric rows into the per-trial row the 2-D
-    grid kernel fuses in-VMEM (DESIGN.md §11).  ``metrics``:
+    grid kernel fuses in-VMEM (DESIGN.md §11/§14).  ``metrics``:
     (C, >= N_METRICS) per-client rows (:func:`stream_metrics` layout);
     ``client_valid``: (C,) bool.  Returns (N_CMETRICS,) f32 in ``MET_*``
-    + ``MET_N_CLIENTS`` order; the cross-client p99 lane is 0 (a merged
-    quantile would need the merged latency block)."""
+    + ``MET_N_CLIENTS`` order.
+
+    ``merged_lats``/``merged_valid``: the (C, N) per-client grouped-step
+    latency block and its validity — when given, the cross-client p99
+    lane is :func:`nearest_rank_p99` over the flattened merged block
+    (every reduction in it — counts of exact 0/1 floats, min/max — is
+    order- and layout-insensitive, so ANY client/step ordering of the
+    same multiset gives identical bits; the kernel's VMEM accumulation
+    order needs no association contract, DESIGN.md §14).  When omitted
+    the lane is 0 — the pre-merged-block behaviour."""
     f32 = jnp.float32 if xp is jnp else np.float32
     metrics = metrics.astype(f32)
     mx = masked_client_max(metrics, client_valid, xp)
     sm = masked_client_sum(metrics, client_valid, client_tile, xp)
     n_real = masked_client_sum(xp.ones(client_valid.shape, f32),
                                client_valid, client_tile, xp)
-    return xp.stack([mx[MET_MAKESPAN], xp.zeros((), f32),
+    if merged_lats is None:
+        p99 = xp.zeros((), f32)
+    else:
+        p99 = nearest_rank_p99(merged_lats.reshape(-1),
+                               merged_valid.reshape(-1), xp)[0]
+    return xp.stack([mx[MET_MAKESPAN], p99,
                      sm[MET_LAT_SUM], mx[MET_LAT_MAX], sm[MET_N_VALID],
                      n_real])
 

@@ -130,6 +130,14 @@ class SimConfig:
     # cross-client merge association (`policy_core.masked_client_sum`),
     # so it is resolved identically on the jax backend.
     client_tile: Optional[int] = None
+    # trial prep/post halo dispatch (DESIGN.md §14): "batched" traces
+    # `_trial_setup` / `_trial_result` ONCE for the whole trial batch
+    # (vmap) — bit-identical to the sequential shapes because the
+    # shape-sensitive reductions inside go through pinned association
+    # primitives (`policy_core.absorb_probs` / `server_segment_sum`);
+    # "sequential" is the lax.map escape hatch, the per-trial-shape
+    # parity oracle the batched path is asserted against.
+    prep: str = "batched"
     # device mesh of the sharded sweep dispatch (parallel/sweep.py,
     # DESIGN.md §12): None = single-device; ``(t_dev,)`` shards the
     # trial axis over t_dev devices; ``(t_dev, c_dev)`` also shards the
@@ -157,6 +165,11 @@ class SimConfig:
         if self.backend not in ("jax", "kernel"):
             raise ValueError(
                 f"backend={self.backend!r} must be 'jax' or 'kernel'")
+        if self.prep not in ("batched", "sequential"):
+            raise ValueError(
+                f"prep={self.prep!r} must be 'batched' (vmapped trial "
+                "prep/post, DESIGN.md §14) or 'sequential' (the lax.map "
+                "parity oracle)")
         if self.n_clients < 1:
             raise ValueError(
                 f"n_clients={self.n_clients!r} must be >= 1 (the "
@@ -274,8 +287,17 @@ def initial_loads(key: jax.Array, cfg: SimConfig) -> Tuple[jax.Array, jax.Array]
     the run's expected per-server load, not the (small) initial load.
     """
     k_norm, k_strag = jax.random.split(key)
-    loads = cfg.init_load_mean + cfg.init_load_std * jax.random.normal(
-        k_norm, (cfg.n_servers,))
+    # FMA guard (DESIGN.md §9, the `window_decrements` clamp idiom):
+    # a multiply DIRECTLY feeding the add may contract to an FMA, and
+    # whether it does was observed to depend on the lowering context —
+    # the vmapped (T,)-batched prep of §14 fused where the per-trial
+    # lax.map shape did not, a 1-ulp drift breaking the batched ==
+    # sequential prep contract.  min(max(x, -big), big) is a bit-exact
+    # identity on any f32 the normal can produce, but the add's operand
+    # is now a clamp, not a multiply, so no backend contracts it.
+    big = jnp.float32(3.4e38)
+    noise = cfg.init_load_std * jax.random.normal(k_norm, (cfg.n_servers,))
+    loads = cfg.init_load_mean + jnp.minimum(jnp.maximum(noise, -big), big)
     loads = jnp.maximum(loads, 0.0)
     n_strag = int(round(cfg.straggler_frac * cfg.n_servers))
     mask = jnp.zeros((cfg.n_servers,), bool)
@@ -284,7 +306,8 @@ def initial_loads(key: jax.Array, cfg: SimConfig) -> Tuple[jax.Array, jax.Array]
                                 replace=False)
         mask = mask.at[idx].set(True)
         extra = cfg.straggler_factor * expected_server_load_mb(cfg)
-        loads = loads + mask * extra
+        # same guard: the injected extra is nonnegative by construction
+        loads = loads + jnp.maximum(mask * extra, 0.0)
     return loads.astype(jnp.float32), mask
 
 
@@ -294,11 +317,12 @@ def absorb_initial_loads(state: SchedState, loads: jax.Array,
 
     This is the vectorized fixed point of applying Eq. (2) once per server
     for its initial load, then renormalizing — how a client that has been
-    running for a while would see the cluster.
+    running for a while would see the cluster.  The math lives in
+    `policy_core.absorb_probs`, whose `lane_sum` normalizer makes the
+    batched (T, M) prep of DESIGN.md §14 associate bit-identically to
+    this per-trial shape.
     """
-    m = state.n_servers
-    probs = jnp.exp(-loads / log_cfg.lam) / m
-    probs = probs / jnp.sum(probs)
+    probs = policy_core.absorb_probs(loads, log_cfg.lam, state.n_servers)
     return state.with_rows(loads=loads.astype(jnp.float32),
                            probs=probs.astype(jnp.float32))
 
@@ -398,18 +422,30 @@ def _trial_result(cfg: SimConfig, window_dt: float, init, strag_mask, work,
     ``phase_time`` overrides the host-side makespan reduction — the
     kernel paths pass the fused in-VMEM metric (bit-equal: ``max`` is
     order-free and grouped steps share their duplicates' latency), the
-    per_client jax path the masked cross-client max."""
-    written = jax.ops.segment_sum(work.lengths, chosen,
-                                  num_segments=cfg.n_servers)
+    per_client jax path the masked cross-client max.
+
+    The f32 per-server sum goes through `policy_core.server_segment_sum`
+    (pinned one-hot + tree_sum association, DESIGN.md §14) so the
+    batched (T, R) post and this per-trial shape produce bit-identical
+    loads; the integer request count keeps the backend ``segment_sum``
+    (integer adds are exact under any association)."""
+    written = policy_core.server_segment_sum(work.lengths, chosen,
+                                             cfg.n_servers)
     n_assigned = jax.ops.segment_sum(jnp.ones_like(chosen), chosen,
                                      num_segments=cfg.n_servers)
     if cfg.scenario is not None:
         strag_mask = strag_mask | trace_straggler_mask(trace, cfg.scenario)
     hits = jnp.sum(strag_mask[chosen])
     if phase_time is None:
-        # completion estimate = window open time + queueing latency
-        w_open = (jnp.arange(cfg.n_requests) // cfg.window_size) * window_dt
-        completion = w_open.astype(jnp.float32) + latencies
+        # completion estimate = window open time + queueing latency.
+        # max(·, 0) is the §9 FMA guard (a window open time is
+        # nonnegative by construction): the add's operand must not be a
+        # multiply, or the batched §14 post contracts it where the
+        # sequential shape does not.
+        w_open = jnp.maximum(
+            (jnp.arange(cfg.n_requests) // cfg.window_size).astype(
+                jnp.float32) * jnp.float32(window_dt), 0.0)
+        completion = w_open + latencies
         phase_time = jnp.max(completion)
     if window_size_eff is None:
         window_size_eff = cfg.window_size
@@ -488,20 +524,46 @@ def _split_clients(works: Workload, c: int, per: int, pad: int) -> Workload:
                     valid=sp(works.valid, False))
 
 
-def _run_batched(keys: jax.Array, cfg: SimConfig, policy: PolicyConfig,
-                 log_cfg: LogConfig) -> TrialResult:
-    """THE trial runner: one batched dispatch for every client_model x
-    backend combination (DESIGN.md §9/§11).
+def _resolved_window_dt(cfg: SimConfig) -> float:
+    return (resolve_window_dt(cfg, cfg.scenario)
+            if cfg.scenario is not None else 0.0)
 
-    Per-trial setup and TrialResult bookkeeping run under ``lax.map`` —
-    NOT ``vmap`` — on purpose: mapping traces the per-trial computation
-    at the exact shapes of the sequential `run_one_trial` path, so
-    sampled workloads, absorbed initial tables and per-server sums are
-    bit-identical to it (vmapped elementwise ops may pick different
-    reduction/contraction lowerings at batched shapes).  Only the
-    scheduling itself is batch-dispatched: ONE pallas_call for the
-    kernel backend (trial grid, or the 2-D trials x clients grid under
-    per_client), the vmapped lax.scan engine for the jax backend.
+
+def _prep_trials(keys: jax.Array, cfg: SimConfig, log_cfg: LogConfig):
+    """Stage 1 of the batched pipeline (DESIGN.md §14): per-trial
+    simulation inputs for the whole (T,) key batch in ONE traced
+    program.
+
+    ``cfg.prep == "batched"`` vmaps `_trial_setup`; the shape-sensitive
+    reduction inside (the Eq. (2) absorb normalizer) goes through
+    `policy_core.absorb_probs`, whose `lane_sum` halving tree is
+    batch-shape-invariant, so the vmapped tables are bit-identical to
+    ``"sequential"`` — the ``lax.map`` escape hatch that traces each
+    trial at the exact per-trial shapes of `run_one_trial` (the parity
+    oracle, asserted in tests/test_simulate.py)."""
+    one = lambda k: _trial_setup(k, cfg, log_cfg)  # noqa: E731
+    if cfg.prep == "sequential":
+        return jax.lax.map(one, keys)
+    out = jax.vmap(one)(keys)
+    # fusion fence (DESIGN.md §14): without it XLA fuses downstream
+    # scheduling ops INTO the vmapped setup graph, and the changed
+    # fusion context was observed to alter the codegen of the setup's
+    # transcendentals (the absorb exp / the normal's erfinv) by 1 ulp
+    # vs the sequential oracle — whose scan loop boundary is an
+    # implicit fence.  The barrier makes the batched stage the same
+    # isolated compilation unit the scan body is.
+    return jax.lax.optimization_barrier(out)
+
+
+def _sched_trials(cfg: SimConfig, policy: PolicyConfig, log_cfg: LogConfig,
+                  works: Workload, states, k_sched: jax.Array, traces):
+    """Stage 2 of the batched pipeline: the scheduling dispatch + the
+    cross-client fold, (T,)-batched throughout.
+
+    ONE pallas_call for the kernel backend (trial grid, or the 2-D
+    trials x clients grid under per_client), the vmapped lax.scan
+    engine for the jax backend, the shard_map'd sweep when
+    ``cfg.mesh_shape`` is set.
 
     per_client (the contention model): each trial's request stream is
     partitioned over ``n_clients`` private logs that share the trial's
@@ -511,14 +573,16 @@ def _run_batched(keys: jax.Array, cfg: SimConfig, policy: PolicyConfig,
     every cross-client aggregate — window_loads mean, probe sum, phase
     makespan — masks phantom clients and merges with the
     `policy_core.masked_client_sum` association, so the kernel's
-    in-VMEM merge is bit-identical to the jax path's."""
+    in-VMEM merge is bit-identical to the jax path's.
+
+    Returns ``(chosen, probes, redirected, latencies, wl, phase)`` in
+    original request order; ``phase`` is None when no fused/folded
+    makespan exists (shared_log jax) and `_post_trials` reduces it
+    host-side."""
     per_client = cfg.client_model == "per_client"
-    window_dt = (resolve_window_dt(cfg, cfg.scenario)
-                 if cfg.scenario is not None else 0.0)
+    window_dt = _resolved_window_dt(cfg)
     observe = _observe(cfg)
-    t = keys.shape[0]
-    init, strag_mask, works, states, traces, k_sched = jax.lax.map(
-        lambda k: _trial_setup(k, cfg, log_cfg), keys)
+    t = k_sched.shape[0]
 
     if per_client:
         c, per, pad, win = _client_split_shape(cfg)
@@ -603,17 +667,57 @@ def _run_batched(keys: jax.Array, cfg: SimConfig, policy: PolicyConfig,
             res.window_loads
         phase = (metrics[:, policy_core.MET_MAKESPAN]
                  if metrics is not None else None)
+    return chosen, probes, redirected, latencies, wl, phase
 
+
+def _post_trials(cfg: SimConfig, init, strag_mask, works: Workload, traces,
+                 chosen, probes, redirected, latencies, wl,
+                 phase) -> TrialResult:
+    """Stage 3 of the batched pipeline: the whole (T,) TrialResult stack
+    from one traced `_trial_result` program.
+
+    ``cfg.prep == "batched"`` vmaps it; every op inside is exact under
+    batching — gathers, bool masks, integer segment sums, order-free
+    maxes — except the f32 per-server load sum, which goes through the
+    pinned `policy_core.server_segment_sum` association, so the stack is
+    bit-identical to the ``"sequential"`` ``lax.map`` oracle."""
+    window_dt = _resolved_window_dt(cfg)
+    win = (_client_split_shape(cfg)[3]
+           if cfg.client_model == "per_client" else cfg.window_size)
     xs = (init, strag_mask, works, traces, chosen, probes, redirected,
           latencies, wl)
     if phase is not None:
-        return jax.lax.map(
-            lambda x: _trial_result(cfg, window_dt, *x[:-1],
-                                    phase_time=x[-1], window_size_eff=win),
-            xs + (phase,))
-    return jax.lax.map(
-        lambda x: _trial_result(cfg, window_dt, *x, window_size_eff=win),
-        xs)
+        one = lambda x: _trial_result(  # noqa: E731
+            cfg, window_dt, *x[:-1], phase_time=x[-1], window_size_eff=win)
+        xs = xs + (phase,)
+    else:
+        one = lambda x: _trial_result(  # noqa: E731
+            cfg, window_dt, *x, window_size_eff=win)
+    if cfg.prep == "sequential":
+        return jax.lax.map(one, xs)
+    # fusion fence on the INPUT side (same §14 story as `_prep_trials`):
+    # keeps the scheduling stage's producers from fusing into the
+    # vmapped bookkeeping graph, matching the sequential oracle's scan
+    # loop boundary.
+    return jax.vmap(one)(jax.lax.optimization_barrier(xs))
+
+
+def _run_batched(keys: jax.Array, cfg: SimConfig, policy: PolicyConfig,
+                 log_cfg: LogConfig) -> TrialResult:
+    """THE trial runner: one batched dispatch for every client_model x
+    backend combination (DESIGN.md §9/§11), composed from the three
+    (T,)-batched pipeline stages (DESIGN.md §14) — `_prep_trials`
+    (workloads / initial loads / absorbed tables / traces),
+    `_sched_trials` (the scheduling dispatch + cross-client fold) and
+    `_post_trials` (the TrialResult bookkeeping stack).  Each stage is
+    independently jittable with ``cfg``/``policy``/``log_cfg`` static,
+    which is how `benchmarks/sched_perf.py` times the prep/sched/post
+    phase breakdown."""
+    prep = _prep_trials(keys, cfg, log_cfg)
+    init, strag_mask, works, states, traces, k_sched = prep
+    sched = _sched_trials(cfg, policy, log_cfg, works, states, k_sched,
+                          traces)
+    return _post_trials(cfg, init, strag_mask, works, traces, *sched)
 
 
 @functools.partial(jax.jit, static_argnames=("cfg", "policy", "log_cfg"))

@@ -144,15 +144,21 @@ def _sched_stream_kernel(objs_ref, lens_ref, valid_ref, table_ref, seed_ref,
     table scratch.  2-D (trials × clients) grid form (DESIGN.md §11):
     per-stream refs carry ``(t_tile, client_tile)`` leading axes, the
     per-trial rate/decrement refs stay client-shared ``(t_tile, ...)``,
-    and ``rest`` is ``(cm_wloads_ref, cm_metrics_ref, tbl)`` — the two
-    per-TRIAL cross-client accumulators revisited across the client grid
-    dimension, plus the scratch.  The decision loop itself is identical:
-    the ``t_tile * client_tile`` independent streams ride the sublane
-    axis exactly like trials do in the 1-D form."""
+    and ``rest`` is ``(cm_wloads_ref, cm_metrics_ref, cm_lats_ref,
+    cm_lval_ref, tbl)`` — the per-TRIAL cross-client accumulators
+    revisited across the client grid dimension (merged metric row,
+    window-load sums, and the MERGED LATENCY BLOCK of DESIGN.md §14:
+    each client grid step deposits its clients' masked grouped-step
+    latencies and validity into a ``(t_tile, C_pad, N)`` VMEM-resident
+    pair, so the last step can reduce the cross-client nearest-rank p99
+    while the whole merged block is still on-chip), plus the scratch.
+    The decision loop itself is identical: the ``t_tile * client_tile``
+    independent streams ride the sublane axis exactly like trials do in
+    the 1-D form."""
     m = n_servers
     grid_2d = client_tile > 0
     if grid_2d:
-        cm_wloads_ref, cm_metrics_ref, tbl = rest
+        cm_wloads_ref, cm_metrics_ref, cm_lats_ref, cm_lval_ref, tbl = rest
         s_tile = t_tile * client_tile
 
         def req_read(ref, start, size):
@@ -571,6 +577,21 @@ def _sched_stream_kernel(objs_ref, lens_ref, valid_ref, table_ref, seed_ref,
                                         jnp.maximum(prev, blk_row),
                                         prev + blk_row)
 
+    # -- merged latency block (DESIGN.md §14): deposit this block's
+    # clients' masked grouped-step latencies into the per-TRIAL
+    # (t_tile, C_pad, N) accumulator pair.  Each client grid step owns a
+    # disjoint client slice, so every column is written exactly once per
+    # trial row — no init/accumulate split needed.  Values are masked to
+    # 0 where invalid (phantom clients are all-invalid, so they deposit
+    # exact zeros) with the validity shipped alongside as 0/1 f32.
+    n_req = n_windows * window_size
+    lat_blk = jnp.reshape(jnp.where(val_all, lats_all, 0.0),
+                          (t_tile, client_tile, n_req))
+    val_blk = jnp.reshape(jnp.where(val_all, 1.0, 0.0),
+                          (t_tile, client_tile, n_req))
+    cm_lats_ref[:, pl.ds(j * client_tile, client_tile), :] = lat_blk
+    cm_lval_ref[:, pl.ds(j * client_tile, client_tile), :] = val_blk
+
     if merge_mean:
         @pl.when(j == n_client_blocks - 1)
         def _finish_merge():
@@ -586,6 +607,48 @@ def _sched_stream_kernel(objs_ref, lens_ref, valid_ref, table_ref, seed_ref,
                              axis=-1, keepdims=True)      # (t_tile, 1)
             denom = jnp.maximum(n_real, 1.0)[:, :, None]  # (t_tile, 1, 1)
             cm_wloads_ref[...] = cm_wloads_ref[...] / denom
+
+        @pl.when(j == n_client_blocks - 1)
+        def _finish_p99():
+            # cross-client merged nearest-rank p99 (DESIGN.md §14): the
+            # whole merged latency block is VMEM-resident now — run the
+            # SAME f32 value bisection as the per-stream fused metrics
+            # over the flattened (C_pad * N) merged lanes and land the
+            # result in the one cm_metrics lane the client-step
+            # accumulation left at 0.  Every reduction here (counts of
+            # exact 0/1 floats, min/max) is order- and layout-
+            # insensitive, so this matches `policy_core.nearest_rank_p99`
+            # on the host's merged block bit-for-bit regardless of how
+            # the clients were deposited.  ``merge_mean=False`` (the
+            # sharded sweep) skips it — a local p99 is not composable
+            # across devices; the sweep gathers the raw blocks and
+            # bisects once, globally (parallel/sweep.py).
+            c_pad = n_client_blocks * client_tile
+            lats_m = jnp.reshape(cm_lats_ref[...], (t_tile, c_pad * n_req))
+            lv_m = jnp.reshape(cm_lval_ref[...],
+                               (t_tile, c_pad * n_req)) != 0.0
+            nval_m = jnp.sum(jnp.where(lv_m, 1.0, 0.0),
+                             axis=-1, keepdims=True)
+            k_m = jnp.ceil(jnp.float32(P99_Q) * nval_m)
+            lo_m = jnp.full((t_tile, 1), -1.0, jnp.float32)
+            hi_m = jnp.max(jnp.where(lv_m, lats_m, 0.0),
+                           axis=-1, keepdims=True)
+
+            def bisect_m(_, lo_hi):
+                lo, hi = lo_hi
+                mid = jnp.float32(0.5) * (lo + hi)
+                cnt = jnp.sum(jnp.where(lv_m & (lats_m <= mid), 1.0, 0.0),
+                              axis=-1, keepdims=True)
+                go_hi = cnt >= k_m
+                return jnp.where(go_hi, lo, mid), jnp.where(go_hi, mid, hi)
+
+            lo_m, _ = jax.lax.fori_loop(0, P99_BISECT_ITERS, bisect_m,
+                                        (lo_m, hi_m))
+            p99_m = jnp.min(jnp.where(lv_m & (lats_m > lo_m), lats_m, _BIG),
+                            axis=-1, keepdims=True)
+            p99_m = jnp.where(nval_m > 0, p99_m, 0.0)
+            cm_metrics_ref[...] = (cm_metrics_ref[...]
+                                   + jnp.where(mlane == MET_P99, p99_m, 0.0))
 
 
 def sched_stream_call(object_ids: jax.Array, lengths: jax.Array,
@@ -682,8 +745,12 @@ def sched_stream_grid_call(object_ids: jax.Array, lengths: jax.Array,
     M_pad) f32 — the masked client-MEAN window loads, or the raw masked
     client SUM when ``merge_mean=False`` (the pre-reduced per-device
     block the sharded sweep's ``psum_tree`` consumes, DESIGN.md §12) —
-    and cm_metrics (T, MET_PAD) f32 cross-client merged rows,
-    accumulated in-VMEM across the client grid dimension).
+    cm_metrics (T, MET_PAD) f32 cross-client merged rows, accumulated
+    in-VMEM across the client grid dimension (the MET_P99 lane holds the
+    merged nearest-rank p99 when ``merge_mean=True``, DESIGN.md §14),
+    and cm_lats / cm_lval (T, C, N) f32 — the merged latency block:
+    masked grouped-step latencies and 0/1 validity, the operand the
+    sharded sweep gathers to bisect the GLOBAL merged p99).
     """
     t, c, n = object_ids.shape
     m_pad = tables.shape[-1]
@@ -720,9 +787,14 @@ def sched_stream_grid_call(object_ids: jax.Array, lengths: jax.Array,
             pl.BlockSpec((tt, ct, MET_PAD), lambda i, j: (i, j, 0)),
             # per-TRIAL cross-client accumulators: constant in j, so the
             # block stays VMEM-resident across a trial row's client
-            # steps and retires once per trial tile (DESIGN.md §11)
+            # steps and retires once per trial tile (DESIGN.md §11);
+            # the last two are the merged latency block + validity
+            # (DESIGN.md §14) — FULL client axis per block, each client
+            # step depositing its disjoint (tt, ct, n) slice
             pl.BlockSpec((tt, n_win, m_pad), lambda i, j: (i, 0, 0)),
             pl.BlockSpec((tt, MET_PAD), lambda i, j: (i, 0)),
+            pl.BlockSpec((tt, c, n), lambda i, j: (i, 0, 0)),
+            pl.BlockSpec((tt, c, n), lambda i, j: (i, 0, 0)),
         ],
         out_shape=[
             jax.ShapeDtypeStruct((t, c, n), jnp.int32),
@@ -732,6 +804,8 @@ def sched_stream_grid_call(object_ids: jax.Array, lengths: jax.Array,
             jax.ShapeDtypeStruct((t, c, MET_PAD), jnp.float32),
             jax.ShapeDtypeStruct((t, n_win, m_pad), jnp.float32),
             jax.ShapeDtypeStruct((t, MET_PAD), jnp.float32),
+            jax.ShapeDtypeStruct((t, c, n), jnp.float32),
+            jax.ShapeDtypeStruct((t, c, n), jnp.float32),
         ],
         scratch_shapes=[
             pltpu.VMEM((N_ROWS, tt * ct, m_pad), jnp.float32),

@@ -248,7 +248,8 @@ def sched_stream_grid(object_ids: jax.Array, lengths: jax.Array,
                       merge_mean: bool = True,
                       interpret: Optional[bool] = None
                       ) -> Tuple[jax.Array, jax.Array, jax.Array, jax.Array,
-                                 jax.Array, jax.Array, jax.Array]:
+                                 jax.Array, jax.Array, jax.Array, jax.Array,
+                                 jax.Array]:
     """2-D (trials × clients) grid kernel (DESIGN.md §11): T trials of C
     private-log client streams — the per_client contention model's whole
     Monte-Carlo sweep — as ONE ``pallas_call``.
@@ -271,8 +272,13 @@ def sched_stream_grid(object_ids: jax.Array, lengths: jax.Array,
     masked_client_mean`'s in-VMEM twin, or the raw masked client SUM
     when ``merge_mean=False`` (the per-device partial the sharded
     sweep's `policy_core.psum_tree` folds across devices, DESIGN.md
-    §12) — and cm_metrics (T, N_CMETRICS) f32 cross-client merged rows,
-    `policy_core.client_stream_metrics`'s twin)."""
+    §12) — cm_metrics (T, N_CMETRICS) f32 cross-client merged rows,
+    `policy_core.client_stream_metrics`'s twin (its MET_P99 lane is the
+    MERGED nearest-rank p99 over the whole trial's latency block when
+    ``merge_mean=True``, 0 otherwise — DESIGN.md §14), and cm_lats /
+    cm_lval (T, C, N) f32 — the merged latency block: grouped-step
+    latencies masked to 0 where invalid, plus 0/1 validity (what the
+    sharded sweep all-gathers to bisect the global merged p99)."""
     _check_policy(policy, n_servers, nltr_n)
     interpret = _auto_interpret(interpret)
     t, c, n = object_ids.shape
@@ -307,7 +313,7 @@ def sched_stream_grid(object_ids: jax.Array, lengths: jax.Array,
     pad = ((0, 0), (0, 0), (0, m_pad - m))
     tables_p = jnp.pad(tables, ((0, 0),) + pad)
     rates_p = jnp.pad(win_rates.astype(jnp.float32), pad)
-    choices, lats, ftab, wloads, metrics, cm_wl, cm_met = \
+    choices, lats, ftab, wloads, metrics, cm_wl, cm_met, cm_lats, cm_lval = \
         sched_stream_grid_call(
             object_ids, lengths, valid, tables_p, seeds, rates_p,
             n_servers=n_servers, window_size=window_size,
@@ -318,4 +324,5 @@ def sched_stream_grid(object_ids: jax.Array, lengths: jax.Array,
             interpret=interpret)
     return (choices[:t, :c], lats[:t, :c], ftab[:t, :c, :, :m],
             wloads[:t, :c, :, :m], metrics[:t, :c, :N_METRICS],
-            cm_wl[:t, :, :m], cm_met[:t, :N_CMETRICS])
+            cm_wl[:t, :, :m], cm_met[:t, :N_CMETRICS],
+            cm_lats[:t, :c], cm_lval[:t, :c])

@@ -288,11 +288,14 @@ def sched_stream_grid_ref(object_ids: jax.Array, lengths: jax.Array,
     clients share its ``win_rates`` trace), plus the cross-client merge
     twins — `policy_core.masked_client_mean` over the per-client window
     loads and `policy_core.client_stream_metrics` over the per-client
-    fused metric rows, with a client REAL iff its slice holds any valid
-    request.  Same shapes as the grid kernel: object_ids/lengths/valid
-    (T, C, N), tables (T, C, 4, M), seeds (T, C), win_rates (T, W, M);
-    returns (choices, latencies, final_tables, window_loads, metrics
-    (T, C, N_METRICS), cm_wloads (T, W, M), cm_metrics (T, N_CMETRICS)).
+    fused metric rows (its MET_P99 lane the nearest-rank p99 over the
+    trial's MERGED latency block, DESIGN.md §14), with a client REAL iff
+    its slice holds any valid request.  Same shapes as the grid kernel:
+    object_ids/lengths/valid (T, C, N), tables (T, C, 4, M), seeds
+    (T, C), win_rates (T, W, M); returns (choices, latencies,
+    final_tables, window_loads, metrics (T, C, N_METRICS), cm_wloads
+    (T, W, M), cm_metrics (T, N_CMETRICS), cm_lats (T, C, N) masked
+    latencies, cm_lval (T, C, N) 0/1 validity).
     """
     one = functools.partial(
         sched_stream_ref, n_servers=n_servers, window_size=window_size,
@@ -302,12 +305,17 @@ def sched_stream_grid_ref(object_ids: jax.Array, lengths: jax.Array,
     per_trial = jax.vmap(one, in_axes=(0, 0, 0, 0, 0, None))
     choices, lats, finals, wloads = jax.vmap(per_trial)(
         object_ids, lengths, valid, tables, seeds, win_rates)
-    metrics = stream_metrics(lats, valid.astype(bool), window_dt,
-                             window_size)
+    validb = valid.astype(bool)
+    metrics = stream_metrics(lats, validb, window_dt, window_size)
     ct = resolve_client_tile(object_ids.shape[1], client_tile)
-    cvalid = jnp.any(valid.astype(bool), axis=-1)            # (T, C)
+    cvalid = jnp.any(validb, axis=-1)                        # (T, C)
+    cm_lats = jnp.where(validb, lats, 0.0)                   # (T, C, N)
+    cm_lval = jnp.where(validb, 1.0, 0.0)
     cm_wl = jax.vmap(lambda w, v: masked_client_mean(w, v, ct))(
         wloads, cvalid)
-    cm_met = jax.vmap(lambda m, v: client_stream_metrics(m, v, ct))(
-        metrics, cvalid)
-    return choices, lats, finals, wloads, metrics, cm_wl, cm_met
+    cm_met = jax.vmap(
+        lambda m, v, ml, mv: client_stream_metrics(
+            m, v, ct, merged_lats=ml, merged_valid=mv)
+    )(metrics, cvalid, cm_lats, validb)
+    return (choices, lats, finals, wloads, metrics, cm_wl, cm_met,
+            cm_lats, cm_lval)

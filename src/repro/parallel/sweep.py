@@ -53,11 +53,20 @@ class SweepMerge(NamedTuple):
     `psum_tree`; maxes by ``pmax``, integer probe counts by ``psum``).
     The sharded twin of :class:`engine.ClientMerge`, uniform across
     backends — exactly the rows `simulate._run_batched`'s per_client
-    fold consumes."""
+    fold consumes.
+
+    ``p99`` is the GLOBAL cross-client nearest-rank p99 (DESIGN.md
+    §14): each device's local merged latency block (the kernel's
+    in-VMEM ``ClientMerge.lats``/``lats_valid`` pair, or the jax twin
+    `engine.grouped_latency_block`) is ``all_gather``ed over the client
+    mesh axis and bisected ONCE with `policy_core.nearest_rank_p99` —
+    which is order- and layout-insensitive, so the gathered shard order
+    cannot drift the result vs the single-device merged block."""
 
     window_loads_mean: jax.Array  # (T, W, M) masked client-mean snapshots
     phase_time: jax.Array         # (T,) merged makespan over real clients
     probe_msgs: jax.Array         # (T,) int32 probe total over real clients
+    p99: jax.Array                # (T,) global merged nearest-rank p99
 
 
 def _edge_pad(tree, axis: int, new: int):
@@ -169,10 +178,12 @@ def run_sweep(states, works, keys, *, mesh_shape: Optional[Tuple[int, ...]],
         ct = policy_core.resolve_client_tile(c_loc, client_tile)
         if merged is not None:
             # kernel backend: the in-VMEM merge shipped raw SUM blocks
-            # (merge_mean=False above)
+            # (merge_mean=False above) plus the raw merged latency block
             wl_sum = merged.window_loads_mean
             n_real = merged.metrics[:, policy_core.MET_N_CLIENTS]
             phase_loc = merged.metrics[:, policy_core.MET_MAKESPAN]
+            lats_loc = merged.lats
+            lval_loc = merged.lats_valid != 0.0
         else:
             # jax backend: the host twins of the in-VMEM merge
             wl_sum = jax.vmap(
@@ -187,6 +198,8 @@ def run_sweep(states, works, keys, *, mesh_shape: Optional[Tuple[int, ...]],
             comp = jnp.where(works.valid,
                              w_open[None, None, :] + res.latencies, 0.0)
             phase_loc = jnp.max(comp, axis=(1, 2))
+            lats_loc, lval_loc = engine.grouped_latency_block(
+                works, res.latencies, window_size, group_steps)
         probes_loc = jnp.sum(jnp.where(cvalid, res.probe_msgs, 0),
                              axis=-1).astype(jnp.int32)
         if collective:
@@ -194,10 +207,19 @@ def run_sweep(states, works, keys, *, mesh_shape: Optional[Tuple[int, ...]],
             n_real = policy_core.psum_tree(n_real, "clients")
             phase_loc = jax.lax.pmax(phase_loc, "clients")
             probes_loc = jax.lax.psum(probes_loc, "clients")
+            # global p99: gather every device's raw block and bisect
+            # ONCE — `nearest_rank_p99` is order-insensitive, so the
+            # shard-major gather layout is immaterial (DESIGN.md §14)
+            lats_loc = jax.lax.all_gather(lats_loc, "clients", axis=1)
+            lval_loc = jax.lax.all_gather(lval_loc, "clients", axis=1)
+        t_loc = lats_loc.shape[0]
+        p99 = policy_core.nearest_rank_p99(
+            lats_loc.reshape(t_loc, -1), lval_loc.reshape(t_loc, -1))[:, 0]
         wl_mean = wl_sum / jnp.maximum(n_real, 1.0)[:, None, None]
         return res, metrics, SweepMerge(window_loads_mean=wl_mean,
                                         phase_time=phase_loc,
-                                        probe_msgs=probes_loc)
+                                        probe_msgs=probes_loc,
+                                        p99=p99)
 
     f = shard_map_unchecked(
         body, mesh,

@@ -521,7 +521,7 @@ def test_stream_grid_matches_ref_and_sequential(case):
     refs = sched_stream_grid_ref(obj, lens, valid, tables, seeds, rates,
                                  client_tile=ct, **kw)
     names = ("choices", "lats", "tables", "wloads", "metrics",
-             "cm_wloads", "cm_metrics")
+             "cm_wloads", "cm_metrics", "cm_lats", "cm_lval")
     for name, a, b in zip(names, outs, refs):
         a, b = np.asarray(a), np.asarray(b)
         if name == "tables":
@@ -551,15 +551,18 @@ def test_stream_grid_client_merge_masks_phantoms():
     dead (all-invalid) client slices, cm_metrics' client count excludes
     them and cm_wloads equals the policy_core twins computed from the
     surviving per-stream outputs — including across client-tile block
-    boundaries (C=5 over c_tile=2 -> 3 blocks with phantom padding)."""
+    boundaries (C=5 over c_tile=2 -> 3 blocks with phantom padding).
+    The merged latency block (DESIGN.md §14) masks dead clients' rows
+    to exact zeros with zero validity, and MET_P99 equals the host
+    `nearest_rank_p99` bisection over that block."""
     t, c, m, n_win, win = 2, 5, 24, 2, 12
     obj, lens, valid, tables, seeds, rates = _grid_case(
         t, c, m, n_win, win, seed=77, dead_clients=(0, 3))
     kw = dict(n_servers=m, window_size=win, threshold=2.0, lam=50.0,
               window_dt=0.02, policy="ect", observe=True, renorm=True)
-    (_, lats, _, wloads, metrics, cm_wl, cm_met) = sched_stream_grid(
-        obj, lens, valid, tables, seeds, rates, trial_tile=2,
-        client_tile=2, **kw)
+    (_, lats, _, wloads, metrics, cm_wl, cm_met, cm_lats, cm_lval) = \
+        sched_stream_grid(obj, lens, valid, tables, seeds, rates,
+                          trial_tile=2, client_tile=2, **kw)
     cvalid = jnp.any(valid, axis=-1)
     np.testing.assert_array_equal(
         np.asarray(cm_met[:, policy_core.MET_N_CLIENTS]),
@@ -569,11 +572,68 @@ def test_stream_grid_client_merge_masks_phantoms():
         lambda w, v: policy_core.masked_client_mean(w, v, 2))(wloads, cvalid)
     np.testing.assert_array_equal(np.asarray(cm_wl), np.asarray(ref_wl))
     ref_met = jax.vmap(
-        lambda mm, v: policy_core.client_stream_metrics(mm, v, 2))(
-        metrics, cvalid)
+        lambda mm, v, ml, mv: policy_core.client_stream_metrics(
+            mm, v, 2, merged_lats=ml, merged_valid=mv))(
+        metrics, cvalid, cm_lats, valid)
     np.testing.assert_array_equal(np.asarray(cm_met), np.asarray(ref_met))
+    # merged latency block: valid slots carry the per-stream latencies
+    # verbatim, dead clients / invalid slots are exact zeros
+    np.testing.assert_array_equal(
+        np.asarray(cm_lats), np.asarray(jnp.where(valid, lats, 0.0)))
+    np.testing.assert_array_equal(
+        np.asarray(cm_lval), np.asarray(jnp.where(valid, 1.0, 0.0)))
+    np.testing.assert_array_equal(np.asarray(cm_lats[:, 0]), 0.0)
+    np.testing.assert_array_equal(np.asarray(cm_lval[:, 3]), 0.0)
+    # MET_P99 == the host value-bisection over the merged block (order-
+    # insensitive, so the (C, N) layout is immaterial)
+    host_p99 = policy_core.nearest_rank_p99(
+        cm_lats.reshape(t, -1), cm_lval.reshape(t, -1) != 0.0)[:, 0]
+    np.testing.assert_array_equal(
+        np.asarray(cm_met[:, policy_core.MET_P99]), np.asarray(host_p99))
     # dead clients' latencies are exactly zero (masked writes)
     np.testing.assert_array_equal(np.asarray(lats[:, 0]), 0.0)
+
+
+def test_stream_grid_merged_p99_oracle_edge_cases():
+    """Merged-p99 edge cases (DESIGN.md §14): an ALL-INVALID trial
+    (every client dead) pins MET_P99 to exactly 0, and C > R (more
+    clients than per-client requests) keeps kernel == vmap² oracle ==
+    host bisection bit-exact."""
+    # all clients dead in every trial -> nvalid = 0 -> p99 = 0 exactly
+    t, c, m, n_win, win = 2, 3, 24, 2, 10
+    obj, lens, valid, tables, seeds, rates = _grid_case(
+        t, c, m, n_win, win, seed=91, dead_clients=(0, 1, 2))
+    kw = dict(n_servers=m, window_size=win, threshold=2.0, lam=50.0,
+              window_dt=0.02, policy="ect", observe=True, renorm=True)
+    outs = sched_stream_grid(obj, lens, valid, tables, seeds, rates,
+                             trial_tile=2, client_tile=2, **kw)
+    np.testing.assert_array_equal(
+        np.asarray(outs[6][:, policy_core.MET_P99]), 0.0)
+    np.testing.assert_array_equal(np.asarray(outs[7]), 0.0)
+    np.testing.assert_array_equal(np.asarray(outs[8]), 0.0)
+    # C > R: 7 clients of single-window 4-request streams
+    t, c, m, n_win, win = 2, 7, 17, 1, 4
+    obj, lens, valid, tables, seeds, rates = _grid_case(
+        t, c, m, n_win, win, seed=92, dead_clients=(2,))
+    kw = dict(n_servers=m, window_size=win, threshold=2.0, lam=50.0,
+              window_dt=0.02, policy="trh", observe=True, renorm=True)
+    outs = sched_stream_grid(obj, lens, valid, tables, seeds, rates,
+                             trial_tile=2, client_tile=3, **kw)
+    refs = sched_stream_grid_ref(obj, lens, valid, tables, seeds, rates,
+                                 client_tile=3, **kw)
+    for name, a, b in zip(("choices", "lats", "tables", "wloads",
+                           "metrics", "cm_wloads", "cm_metrics",
+                           "cm_lats", "cm_lval"), outs, refs):
+        if name == "tables":
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       atol=1e-6, err_msg=name)
+        else:
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b),
+                                          err_msg=name)
+    host_p99 = policy_core.nearest_rank_p99(
+        outs[7].reshape(t, -1), outs[8].reshape(t, -1) != 0.0)[:, 0]
+    np.testing.assert_array_equal(
+        np.asarray(outs[6][:, policy_core.MET_P99]), np.asarray(host_p99))
 
 
 def test_run_stream_batch_2d_engine_parity():

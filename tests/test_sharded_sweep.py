@@ -343,6 +343,16 @@ def test_run_sweep_client_axis_merge_matches_oracle(backend):
                          axis=-1).astype(np.int32)
     np.testing.assert_array_equal(np.asarray(smerge.probe_msgs),
                                   want_probes)
+    # §14 p99 lane: the GLOBAL merged nearest-rank p99 equals the host
+    # bisection over the jax-twin grouped latency block of the same
+    # per-stream outputs — the all_gather shard layout is immaterial
+    # because `nearest_rank_p99` is order-insensitive
+    g_lat, g_val = engine.grouped_latency_block(works, res.latencies, ws)
+    want_p99 = policy_core.nearest_rank_p99(
+        g_lat.reshape(g_lat.shape[0], -1),
+        g_val.reshape(g_lat.shape[0], -1))[:, 0]
+    np.testing.assert_array_equal(np.asarray(smerge.p99),
+                                  np.asarray(want_p99))
 
 
 @needs_mesh

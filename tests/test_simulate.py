@@ -484,7 +484,108 @@ def test_simconfig_rejects_bad_fields_with_values():
         SimConfig(client_model="per_client", client_tile=0)
     with pytest.raises(ValueError, match="client_tile=-2"):
         SimConfig(client_tile=-2)
+    with pytest.raises(ValueError, match="eager"):
+        SimConfig(prep="eager")
     # kernel backend + per_client is a SUPPORTED combination now (the
     # 2-D trials x clients grid, DESIGN.md §11)
     cfg = SimConfig(backend="kernel", client_model="per_client")
     assert cfg.n_clients == 200
+
+
+# ---------------------------------------------------------------------------
+# Batched trial prep/post pipeline (DESIGN.md §14): prep="batched" vs the
+# lax.map sequential oracle, and the merged nearest-rank p99 lane
+# ---------------------------------------------------------------------------
+
+
+def _batched_vs_sequential(cfg, pol):
+    """Every TrialResult field of the default batched pipeline equals
+    the ``prep='sequential'`` lax.map oracle bit-for-bit."""
+    log = simulate.default_log_cfg(cfg)
+    a = simulate.run_trials(KEY, cfg, pol, log)
+    b = simulate.run_trials(KEY, dataclasses.replace(cfg, prep="sequential"),
+                            pol, log)
+    for f in a._fields:
+        np.testing.assert_array_equal(
+            np.asarray(getattr(a, f)), np.asarray(getattr(b, f)),
+            err_msg=f"{cfg.backend}/{cfg.client_model}/{f}")
+
+
+@pytest.mark.parametrize("scenario", simulate.SCENARIOS)
+@pytest.mark.parametrize("backend", ["jax", "kernel"])
+def test_batched_prep_matches_sequential_all_scenarios(scenario, backend):
+    """§14 tentpole contract: the vmapped prep/post pipeline is
+    bit-identical to the sequential lax.map halo on every scenario and
+    both backends — odd M (37), T=5 not a multiple of the trial tile.
+    The shape-sensitive prep reductions (Eq. (2) absorb normalizer,
+    per-server written sums) go through pinned association primitives,
+    and the optimization_barrier fences keep XLA from fusing scheduling
+    consumers into the vmapped transcendentals (DESIGN.md §14)."""
+    cfg = SimConfig(n_servers=37, n_requests=250, n_trials=5,
+                    window_size=60, backend=backend,
+                    scenario=ScenarioConfig(name=scenario),
+                    straggler_frac=0.1)
+    _batched_vs_sequential(cfg, PolicyConfig(name="ect", threshold=0.05))
+
+
+@pytest.mark.parametrize("backend", ["jax", "kernel"])
+def test_batched_prep_matches_sequential_per_client(backend):
+    """§14 on the per_client 2-D path: phantom clients (7 clients over
+    5 requests), uneven client tiles and the cross-client merged fold —
+    batched pipeline == sequential oracle bitwise, both backends, plus
+    an lcg sort policy on the even-split case."""
+    cfg = SimConfig(n_servers=11, n_clients=7, n_requests=5, n_trials=3,
+                    window_size=4, backend=backend,
+                    client_model="per_client", client_tile=2,
+                    scenario=ScenarioConfig(name="permanent_slow"))
+    _batched_vs_sequential(cfg, PolicyConfig(name="ect", threshold=0.05))
+    cfg2 = SimConfig(n_servers=17, n_clients=5, n_requests=60, n_trials=2,
+                     window_size=16, backend=backend,
+                     client_model="per_client",
+                     scenario=ScenarioConfig(name="transient"))
+    _batched_vs_sequential(
+        cfg2, PolicyConfig(name="nltr", threshold=5.0, rng="lcg"))
+
+
+def test_batched_prep_matches_sequential_odd_tile_shared_log():
+    """T=13 (not a multiple of the trial tile 8) through the shared_log
+    kernel grid: inert padded trials in the batched pipeline cannot leak
+    into the real trials' prep or bookkeeping."""
+    cfg = SimConfig(n_servers=24, n_requests=240, n_trials=13,
+                    window_size=60, backend="kernel",
+                    scenario=ScenarioConfig(name="flapping"))
+    _batched_vs_sequential(cfg, PolicyConfig(name="trh", threshold=5.0,
+                                             rng="lcg"))
+
+
+def test_nearest_rank_p99_pinned_and_latency_stats():
+    """Satellite: the two p99 definitions pinned against a hand-computed
+    example.  For n=200 values 1..200: nearest-rank takes the
+    ceil(0.99*200)=198th order statistic (198.0 exactly), while
+    np.percentile's linear interpolation lands between the 198th and
+    199th (198.01).  `analysis.latency_stats` reports both, and
+    ``p99_nearest`` equals the `policy_core.nearest_rank_p99` bisection
+    the kernel's merged lane runs (MET_P99 / SweepMerge.p99)."""
+    from repro.core import policy_core
+    lats = np.arange(1.0, 201.0, dtype=np.float32)       # 1..200
+    rng = np.random.default_rng(7)
+    rng.shuffle(lats)                                    # order-free
+    ls = analysis.latency_stats(lats)
+    assert ls["p99_nearest"] == 198.0
+    np.testing.assert_allclose(ls["p99"], 198.01)
+    # the bisection itself: batch axis + validity mask semantics
+    p99 = policy_core.nearest_rank_p99(
+        np.stack([lats, lats]), np.ones((2, 200), bool), xp=np)
+    np.testing.assert_array_equal(np.asarray(p99).reshape(-1), 198.0)
+    # masked slots are excluded: with only 1..100 valid the rank is
+    # computed in f32 — f32(0.99) * 100 rounds to exactly 99.0 (the
+    # product 99.0000009? is under half an ulp above 99), so
+    # k = ceil(99.0) = 99 and the p99 is the 99th order statistic.
+    # This IS the kernel's semantics (all-f32 by design), pinned here
+    # so a "fix" to exact-rational ranks would show up as a break.
+    valid = lats <= 100.0
+    p99m = policy_core.nearest_rank_p99(lats, valid, xp=np)
+    assert float(np.asarray(p99m).reshape(-1)[0]) == 99.0
+    # all-invalid -> exactly 0 (the kernel's dead-trial pin)
+    p99z = policy_core.nearest_rank_p99(lats, np.zeros(200, bool), xp=np)
+    assert float(np.asarray(p99z).reshape(-1)[0]) == 0.0
