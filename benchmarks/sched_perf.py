@@ -728,6 +728,15 @@ def emit_bench_point(path: str = BENCH_PATH,
                 sh[f"sharded_engine_req_s_{d}d"]
         point["sharded_bit_exact"] = bool(
             sh["sharded_bit_exact"] and sh["sharded_cross_backend_exact"])
+    # contract linter (DESIGN.md §15): lint wall time as a trajectory
+    # series plus the clean flag — a point measured on a dirty-contract
+    # tree is visibly tainted
+    from repro.contractcheck import check_tree, load_config
+    t_lint = time.time()
+    lint_live = [f for f in check_tree(load_config())
+                 if not f.suppressed]
+    point["contractcheck_s"] = time.time() - t_lint
+    point["contractcheck_clean"] = not lint_live
     sha = _git_sha()
     if sha:
         point["git_sha"] = sha
@@ -1045,6 +1054,16 @@ def run_smoke() -> None:
     else:
         print("  sharded smoke skipped (1 device; set XLA_FLAGS="
               "--xla_force_host_platform_device_count=N)")
+    # contract linter (DESIGN.md §15): the AST layer over the whole
+    # scoped surface must be strict-clean pre-merge (the CI `contract`
+    # job adds the jaxpr layer); timed so a lint slowdown is visible
+    from repro.contractcheck import check_tree, load_config
+    t_lint = time.time()
+    lint_live = [f for f in check_tree(load_config())
+                 if not f.suppressed]
+    assert not lint_live, [f.format() for f in lint_live]
+    print(f"  contractcheck AST layer strict-clean "
+          f"({time.time() - t_lint:.2f}s)")
     _scenario_sweep(("transient",), ("rr", "ect"), 4)
     print(f"[smoke] ok in {time.time() - t0:.1f}s")
 

@@ -1,0 +1,29 @@
+"""Static enforcement of the DESIGN.md §9–§14 bit-exactness contract.
+
+Two layers (DESIGN.md §15): `astcheck` lints the fused-body surface for
+banned primitives, FMA-hazard shapes, out-of-resolver association
+parameters and xp-twin drift; `jaxprcheck` traces the real kernel entry
+points and walks the closed jaxpr for violations hiding behind helper
+indirection.  ``python -m repro.contractcheck --strict`` is the CI
+gate; `run_check` is the library entry point.
+"""
+
+from repro.contractcheck.astcheck import (check_file, check_source,
+                                          check_tree)
+from repro.contractcheck.config import CheckConfig, load_config
+from repro.contractcheck.jaxprcheck import check_callable, check_kernels
+from repro.contractcheck.rules import RULES, Finding, Rule
+
+__all__ = ["CheckConfig", "Finding", "Rule", "RULES", "check_callable",
+           "check_file", "check_kernels", "check_source", "check_tree",
+           "load_config", "run_check"]
+
+
+def run_check(root=None, paths=None, jaxpr=True, config=None):
+    """Full checker run: AST layer over every scoped file plus the
+    jaxpr layer over the kernel surface.  Returns all findings."""
+    cfg = config or load_config(root)
+    findings = check_tree(cfg, paths)
+    if jaxpr:
+        findings.extend(check_kernels(cfg))
+    return findings

@@ -1,0 +1,164 @@
+"""Checker configuration: scopes, allowlist, severities — data, not code.
+
+The authoritative baseline lives in :data:`DEFAULTS` below and is
+mirrored by the ``[tool.contractcheck]`` table in the repo-root
+``pyproject.toml``; when a pyproject table is present it *replaces* the
+matching default keys, so downstream scopes/allowances are registered by
+editing TOML, not this module (DESIGN.md §15).
+
+TOML parsing uses stdlib ``tomllib`` when available (3.11+) and falls
+back to ``tomli``; with neither importable the baked-in defaults apply
+unchanged — the checker must run in the bare CI image without new
+dependencies.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import os
+from typing import Dict, List, Optional
+
+try:                                  # 3.11+
+    import tomllib as _toml
+except ImportError:                   # pragma: no cover - version dependent
+    try:
+        import tomli as _toml         # type: ignore[no-redef]
+    except ImportError:
+        _toml = None                  # type: ignore[assignment]
+
+
+@dataclasses.dataclass(frozen=True)
+class Scope:
+    """A named set of files and the rule IDs enforced over them.  A file
+    in several scopes gets the union of their rules."""
+
+    name: str
+    files: List[str]
+    rules: List[str]
+
+
+@dataclasses.dataclass
+class CheckConfig:
+    root: str
+    scopes: List[Scope]
+    # "relpath::qualname" -> rule IDs deliberately allowed there
+    allow: Dict[str, List[str]]
+    severity: Dict[str, str]
+    # function names whose bodies may touch association parameters
+    resolvers: List[str]
+    # identifiers treated as association/lowering parameters (CC-ASSOC)
+    assoc_params: List[str]
+    # policies the jaxpr layer traces (one plain + one sort-path policy
+    # keeps the CLI fast; tests widen this)
+    jaxpr_policies: List[str]
+
+    def rules_for(self, relpath: str) -> List[str]:
+        relpath = relpath.replace(os.sep, "/")
+        out: List[str] = []
+        for sc in self.scopes:
+            if relpath in sc.files:
+                out.extend(r for r in sc.rules if r not in out)
+        return out
+
+    def allowed(self, relpath: str, qualname: Optional[str],
+                rule_id: str) -> bool:
+        if not qualname:
+            return False
+        relpath = relpath.replace(os.sep, "/")
+        # match the full qualname and every dotted prefix, so a class- or
+        # function-level allowance covers nested helpers
+        parts = qualname.split(".")
+        for i in range(len(parts), 0, -1):
+            key = f"{relpath}::{'.'.join(parts[:i])}"
+            if rule_id in self.allow.get(key, ()):
+                return True
+        return False
+
+
+# The §9–§14 surface.  "fused" files hold code that lowers into (or is
+# the oracle of) the Pallas kernel body; "dispatch" files resolve
+# lowering parameters and drive the engine, where backend argsort stays
+# deliberate (§10) but must be annotated.
+DEFAULTS: Dict[str, object] = {
+    "scopes": {
+        "fused": {
+            "files": [
+                "src/repro/kernels/sched_select/kernel.py",
+                "src/repro/kernels/sched_select/ref.py",
+                "src/repro/core/policy_core.py",
+                "src/repro/parallel/sweep.py",
+            ],
+            "rules": ["CC-SUM", "CC-SORT", "CC-CUMSUM", "CC-RNG",
+                      "CC-TIME", "CC-FMA", "CC-TWIN"],
+        },
+        "dispatch": {
+            "files": [
+                "src/repro/kernels/sched_select/ops.py",
+                "src/repro/parallel/sweep.py",
+                "src/repro/core/engine.py",
+                "src/repro/core/simulate.py",
+                "src/repro/core/policies.py",
+                "src/repro/core/statlog.py",
+            ],
+            "rules": ["CC-SORT", "CC-CUMSUM", "CC-RNG", "CC-TIME",
+                      "CC-ASSOC"],
+        },
+    },
+    # deliberate, §-documented deviations registered by scope (inline
+    # `# contract-ok` comments cover single lines; this covers functions)
+    "allow": {
+        # host-side scheduler: python-level RNG feeding the np twin, off
+        # the fused path entirely (DESIGN.md §8); its window-start
+        # snapshot keeps stable np sorts, pinned equal to the kernel's
+        # all-pairs rank (§10/§13)
+        "src/repro/core/policies.py::HostScheduler": ["CC-RNG", "CC-SORT"],
+    },
+    "severity": {},
+    "resolvers": ["resolve_trial_tile", "resolve_client_tile",
+                  "resolve_shard_width"],
+    "assoc_params": ["trial_tile", "client_tile", "shard_width",
+                     "DEFAULT_TRIAL_TILE", "DEFAULT_CLIENT_TILE"],
+    "jaxpr_policies": ["ect", "mlml"],
+}
+
+
+def _scopes_from(raw: Dict[str, dict]) -> List[Scope]:
+    return [Scope(name=k, files=list(v.get("files", ())),
+                  rules=list(v.get("rules", ())))
+            for k, v in raw.items()]
+
+
+def find_root(start: Optional[str] = None) -> str:
+    """Repo root = nearest ancestor with pyproject.toml or .git."""
+    d = os.path.abspath(start or os.getcwd())
+    while True:
+        if (os.path.exists(os.path.join(d, "pyproject.toml"))
+                or os.path.exists(os.path.join(d, ".git"))):
+            return d
+        parent = os.path.dirname(d)
+        if parent == d:
+            return os.path.abspath(start or os.getcwd())
+        d = parent
+
+
+def load_config(root: Optional[str] = None,
+                pyproject: Optional[str] = None) -> CheckConfig:
+    root = find_root(root)
+    raw = dict(DEFAULTS)
+    path = pyproject or os.path.join(root, "pyproject.toml")
+    if _toml is not None and os.path.exists(path):
+        with open(path, "rb") as fh:
+            table = _toml.load(fh).get("tool", {}).get("contractcheck", {})
+        for key in ("scopes", "allow", "severity", "resolvers",
+                    "assoc_params", "jaxpr_policies"):
+            if key in table:
+                raw[key] = table[key]
+    return CheckConfig(
+        root=root,
+        scopes=_scopes_from(raw["scopes"]),          # type: ignore[arg-type]
+        allow={k: list(v) for k, v in raw["allow"].items()},  # type: ignore
+        severity=dict(raw["severity"]),              # type: ignore[arg-type]
+        resolvers=list(raw["resolvers"]),            # type: ignore[arg-type]
+        assoc_params=list(raw["assoc_params"]),      # type: ignore[arg-type]
+        jaxpr_policies=list(raw["jaxpr_policies"]),  # type: ignore[arg-type]
+    )

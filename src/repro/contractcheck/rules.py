@@ -1,0 +1,106 @@
+"""Rule registry + finding type for the §9–§14 contract checker.
+
+Every rule is one clause of the DESIGN.md bit-exactness contract made
+machine-checkable.  ``CC-*`` rules are the AST layer (`astcheck`),
+``CJ-*`` rules are the jaxpr layer (`jaxprcheck`); the two layers share
+this registry so the CLI, the config table and DESIGN.md §15 all speak
+the same IDs.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional
+
+SEV_ERROR = "error"
+SEV_WARNING = "warning"
+
+
+@dataclasses.dataclass(frozen=True)
+class Rule:
+    """One contract clause: a stable ID, the layer that checks it, the
+    DESIGN.md § it descends from, and the default severity."""
+
+    rule_id: str
+    layer: str        # "ast" | "jaxpr"
+    origin: str       # DESIGN.md § reference
+    summary: str
+    severity: str = SEV_ERROR
+
+
+_ALL = [
+    Rule("CC-SUM", "ast", "§9",
+         "backend float sum reduction in a fused scope — use the pinned "
+         "lane_sum/tree_sum/psum_tree halving trees (masked jnp.where "
+         "selects and integer/bool sums are association-free and pass)"),
+    Rule("CC-SORT", "ast", "§10/§13",
+         "backend argsort/sort in a contract scope — fused bodies use "
+         "rank_desc / the bitonic network; engine-side argsort must be "
+         "annotated as deliberate"),
+    Rule("CC-CUMSUM", "ast", "§9",
+         "backend cumulative reduction (cumsum/cumprod/associative_scan) "
+         "in a contract scope — float prefix sums have no pinned "
+         "association"),
+    Rule("CC-RNG", "ast", "§9",
+         "non-LCG randomness in a contract scope: np.random/stdlib random "
+         "anywhere, jax.random inside a fused body — fused randomness "
+         "goes through the shared lcg_step/lcg_mod"),
+    Rule("CC-TIME", "ast", "§9",
+         "wall-clock read (time.*/datetime.now) in a contract scope — "
+         "simulated time is the only clock the contract admits"),
+    Rule("CC-FMA", "ast", "§9/§11",
+         "multiply feeding an add/sub in one expression in a fused scope "
+         "— the FMA-contraction hazard §9 (drain) and §11 (Eq. (3)) each "
+         "rewrote once; clamp or split the expression"),
+    Rule("CC-ASSOC", "ast", "§12",
+         "association/lowering parameter (trial_tile/client_tile/shard "
+         "width) resolved outside the shared resolve_trial_tile/"
+         "resolve_client_tile/resolve_shard_width resolvers"),
+    Rule("CC-TWIN", "ast", "§8/§9",
+         "xp-twin drift: the np and jnp arms of a policy_core xp-branch "
+         "use structurally different combining-op sets",
+         severity=SEV_WARNING),
+    Rule("CC-NOREASON", "ast", "§15",
+         "contract-ok suppression without a reason — every deliberate "
+         "deviation must say why", severity=SEV_WARNING),
+    Rule("CJ-SORT", "jaxpr", "§10",
+         "sort primitive inside a fused (pallas) jaxpr — reaches sorts "
+         "hidden behind helper indirection the AST cannot see"),
+    Rule("CJ-SUM", "jaxpr", "§9",
+         "raw float reduce_sum/cumsum inside a fused jaxpr whose operand "
+         "is not a masked select or integer/bool — the pinned trees "
+         "lower to explicit add chains and never emit this"),
+    Rule("CJ-RNG", "jaxpr", "§9",
+         "RNG primitive (threefry/random_bits/…) inside a fused jaxpr — "
+         "fused randomness is the shared LCG only"),
+]
+
+RULES: Dict[str, Rule] = {r.rule_id: r for r in _ALL}
+
+
+@dataclasses.dataclass
+class Finding:
+    """One violation: rule ID + location + message.  ``suppressed``
+    findings are kept (for --show-suppressed) but never fail a run."""
+
+    rule_id: str
+    path: str
+    line: int
+    message: str
+    severity: str = SEV_ERROR
+    suppressed: bool = False
+    func: Optional[str] = None
+
+    def format(self) -> str:
+        sup = " (suppressed)" if self.suppressed else ""
+        where = f"{self.path}:{self.line}"
+        return f"{where}: {self.rule_id} [{self.severity}]{sup} {self.message}"
+
+
+def apply_severity(findings, severity_map: Dict[str, str]):
+    """Stamp configured severities (config overrides registry default)."""
+    for f in findings:
+        rule = RULES.get(f.rule_id)
+        default = rule.severity if rule else SEV_ERROR
+        f.severity = severity_map.get(f.rule_id, default)
+    return findings

@@ -109,11 +109,13 @@ def group_by_object_with_map(work: Workload) -> Tuple[Workload, jax.Array]:
     """
     r = work.n_requests
     ids = jnp.where(work.valid, work.object_ids, jnp.iinfo(jnp.int32).max)
+    # contract-ok: CC-SORT engine-side step grouping keeps backend argsort (§10)
     order = jnp.argsort(ids, stable=True)
     s_ids = ids[order]
     s_len = work.lengths[order] * work.valid[order]
     is_first = jnp.concatenate([jnp.ones((1,), bool), s_ids[1:] != s_ids[:-1]])
     # segment id per sorted row = running count of firsts - 1
+    # contract-ok: CC-CUMSUM integer prefix count — association-free (§9)
     seg = jnp.cumsum(is_first) - 1
     summed = jax.ops.segment_sum(s_len, seg, num_segments=r)
     agg_len = jnp.where(is_first, summed[seg], 0.0)
@@ -585,8 +587,6 @@ def run_stream_batch(states: SchedState, works: Workload, keys: jax.Array, *,
         raise ValueError(
             f"run_stream_batch supports {KERNEL_POLICIES}, got "
             f"{policy.name!r}")
-    if trial_tile is None:
-        trial_tile = kops.DEFAULT_TRIAL_TILE
     batch_shape = works.object_ids.shape[:-1]     # (T,) or (T, C)
     two_d = len(batch_shape) == 2
     r = works.object_ids.shape[-1]

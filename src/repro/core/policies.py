@@ -163,12 +163,14 @@ def plan_window(cfg: PolicyConfig, state: SchedState, object_ids: jax.Array,
     r = object_ids.shape[0]
     m = state.n_servers
     # Servers sorted by probability desc == lightest first (paper Fig. 9/10).
+    # contract-ok: CC-SORT engine keeps backend argsort; kernel twin is rank_desc (§10)
     sorted_servers = jnp.argsort(-state.probs).astype(jnp.int32)
 
     if cfg.name in ("mlml", "nltr"):
         # Requests processed in length-desc order; invalid (padding) rows sink
         # to the end via -inf keys.
         key_len = jnp.where(valid, lengths, -jnp.inf)
+        # contract-ok: CC-SORT engine keeps backend argsort; kernel twin is rank_desc (§13)
         order = jnp.argsort(-key_len).astype(jnp.int32)
     else:
         order = jnp.arange(r, dtype=jnp.int32)

@@ -90,6 +90,22 @@ def resolve_client_tile(n_clients: int, client_tile=None) -> int:
     ct = DEFAULT_CLIENT_TILE if client_tile is None else client_tile
     return max(min(ct, n_clients), 1)
 
+
+# trials per program instance in the trial-grid form: the sublane count
+# of the native f32 (8, 128) TPU tile, so each vectorized table op fills
+# whole tiles instead of one sublane in eight.
+DEFAULT_TRIAL_TILE = 8
+
+
+def resolve_trial_tile(n_trials: int, trial_tile=None) -> int:
+    """Effective trials-per-block of the trial grid.  The tile is a
+    lowering parameter (XLA specializes the block shape to it), so the
+    kernel dispatch, the sharded sweep and the engine must all resolve
+    it through here — resolving it anywhere else risks two layers
+    disagreeing on the association (DESIGN.md §12)."""
+    tt = DEFAULT_TRIAL_TILE if trial_tile is None else trial_tile
+    return max(min(tt, n_trials), 1)
+
 # The in-kernel LCG (numerical recipes constants) — also used by the JAX
 # engine when ``PolicyConfig.rng == "lcg"`` so kernel and engine consume
 # an identical randomness stream (the bit-exactness contract).
@@ -492,10 +508,12 @@ def observe_update(ewma_lat, server, mb_per_s, alpha: float, xp=jnp):
         ewma_lat = ewma_lat.copy()
         old = ewma_lat[server]
         ewma_lat[server] = (mb_per_s if old == 0.0
+                            # contract-ok: CC-FMA EWMA row is 1e-6-soft (§9)
                             else (1 - alpha) * old + alpha * mb_per_s)
     else:
         old = ewma_lat[server]
         new = jnp.where(old == 0.0, mb_per_s,
+                        # contract-ok: CC-FMA EWMA row is 1e-6-soft (§9)
                         (1 - alpha) * old + alpha * mb_per_s)
         ewma_lat = ewma_lat.at[server].set(new)
     return ewma_lat, ect_rates(ewma_lat, xp)
@@ -512,7 +530,9 @@ def lane_sum(x, xp=jnp):
     reassociate, and leading halvings over all-zero upper halves are
     exact identities, so any zero-padded width yields the same bits.
     Returns shape (..., 1)."""
+    # contract-ok: CC-TWIN np arm IS the f64 host oracle (§9)
     if xp is np:
+        # contract-ok: CC-SUM host-twin sum is the reference association (§9)
         return x.sum(axis=-1, keepdims=True)
     m = x.shape[-1]
     size = 1
@@ -534,8 +554,10 @@ def renormalize_probs(probs, xp=jnp):
     The reduction runs through :func:`lane_sum` so the engine, the oracle
     and the (tiled) kernel all associate the sum identically — the last
     bit of the engine<->kernel parity contract."""
+    # contract-ok: CC-TWIN np arm IS the f64 host oracle (§9)
     if xp is np:
         p = np.clip(probs, 0.0, None)
+        # contract-ok: CC-SUM host-twin sum is the reference association (§9)
         return p / p.sum(axis=-1, keepdims=True)
     p = jnp.clip(probs, 0.0)
     return p / lane_sum(p)
@@ -551,8 +573,10 @@ def absorb_probs(loads, lam: float, m: int, xp=jnp):
     identically — the halving tree is batch-shape-invariant, whereas
     ``jnp.sum``'s reduction tree is a lowering choice that may differ
     between the two contexts.  Works on any ``(..., M)`` batch."""
+    # contract-ok: CC-TWIN np arm IS the f64 host oracle (§9)
     if xp is np:
         p = np.exp(-loads / lam) / m
+        # contract-ok: CC-SUM host-twin sum is the reference association (§9)
         return p / p.sum(axis=-1, keepdims=True)
     p = jnp.exp(-loads / lam) / m
     return p / lane_sum(p)
@@ -662,6 +686,7 @@ def nearest_rank_p99(lats, valid, xp=jnp):
     """
     lats = lats.astype(jnp.float32) if xp is jnp else lats.astype(np.float32)
     validf = valid.astype(lats.dtype)
+    # contract-ok: CC-SUM counting exact 0/1 floats — every association agrees (§9)
     nval = xp.sum(validf, axis=-1, keepdims=True)
     k = xp.ceil(lats.dtype.type(P99_Q) * nval) if xp is np \
         else xp.ceil(jnp.float32(P99_Q) * nval)

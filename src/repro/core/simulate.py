@@ -435,7 +435,8 @@ def _trial_result(cfg: SimConfig, window_dt: float, init, strag_mask, work,
                                      num_segments=cfg.n_servers)
     if cfg.scenario is not None:
         strag_mask = strag_mask | trace_straggler_mask(trace, cfg.scenario)
-    hits = jnp.sum(strag_mask[chosen])
+    # integer sum: hit counts are backend-invariant under any association
+    hits = jnp.sum(strag_mask[chosen].astype(jnp.int32))
     if phase_time is None:
         # completion estimate = window open time + queueing latency.
         # max(·, 0) is the §9 FMA guard (a window open time is
@@ -452,7 +453,7 @@ def _trial_result(cfg: SimConfig, window_dt: float, init, strag_mask, work,
     return TrialResult(server_loads=init + written, n_assigned=n_assigned,
                        chosen=chosen, probe_msgs=probe_msgs,
                        straggler_hits=hits,
-                       redirected=jnp.sum(redirected),
+                       redirected=jnp.sum(redirected.astype(jnp.int32)),
                        init_loads=init, straggler_mask=strag_mask,
                        latencies=latencies,
                        phase_time=phase_time,

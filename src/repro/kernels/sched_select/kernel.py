@@ -388,6 +388,7 @@ def _sched_stream_kernel(objs_ref, lens_ref, valid_ref, table_ref, seed_ref,
                 ewma = tbl[ROW_EWMA]
                 old = pick(ewma, onehot)
                 new = jnp.where(old == 0.0, mbps,
+                                # contract-ok: CC-FMA EWMA row is 1e-6-soft (§9)
                                 (1 - alpha) * old + alpha * mbps)
                 new_ewma = jnp.where(upd, new, ewma)
                 tbl[ROW_EWMA] = new_ewma

@@ -31,8 +31,10 @@ from typing import Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.core.policy_core import (N_CMETRICS, N_METRICS, init_table,
-                                    resolve_client_tile)
+from repro.core.policy_core import (DEFAULT_TRIAL_TILE, N_CMETRICS,
+                                    N_METRICS, init_table,
+                                    resolve_client_tile,
+                                    resolve_trial_tile)
 from repro.kernels.sched_select.kernel import (sched_select_call,
                                                sched_stream_call,
                                                sched_stream_grid_call)
@@ -55,11 +57,6 @@ def _check_policy(policy: str, n_servers: int, nltr_n: int) -> None:
         raise ValueError(
             f"nltr needs 2**nltr_n <= n_servers: nltr_n={nltr_n} gives "
             f"K={2 ** nltr_n} sections for n_servers={n_servers}")
-
-# trials per program instance in the trial-grid form: the sublane count
-# of the native f32 (8, 128) TPU tile, so each vectorized table op fills
-# whole tiles instead of one sublane in eight.
-DEFAULT_TRIAL_TILE = 8
 
 
 def _pad_servers(m: int) -> int:
@@ -170,7 +167,7 @@ def sched_stream_batch(object_ids: jax.Array, lengths: jax.Array,
                        lam: float = 32.0, alpha: float = 0.25,
                        window_dt: float = 0.0, policy: str = "ect",
                        observe: bool = True, renorm: bool = True,
-                       trial_tile: int = DEFAULT_TRIAL_TILE,
+                       trial_tile: Optional[int] = None,
                        nltr_n: int = 2, probe_choices: int = 2,
                        interpret: Optional[bool] = None
                        ) -> Tuple[jax.Array, jax.Array, jax.Array,
@@ -195,7 +192,7 @@ def sched_stream_batch(object_ids: jax.Array, lengths: jax.Array,
     interpret = _auto_interpret(interpret)
     t, n = object_ids.shape
     m = tables.shape[-1]
-    tile = min(trial_tile, t) if t else 1
+    tile = resolve_trial_tile(t, trial_tile)
     t_pad = -(-t // tile) * tile
     m_pad = _pad_servers(m)
     if t_pad != t:
@@ -242,7 +239,7 @@ def sched_stream_grid(object_ids: jax.Array, lengths: jax.Array,
                       lam: float = 32.0, alpha: float = 0.25,
                       window_dt: float = 0.0, policy: str = "ect",
                       observe: bool = True, renorm: bool = True,
-                      trial_tile: int = DEFAULT_TRIAL_TILE,
+                      trial_tile: Optional[int] = None,
                       client_tile: Optional[int] = None,
                       nltr_n: int = 2, probe_choices: int = 2,
                       merge_mean: bool = True,
@@ -283,7 +280,7 @@ def sched_stream_grid(object_ids: jax.Array, lengths: jax.Array,
     interpret = _auto_interpret(interpret)
     t, c, n = object_ids.shape
     m = tables.shape[-1]
-    tile_t = min(trial_tile, t) if t else 1
+    tile_t = resolve_trial_tile(t, trial_tile)
     tile_c = resolve_client_tile(c, client_tile)
     t_pad = -(-t // tile_t) * tile_t
     c_pad = -(-c // tile_c) * tile_c

@@ -134,7 +134,7 @@ def sched_stream_ref(object_ids: jax.Array, lengths: jax.Array,
                 rank_req, (obj, lens, val.astype(jnp.int32)))
             val_p = val_p != 0
             if policy == "nltr":
-                nvalid = jnp.sum(val).astype(jnp.int32).reshape(1)
+                nvalid = jnp.sum(val.astype(jnp.int32)).reshape(1)
                 skeys = permute_to_sorted(rank_req, (mkeys,))[0]
                 bounds = recursive_average_bounds(skeys, nvalid, nltr_n)
         else:
@@ -214,6 +214,7 @@ def sched_stream_ref(object_ids: jax.Array, lengths: jax.Array,
                 mbps = ln / jnp.maximum(lat, 1e-9)
                 old = ewma[choose]
                 new = jnp.where(old == 0.0, mbps,
+                                # contract-ok: CC-FMA EWMA row is 1e-6-soft (§9)
                                 (1 - alpha) * old + alpha * mbps)
                 ewma = jnp.where(upd, jnp.where(onehot, new, ewma), ewma)
                 dflt = jnp.maximum(jnp.max(ewma), 1.0)

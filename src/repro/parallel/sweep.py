@@ -128,10 +128,9 @@ def run_sweep(states, works, keys, *, mesh_shape: Optional[Tuple[int, ...]],
     # (XLA specializes elementwise code to the block shape), so it must
     # resolve on every device exactly as the single-device dispatch
     # resolves it from the global T: pin the globally-resolved tile and
-    # keep every shard at least that long so `ops`' min(tile, T_local)
-    # cannot clamp it differently (DESIGN.md §12).
-    tt_cfg = kops.DEFAULT_TRIAL_TILE if trial_tile is None else trial_tile
-    tt_eff = max(min(tt_cfg, t), 1)
+    # keep every shard at least that long so `ops`' resolve_trial_tile
+    # of T_local cannot clamp it differently (DESIGN.md §12).
+    tt_eff = kops.resolve_trial_tile(t, trial_tile)
     t_loc = max(-(-t // t_dev), tt_eff) if backend == "kernel" \
         else -(-t // t_dev)
     t_pad = t_loc * t_dev

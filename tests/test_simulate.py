@@ -589,3 +589,25 @@ def test_nearest_rank_p99_pinned_and_latency_stats():
     # all-invalid -> exactly 0 (the kernel's dead-trial pin)
     p99z = policy_core.nearest_rank_p99(lats, np.zeros(200, bool), xp=np)
     assert float(np.asarray(p99z).reshape(-1)[0]) == 0.0
+
+
+def test_metric_counts_are_integer_and_backend_invariant():
+    """Regression for the §15 contract sweep: ``straggler_hits`` and
+    ``redirected`` are integer sums (`jnp.sum` over int32 casts), so the
+    counts are exact under any reduction association — the kernel and
+    jax backends must agree bit-for-bit and the dtype must stay
+    integral (a float accumulation here would be a contract break the
+    linter's CC-SUM rule now also flags)."""
+    cfg_k = SimConfig(n_servers=20, n_requests=150, n_trials=4,
+                      window_size=50, backend="kernel",
+                      straggler_frac=0.15, straggler_factor=5.0)
+    cfg_j = dataclasses.replace(cfg_k, backend="jax")
+    log = simulate.default_log_cfg(cfg_k)
+    pol = PolicyConfig(name="trh", threshold=4.0, rng="lcg")
+    a = simulate.run_trials(KEY, cfg_k, pol, log)
+    b = simulate.run_trials(KEY, cfg_j, pol, log)
+    for f in ("straggler_hits", "redirected"):
+        xa = np.asarray(getattr(a, f))
+        assert np.issubdtype(xa.dtype, np.integer), (f, xa.dtype)
+        np.testing.assert_array_equal(xa, np.asarray(getattr(b, f)),
+                                      err_msg=f)
