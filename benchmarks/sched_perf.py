@@ -65,6 +65,28 @@ def _git_dirty() -> Optional[bool]:
     return bool(out.stdout.strip())
 
 
+def _stamp_git(point: dict) -> dict:
+    """Stamp ``git_sha``/``git_dirty`` onto a bench point, warning LOUDLY
+    when the tree is dirty — a dirty-tree number silently entering the
+    trajectory is exactly how a regression hides behind an uncommitted
+    tweak.  Returns the point for chaining."""
+    sha = _git_sha()
+    if sha:
+        point["git_sha"] = sha
+        dirty = _git_dirty()
+        if dirty is not None:
+            point["git_dirty"] = dirty
+            if dirty:
+                print("=" * 72, file=sys.stderr)
+                print("[sched_perf] WARNING: working tree is DIRTY — this "
+                      "bench point is\n[sched_perf] stamped git_dirty=true "
+                      "and will NOT serve as a regression baseline.\n"
+                      "[sched_perf] Commit first for a clean trajectory "
+                      f"point (HEAD {sha[:12]}).", file=sys.stderr)
+                print("=" * 72, file=sys.stderr)
+    return point
+
+
 # Memoized: run_all prints a full iteration table and emit_bench_point
 # re-reads three of the same cells — don't pay for the simulation twice.
 @functools.lru_cache(maxsize=None)
@@ -371,6 +393,99 @@ def kernel_per_client_throughput(n_servers: int = 100,
               f"{out['per_client_bit_exact']}"
               + ("" if out["per_client_bit_exact"] else "  <-- DIVERGED"))
     return out
+
+
+@functools.lru_cache(maxsize=None)   # run_all + emit_bench_point share it
+def tuned_kernel_throughput(n_servers: int = 100, n_requests: int = 2000,
+                            window_size: int = 100, n_trials: int = 100,
+                            reps: int = 3, policy: str = "ect",
+                            threshold: float = 0.05,
+                            n_clients: Optional[int] = None
+                            ) -> Dict[str, float]:
+    """Tuned-lowering sweep throughput (DESIGN.md §16): the SAME kernel
+    trial sweep with ``SimConfig.tiles="tuned"`` (tile shapes from the
+    TUNE_sched.json table, fused-resolver fallback on a cache miss) vs
+    the static default lowering, plus the bitwise equality of the two
+    TrialResults — tiles are association parameters, so a tuned run must
+    be the same result, just lowered faster.
+
+    ``n_clients`` switches to the per_client 2-D grid form (the
+    fused-block case: a 4-client stream wastes 28 of 32 sublanes at the
+    static default client tile)."""
+    import dataclasses
+
+    import jax
+    from repro.core import simulate
+    from repro.core.simulate import ScenarioConfig, SimConfig
+
+    cfg = SimConfig(n_servers=n_servers, n_requests=n_requests,
+                    n_trials=n_trials, window_size=window_size,
+                    backend="kernel",
+                    n_clients=(n_clients or 1),
+                    client_model=("per_client" if n_clients else
+                                  "shared_log"),
+                    scenario=ScenarioConfig(name="transient"))
+    log_cfg = simulate.default_log_cfg(cfg)
+    rng = "lcg" if policy in ("trh", "nltr", "two_choice") else "jax"
+    pol = PolicyConfig(name=policy, threshold=threshold, rng=rng)
+    key = jax.random.key(0)
+    out: Dict[str, float] = {
+        "n_servers": n_servers, "n_requests": n_requests,
+        "n_trials": n_trials, "reps": reps, "policy": policy}
+    warm = {}
+    for mode in ("default", "tuned"):
+        mcfg = dataclasses.replace(cfg, tiles=mode)
+        dt, w = _median_time(
+            lambda: simulate.run_trials(key, mcfg, pol, log_cfg), reps)
+        warm[mode] = w
+        out[f"{mode}_s"] = dt
+        out[f"{mode}_req_s"] = n_trials * n_requests / dt
+    out["speedup"] = out["default_s"] / out["tuned_s"]
+    out["tuned_bit_exact"] = bool(all(
+        (np.asarray(getattr(warm["tuned"], f))
+         == np.asarray(getattr(warm["default"], f))).all()
+        for f in warm["tuned"]._fields))
+    form = (f"per_client {n_clients}c 2-D grid" if n_clients
+            else "trial grid")
+    print(f"\n== tuned-lowering sweep throughput ({n_servers} OSS x "
+          f"{n_requests} reqs x {n_trials} trials, {form}, "
+          f"policy={policy}, median of {reps}) ==")
+    for mode in ("default", "tuned"):
+        print(f"  {mode:>8s} tiles: {out[f'{mode}_s']:8.3f}s  "
+              f"{out[f'{mode}_req_s']:10.0f} req/s aggregate")
+    print(f"  tuned speedup {out['speedup']:.2f}x; TrialResult bit-exact "
+          f"vs default lowering: {out['tuned_bit_exact']}"
+          + ("" if out["tuned_bit_exact"] else "  <-- DIVERGED"))
+    return out
+
+
+@functools.lru_cache(maxsize=None)   # run_all + emit_bench_point share it
+def kernel_phase_profile_point(n_servers: int = 100,
+                               n_requests: int = 2000,
+                               window_size: int = 100,
+                               n_trials: int = 100,
+                               reps: int = 3) -> Dict[str, float]:
+    """Per-window-phase attribution of the full-scale trial-grid kernel
+    wall time (differential over the kernel's cumulative ``ablate``
+    levels, `repro.tune.profile.kernel_phase_profile`) — names WHICH
+    phase owns the kernel-vs-engine gap instead of leaving it a single
+    opaque number."""
+    from repro.tune import profile as tune_profile
+
+    prof = tune_profile.kernel_phase_profile(
+        n_servers=n_servers, n_requests=n_requests,
+        window_size=window_size, n_trials=n_trials, reps=reps)
+    phases = {k: prof[k] for k in ("metrics_s", "steps_s", "plan_s",
+                                   "dispatch_s")}
+    gap = max(phases, key=lambda k: phases[k])
+    print(f"\n== kernel per-phase profile ({n_servers} OSS x "
+          f"{n_requests} reqs x {n_trials} trials, differential over "
+          f"ablate levels, median of {reps}) ==")
+    for k in ("total_s",) + tuple(phases):
+        frac = prof[k] / max(prof["total_s"], 1e-12)
+        print(f"  {k:>11s}: {prof[k]:8.3f}s  ({100 * frac:5.1f}%)")
+    print(f"  dominant phase: {gap.replace('_s', '')}")
+    return {**prof, "gap_phase": gap.replace("_s", "")}
 
 
 @functools.lru_cache(maxsize=None)   # run_all + emit_bench_point share it
@@ -728,6 +843,32 @@ def emit_bench_point(path: str = BENCH_PATH,
                 sh[f"sharded_engine_req_s_{d}d"]
         point["sharded_bit_exact"] = bool(
             sh["sharded_bit_exact"] and sh["sharded_cross_backend_exact"])
+    # §16 tuned-lowering series: the same full-scale sweeps with tiles
+    # resolved through the tuner table (fused-resolver fallback on a
+    # cache miss), each with its bit-exact flag vs the default lowering
+    # and the tuned/default speedup; the per_client 4-client row is the
+    # fused multi-trial block case (28 of 32 sublanes idle at the static
+    # default client tile)
+    for spol, thr_ in (("ect", 0.05), ("mlml", 5.0), ("nltr", 5.0)):
+        tn = tuned_kernel_throughput(n_servers=kernel_scale,
+                                     n_trials=batch_trials, policy=spol,
+                                     threshold=thr_)
+        suffix = "" if spol == "ect" else f"_{spol}"
+        point[f"tuned_kernel_req_s{suffix}"] = tn["tuned_req_s"]
+        point[f"tuned_speedup{suffix}"] = tn["speedup"]
+        point[f"tuned_bit_exact{suffix}"] = tn["tuned_bit_exact"]
+    tp = tuned_kernel_throughput(n_servers=kernel_scale,
+                                 n_trials=batch_trials, n_clients=4)
+    point["tuned_kernel_req_s_per_client_4c"] = tp["tuned_req_s"]
+    point["tuned_speedup_per_client_4c"] = tp["speedup"]
+    point["tuned_bit_exact_per_client_4c"] = tp["tuned_bit_exact"]
+    # §16 per-phase kernel profile: attributes the kernel-vs-engine gap
+    # to a NAMED window phase (differential over ablate levels)
+    prof = kernel_phase_profile_point(n_servers=kernel_scale,
+                                      n_trials=batch_trials)
+    for k in ("total_s", "metrics_s", "steps_s", "plan_s", "dispatch_s"):
+        point[f"kernel_phase_{k}"] = prof[k]
+    point["kernel_gap_phase"] = prof["gap_phase"]
     # contract linter (DESIGN.md §15): lint wall time as a trajectory
     # series plus the clean flag — a point measured on a dirty-contract
     # tree is visibly tainted
@@ -737,12 +878,8 @@ def emit_bench_point(path: str = BENCH_PATH,
                  if not f.suppressed]
     point["contractcheck_s"] = time.time() - t_lint
     point["contractcheck_clean"] = not lint_live
-    sha = _git_sha()
-    if sha:
-        point["git_sha"] = sha
-        dirty = _git_dirty()
-        if dirty is not None:
-            point["git_dirty"] = dirty
+    _stamp_git(point)
+    sha = point.get("git_sha")
     history = []
     if os.path.exists(path):
         try:
@@ -806,18 +943,28 @@ def trajectory(path: str = BENCH_PATH,
     # sort-policy rows, the per_client 2-D-grid pair) — every access is
     # a tolerant .get.
     thr_cols = ("engine_req_s", "kernel_req_s", "kernel_batch_req_s",
+                "tuned_kernel_req_s",
                 "kernel_batch_req_s_mlml", "engine_req_s_mlml",
+                "tuned_kernel_req_s_mlml",
                 "kernel_batch_req_s_nltr", "engine_req_s_nltr",
+                "tuned_kernel_req_s_nltr",
                 "kernel_batch_req_s_per_client", "engine_req_s_per_client",
+                "tuned_kernel_req_s_per_client_4c",
                 "e2e_req_s_kernel", "e2e_seq_req_s_kernel",
                 "e2e_req_s_jax", "e2e_seq_req_s_jax",
                 "sharded_req_s_8d", "sharded_engine_req_s_8d")
     print(f"\n== perf trajectory ({len(history)} runs, {path}) ==")
-    print(f"{'run':>4s} {'when':>16s} " +
+    # the dirty column marks points measured on an uncommitted tree
+    # (git_dirty=true): their numbers are real but must never serve as
+    # regression baselines — "·" is clean, "D" is dirty, "?" predates
+    # the stamp
+    print(f"{'run':>4s} {'when':>16s} {'dirty':>5s} " +
           " ".join(f"{c.replace('phase_s_', 'ph_'):>14s}" for c in cols))
     prev = None
     for i, pt in enumerate(history):
         when = time.strftime("%m-%d %H:%M", time.localtime(pt.get("ts", 0)))
+        dirty = ("?" if "git_dirty" not in pt
+                 else "D" if pt["git_dirty"] else "·")
         cells = []
         for c in cols:
             v = pt.get(c)
@@ -828,7 +975,7 @@ def trajectory(path: str = BENCH_PATH,
                 cells.append(f"{v:8.2f}{d:+6.2f}")
             else:
                 cells.append(f"{v:8.2f}{'':>6s}")
-        print(f"{i:>4d} {when:>16s} " + " ".join(cells))
+        print(f"{i:>4d} {when:>16s} {dirty:>5s} " + " ".join(cells))
         prev = pt
 
     # only the SAME-policy kernel series compare against engine_req_s;
@@ -858,6 +1005,18 @@ def trajectory(path: str = BENCH_PATH,
             se = pt.get(f"engine_req_s_{spol}")
             if sk is not None and se is not None and sk < se:
                 behind.append(f"kernel_batch_{spol}")
+        # tuned series compare against their UNTUNED kernel twins — the
+        # tuner's whole contract is "never slower than the static
+        # default lowering"
+        for tuned, untuned in (
+                ("tuned_kernel_req_s", "kernel_batch_req_s"),
+                ("tuned_kernel_req_s_mlml", "kernel_batch_req_s_mlml"),
+                ("tuned_kernel_req_s_nltr", "kernel_batch_req_s_nltr"),
+                ("tuned_kernel_req_s_per_client_4c",
+                 "kernel_batch_req_s_per_client_4c")):
+            tk, uk = pt.get(tuned), pt.get(untuned)
+            if tk is not None and uk is not None and tk < uk:
+                behind.append(tuned.replace("_kernel_req_s", ""))
         # sharded series compare ONLY against the same-device-count
         # engine twin — a 2-device sharded row vs the 1-device engine
         # number would conflate scaling with backend speed
@@ -1024,6 +1183,50 @@ def run_smoke() -> None:
                 == np.asarray(getattr(r_seq, f))).all()
                for f in r_bat._fields), "batched prep != sequential oracle"
     print("  batched prep/post pipeline bit-exact vs lax.map oracle: True")
+    # lowering autotuner (DESIGN.md §16): one tiny tune round into a
+    # throwaway table, then a tuned-tiles kernel run must be bit-exact
+    # with the DEFAULT-tile jax engine twin — trial_tile is
+    # lowering-only and the tuned client tile resolves identically
+    # cross-backend (the kernel-key fallback), so tuning can never move
+    # a result
+    import tempfile
+    from repro.tune import autotune
+    from repro.tune import profile as tune_profile
+    old_tune_path = os.environ.get("SCHED_TUNE_PATH")
+    with tempfile.TemporaryDirectory() as td:
+        os.environ["SCHED_TUNE_PATH"] = os.path.join(td, "TUNE.json")
+        try:
+            cfg_t = SimConfig(n_servers=24, n_requests=480, n_trials=10,
+                              window_size=60, backend="kernel",
+                              scenario=ScenarioConfig(name="transient"))
+            log_t = simulate.default_log_cfg(cfg_t)
+            pol_t = PolicyConfig(name="ect", threshold=0.05, rng="lcg")
+            _, entry = autotune.tune_config(cfg_t, pol_t, reps=1)
+            r_tuned = simulate.run_trials(
+                jax.random.key(0),
+                dataclasses.replace(cfg_t, tiles="tuned"), pol_t, log_t)
+            r_twin = simulate.run_trials(
+                jax.random.key(0),
+                dataclasses.replace(cfg_t, backend="jax"), pol_t, log_t)
+            assert all((np.asarray(getattr(r_tuned, f))
+                        == np.asarray(getattr(r_twin, f))).all()
+                       for f in r_tuned._fields), \
+                "tuned-tile kernel != default-tile engine twin"
+            print(f"  tuned tiles (tt={entry['trial_tile']}) bit-exact vs "
+                  "default-tile engine twin: True")
+        finally:
+            if old_tune_path is None:
+                os.environ.pop("SCHED_TUNE_PATH", None)
+            else:
+                os.environ["SCHED_TUNE_PATH"] = old_tune_path
+    # ablate phase profiling sanity: levels are cumulative, so every
+    # differential phase is nonnegative and the full run dominates
+    prof = tune_profile.kernel_phase_profile(
+        n_servers=24, n_requests=480, window_size=60, n_trials=6, reps=1)
+    assert prof["total_s"] > 0 and all(
+        prof[k] >= 0 for k in ("metrics_s", "steps_s", "plan_s",
+                               "dispatch_s")), prof
+    print(f"  ablate phase profile sane (total {prof['total_s']:.3f}s)")
     # sharded sweep (DESIGN.md §12) when the process has devices to
     # shard over (CI's multidevice job forces 8): the whole mesh=(dc,)
     # sweep must be bit-exact vs this process's single-device dispatch,
@@ -1122,16 +1325,39 @@ def run_all() -> None:
         kernel_per_client_throughput(n_servers=100, n_trials=100,
                                      n_clients=n_c,
                                      check_bit_exact=(n_c == 16))
+    for spol, thr_ in (("ect", 0.05), ("mlml", 5.0), ("nltr", 5.0)):
+        tuned_kernel_throughput(n_servers=100, n_trials=100, policy=spol,
+                                threshold=thr_)
+    tuned_kernel_throughput(n_servers=100, n_trials=100, n_clients=4)
+    kernel_phase_profile_point(n_servers=100, n_trials=100)
 
 
 if __name__ == "__main__":
-    if "--sharded-worker" in sys.argv:
-        _sharded_worker(
-            json.loads(sys.argv[sys.argv.index("--sharded-worker") + 1]))
-    elif "--smoke" in sys.argv:
-        run_smoke()
-    elif "--trajectory" in sys.argv:
-        trajectory()
-    else:
-        run_all()
-        emit_bench_point()
+    # --profile-trace [dir]: wrap the selected mode in a jax.profiler
+    # trace (viewable with tensorboard/perfetto) — opt-in because trace
+    # files are large and tracing perturbs the wall numbers
+    _ctx = None
+    if "--profile-trace" in sys.argv:
+        _i = sys.argv.index("--profile-trace")
+        _dir = (sys.argv[_i + 1]
+                if len(sys.argv) > _i + 1
+                and not sys.argv[_i + 1].startswith("--")
+                else os.path.join(_REPO_ROOT, "profile_trace"))
+        import jax
+        _ctx = jax.profiler.trace(_dir)
+        print(f"[sched_perf] jax.profiler trace -> {_dir}")
+        _ctx.__enter__()
+    try:
+        if "--sharded-worker" in sys.argv:
+            _sharded_worker(
+                json.loads(sys.argv[sys.argv.index("--sharded-worker") + 1]))
+        elif "--smoke" in sys.argv:
+            run_smoke()
+        elif "--trajectory" in sys.argv:
+            trajectory()
+        else:
+            run_all()
+            emit_bench_point()
+    finally:
+        if _ctx is not None:
+            _ctx.__exit__(None, None, None)

@@ -21,6 +21,11 @@ idioms they deliberately admit:
 * **CC-ASSOC** — association parameters may be *passed through* calls
   but never fed to ``min``/``max``/arithmetic or defaulted with
   ``x if p is None else p`` outside the shared resolvers.
+* **CC-TILE** — attribute reads of tile association fields
+  (``cfg.trial_tile`` …) outside resolver bodies are flagged unless the
+  read is an argument of a resolver call — every layer takes its tiles
+  from the shared resolver/tuner surface (§16), so no layer can read a
+  tile the tuner didn't resolve.
 * **CC-TWIN** — for ``xp=jnp|np`` twin functions, the np and jnp arms
   of every ``if xp is np`` / ternary must use the same *set* of
   value-combining operations (±*/ and the math-call vocabulary);
@@ -276,6 +281,10 @@ class _FileChecker(ast.NodeVisitor):
         self.func_stack: List[str] = []
         # innermost enclosing FunctionDef's name-kind map
         self.kind_stack: List[Dict[str, str]] = [{}]
+        # Attribute nodes sanctioned for CC-TILE: tile-field reads that
+        # are arguments of a resolver call (registered in visit_Call
+        # before descent)
+        self._tile_ok: Set[int] = set()
 
     # -- plumbing ---------------------------------------------------------
 
@@ -373,6 +382,13 @@ class _FileChecker(ast.NodeVisitor):
         if name:
             self._check_rng_time(node, name)
         self._check_assoc_call(node)
+        if _terminal(name) in self.cfg.resolvers:
+            # feeding a tile field TO a resolver is the sanctioned read
+            for arg in list(node.args) + [kw.value for kw in node.keywords]:
+                for sub in ast.walk(arg):
+                    if isinstance(sub, ast.Attribute) and \
+                            sub.attr in self.cfg.assoc_params:
+                        self._tile_ok.add(id(sub))
         self.generic_visit(node)
 
     def _check_sum(self, node: ast.Call, operand: ast.AST,
@@ -458,6 +474,17 @@ class _FileChecker(ast.NodeVisitor):
                     self.emit("CC-ASSOC", node,
                               f"{node.func.id}({p}, …) — tile resolution "
                               "outside the shared resolvers (§12)")
+
+    def visit_Attribute(self, node: ast.Attribute) -> None:
+        if ("CC-TILE" in self.active and isinstance(node.ctx, ast.Load)
+                and node.attr in self.cfg.assoc_params
+                and not self._in_resolver()
+                and id(node) not in self._tile_ok):
+            self.emit("CC-TILE", node,
+                      f"raw read of tile field .{node.attr} outside the "
+                      "shared resolvers — route through resolve_*/"
+                      "resolve_sim_tiles (§16)")
+        self.generic_visit(node)
 
     def _check_assoc_binop(self, node: ast.BinOp) -> None:
         if "CC-ASSOC" not in self.active or self._in_resolver():

@@ -89,7 +89,7 @@ DEFAULTS: Dict[str, object] = {
                 "src/repro/parallel/sweep.py",
             ],
             "rules": ["CC-SUM", "CC-SORT", "CC-CUMSUM", "CC-RNG",
-                      "CC-TIME", "CC-FMA", "CC-TWIN"],
+                      "CC-TIME", "CC-FMA", "CC-TWIN", "CC-TILE"],
         },
         "dispatch": {
             "files": [
@@ -101,7 +101,7 @@ DEFAULTS: Dict[str, object] = {
                 "src/repro/core/statlog.py",
             ],
             "rules": ["CC-SORT", "CC-CUMSUM", "CC-RNG", "CC-TIME",
-                      "CC-ASSOC"],
+                      "CC-ASSOC", "CC-TILE"],
         },
     },
     # deliberate, §-documented deviations registered by scope (inline
@@ -112,10 +112,14 @@ DEFAULTS: Dict[str, object] = {
         # snapshot keeps stable np sorts, pinned equal to the kernel's
         # all-pairs rank (§10/§13)
         "src/repro/core/policies.py::HostScheduler": ["CC-RNG", "CC-SORT"],
+        # dataclass validation reads its own tile fields to reject
+        # non-positive values before any resolver ever sees them (§16)
+        "src/repro/core/simulate.py::SimConfig": ["CC-TILE"],
     },
     "severity": {},
     "resolvers": ["resolve_trial_tile", "resolve_client_tile",
-                  "resolve_shard_width"],
+                  "resolve_shard_width", "resolve_grid_tiles",
+                  "resolve_sim_tiles"],
     "assoc_params": ["trial_tile", "client_tile", "shard_width",
                      "DEFAULT_TRIAL_TILE", "DEFAULT_CLIENT_TILE"],
     "jaxpr_policies": ["ect", "mlml"],

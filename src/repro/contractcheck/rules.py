@@ -56,6 +56,11 @@ _ALL = [
          "association/lowering parameter (trial_tile/client_tile/shard "
          "width) resolved outside the shared resolve_trial_tile/"
          "resolve_client_tile/resolve_shard_width resolvers"),
+    Rule("CC-TILE", "ast", "§16",
+         "raw read of a tile association field (cfg.trial_tile/"
+         "cfg.client_tile/…) outside the shared resolvers — layers take "
+         "tile shapes from the resolver/tuner surface only, so a tuned "
+         "run cannot leak an unresolved tile into lowering"),
     Rule("CC-TWIN", "ast", "§8/§9",
          "xp-twin drift: the np and jnp arms of a policy_core xp-branch "
          "use structurally different combining-op sets",

@@ -41,6 +41,7 @@ import jax.numpy as jnp
 from repro.core import policies as P
 from repro.core import policy_core, statlog
 from repro.core.statlog import LogConfig, SchedState
+from repro.tune import profile as tune_profile
 
 # Policies the Pallas backend (kernels/sched_select) implements in-VMEM —
 # since the in-VMEM bitonic sort (DESIGN.md §10) this is every engine
@@ -517,6 +518,7 @@ def run_stream_batch(states: SchedState, works: Workload, keys: jax.Array, *,
                      trial_tile: Optional[int] = None,
                      client_tile: Optional[int] = None,
                      merge_mean: bool = True,
+                     ablate: int = 0,
                      backend: str = "kernel"
                      ) -> Tuple[ScheduleResult, Optional[jax.Array],
                                 Optional[ClientMerge]]:
@@ -558,11 +560,18 @@ def run_stream_batch(states: SchedState, works: Workload, keys: jax.Array, *,
     — the pre-reduced per-device block that the sharded sweep
     (`parallel/sweep.py`, DESIGN.md §12) folds across devices with
     `policy_core.psum_tree` before dividing once, globally.
+
+    ``ablate`` (kernel (T,) form only) drops trailing kernel window
+    phases for differential per-phase profiling (DESIGN.md §16, see
+    `repro.tune.profile.kernel_phase_profile`); outputs past the
+    dropped phase are zeros, so nonzero levels are timing-only.
     """
     from repro.kernels.sched_select import ops as kops
 
     if backend not in ("jax", "kernel"):
         raise ValueError(f"backend={backend!r} must be 'jax' or 'kernel'")
+    if ablate and backend != "kernel":
+        raise ValueError("ablate profiling levels need backend='kernel'")
     P.validate_policy(policy, states.n_servers)
     if observe is None:
         observe = traces is not None
@@ -589,6 +598,9 @@ def run_stream_batch(states: SchedState, works: Workload, keys: jax.Array, *,
             f"{policy.name!r}")
     batch_shape = works.object_ids.shape[:-1]     # (T,) or (T, C)
     two_d = len(batch_shape) == 2
+    if ablate and two_d:
+        raise ValueError("ablate profiling levels support the trial-grid "
+                         "(1-D) form only")
     r = works.object_ids.shape[-1]
     m = states.n_servers
 
@@ -608,8 +620,9 @@ def run_stream_batch(states: SchedState, works: Workload, keys: jax.Array, *,
                 seed, val, req_to_step)
 
     vprep = jax.vmap(jax.vmap(prep)) if two_d else jax.vmap(prep)
-    g_obj, g_lens, g_val, seeds, val, req_to_step = \
-        vprep(states, works, keys)
+    with tune_profile.stage("engine_prep"):
+        g_obj, g_lens, g_val, seeds, val, req_to_step = \
+            vprep(states, works, keys)
     if traces is not None:
         win_rates = jax.vmap(
             lambda tr: _window_rates(None, tr, n_win, window_dt)
@@ -627,19 +640,20 @@ def run_stream_batch(states: SchedState, works: Workload, keys: jax.Array, *,
               alpha=log_cfg.ewma_alpha, window_dt=window_dt,
               policy=policy.name, observe=observe, renorm=log_cfg.renorm,
               nltr_n=policy.nltr_n, probe_choices=policy.probe_choices)
-    if two_d:
-        (choices, lats, tables, wloads, metrics,
-         cm_wl, cm_met, cm_lats, cm_lval) = kops.sched_stream_grid(
-            g_obj, g_lens, g_val, states.log, seeds, win_rates,
-            trial_tile=trial_tile, client_tile=client_tile,
-            merge_mean=merge_mean, **kw)
-        merged = ClientMerge(window_loads_mean=cm_wl, metrics=cm_met,
-                             lats=cm_lats, lats_valid=cm_lval)
-    else:
-        choices, lats, tables, wloads, metrics = kops.sched_stream_batch(
-            g_obj, g_lens, g_val, states.log, seeds, win_rates,
-            trial_tile=trial_tile, **kw)
-        merged = None
+    with tune_profile.stage("kernel"):
+        if two_d:
+            (choices, lats, tables, wloads, metrics,
+             cm_wl, cm_met, cm_lats, cm_lval) = kops.sched_stream_grid(
+                g_obj, g_lens, g_val, states.log, seeds, win_rates,
+                trial_tile=trial_tile, client_tile=client_tile,
+                merge_mean=merge_mean, **kw)
+            merged = ClientMerge(window_loads_mean=cm_wl, metrics=cm_met,
+                                 lats=cm_lats, lats_valid=cm_lval)
+        else:
+            choices, lats, tables, wloads, metrics = kops.sched_stream_batch(
+                g_obj, g_lens, g_val, states.log, seeds, win_rates,
+                trial_tile=trial_tile, ablate=ablate, **kw)
+            merged = None
 
     # host-side bookkeeping: the SAME single-stream helper as the
     # sequential kernel path, vmapped over the batch axes (every op in
@@ -653,9 +667,10 @@ def run_stream_batch(states: SchedState, works: Workload, keys: jax.Array, *,
         vbook = jax.vmap(jax.vmap(book, in_axes=(0,) * 9 + (None,)))
     else:
         vbook = jax.vmap(book)
-    result = vbook(
-        states, choices, lats, tables, wloads,
-        g_obj.reshape(batch_shape + (n_win, window_size)),
-        g_val.reshape(batch_shape + (n_win, window_size)), val, req_to_step,
-        win_rates[:, -1])
+    with tune_profile.stage("book"):
+        result = vbook(
+            states, choices, lats, tables, wloads,
+            g_obj.reshape(batch_shape + (n_win, window_size)),
+            g_val.reshape(batch_shape + (n_win, window_size)), val,
+            req_to_step, win_rates[:, -1])
     return result, metrics, merged

@@ -106,6 +106,32 @@ def resolve_trial_tile(n_trials: int, trial_tile=None) -> int:
     tt = DEFAULT_TRIAL_TILE if trial_tile is None else trial_tile
     return max(min(tt, n_trials), 1)
 
+
+# Sublane budget of the FUSED multi-trial client block (DESIGN.md §16):
+# when the client tile resolves small (a 4-client stream fills 4 of the
+# 32 sublanes DEFAULT_CLIENT_TILE aims at), `resolve_grid_tiles` deepens
+# the TRIAL tile until the block's stream-sublane count tt*ct reaches
+# this budget — packing multiple trials into one sublane tile instead of
+# wasting the lanes, and cutting the grid's program count (the dominant
+# cost under interpret mode, where dispatch overhead is per program).
+FUSED_SUBLANE_BUDGET = 64
+
+
+def resolve_grid_tiles(n_trials: int, n_clients: int, trial_tile=None,
+                       client_tile=None) -> tuple:
+    """Joint (trial_tile, client_tile) of the fused multi-trial client
+    block.  The client tile resolves exactly as `resolve_client_tile`;
+    an unset trial tile then deepens to fill `FUSED_SUBLANE_BUDGET`
+    stream sublanes (never below the default).  Both values remain
+    ASSOCIATION parameters: every layer (kernel grid, engine twin, jax
+    cross-client fold, sharded sweep) must consume the pair this
+    function returns — resolving either half anywhere else risks two
+    layers disagreeing on the merge association (DESIGN.md §12/§16)."""
+    ct = resolve_client_tile(n_clients, client_tile)
+    if trial_tile is None:
+        trial_tile = max(FUSED_SUBLANE_BUDGET // ct, DEFAULT_TRIAL_TILE)
+    return resolve_trial_tile(n_trials, trial_tile), ct
+
 # The in-kernel LCG (numerical recipes constants) — also used by the JAX
 # engine when ``PolicyConfig.rng == "lcg"`` so kernel and engine consume
 # an identical randomness stream (the bit-exactness contract).

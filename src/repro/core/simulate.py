@@ -43,6 +43,8 @@ from repro.core import engine, policies, policy_core, statlog
 from repro.core.engine import ClusterTrace, Workload
 from repro.core.policies import PolicyConfig
 from repro.core.statlog import LogConfig, SchedState
+from repro.tune import profile as tune_profile
+from repro.tune import table as tune_table
 
 SIZE_CLASSES = ("small", "medium", "large", "mixed")
 
@@ -130,6 +132,16 @@ class SimConfig:
     # cross-client merge association (`policy_core.masked_client_sum`),
     # so it is resolved identically on the jax backend.
     client_tile: Optional[int] = None
+    # tile resolution mode (DESIGN.md §16): "default" = the static
+    # resolver defaults (the pre-tuner behaviour); "fused" = the
+    # `policy_core.resolve_grid_tiles` multi-trial client block (deepen
+    # the trial tile when the client tile is small); "tuned" = the
+    # cached `repro.tune` autotuner winner for this configuration (a
+    # cache miss degrades to "fused").  Whatever the mode, the pair is
+    # resolved ONCE per dispatch (`repro.tune.table.resolve_sim_tiles`)
+    # and threaded through every layer, so the tiles stay association
+    # parameters; explicit trial_tile/client_tile settings always win.
+    tiles: str = "default"
     # trial prep/post halo dispatch (DESIGN.md §14): "batched" traces
     # `_trial_setup` / `_trial_result` ONCE for the whole trial batch
     # (vmap) — bit-identical to the sequential shapes because the
@@ -185,6 +197,10 @@ class SimConfig:
                 f"client_tile={self.client_tile!r} must be a positive"
                 " client count per 2-D-grid program instance (or None for"
                 f" the policy_core default; n_clients={self.n_clients})")
+        if self.tiles not in tune_table.TILE_MODES:
+            raise ValueError(
+                f"tiles={self.tiles!r} must be one of "
+                f"{tune_table.TILE_MODES} (DESIGN.md §16)")
         if self.mesh_shape is not None:
             try:
                 ms = tuple(int(s) for s in self.mesh_shape)
@@ -604,6 +620,24 @@ def _sched_trials(cfg: SimConfig, policy: PolicyConfig, log_cfg: LogConfig,
         win = cfg.window_size
         run_works, run_keys, run_states = works, k_sched, states
 
+    # THE tuned-tile resolution point (DESIGN.md §16): resolve the
+    # (trial_tile, client_tile) pair ONCE — whichever mode cfg.tiles
+    # selects — and thread the explicit ints through every dispatch
+    # below (sweep, kernel grid, and the jax path's cross-client fold),
+    # so all layers consume identical tiles and the association contract
+    # holds no matter where the values came from.
+    n_dev = 1
+    if cfg.mesh_shape is not None:
+        for s in cfg.mesh_shape:
+            n_dev *= int(s)
+    eff_tt, eff_ct = tune_table.resolve_sim_tiles(
+        mode=cfg.tiles, policy=policy.name, backend=cfg.backend,
+        n_servers=cfg.n_servers, n_requests=cfg.n_requests,
+        n_clients=(c if per_client else 1), n_trials=t,
+        window_size=cfg.window_size, device_count=n_dev,
+        form=("grid" if per_client else "batch"),
+        trial_tile=cfg.trial_tile, client_tile=cfg.client_tile)
+
     metrics = merged = smerge = None
     if cfg.mesh_shape is not None:
         # sharded sweep: the same dispatch wrapped in shard_map over the
@@ -615,13 +649,13 @@ def _sched_trials(cfg: SimConfig, policy: PolicyConfig, log_cfg: LogConfig,
             policy=policy, log_cfg=log_cfg, window_size=win,
             backend=cfg.backend, group_steps=True, traces=traces,
             window_dt=window_dt, observe=observe,
-            trial_tile=cfg.trial_tile, client_tile=cfg.client_tile)
+            trial_tile=eff_tt, client_tile=eff_ct)
     elif cfg.backend == "kernel":
         res, metrics, merged = engine.run_stream_batch(
             run_states, run_works, run_keys, policy=policy,
             log_cfg=log_cfg, window_size=win, group_steps=True,
             traces=traces, window_dt=window_dt, observe=observe,
-            trial_tile=cfg.trial_tile, client_tile=cfg.client_tile)
+            trial_tile=eff_tt, client_tile=eff_ct)
     else:
         res, _, _ = engine.run_stream_batch(
             run_states, run_works, run_keys, policy=policy,
@@ -634,7 +668,7 @@ def _sched_trials(cfg: SimConfig, policy: PolicyConfig, log_cfg: LogConfig,
         # request order is the original stream), the contention
         # aggregates the masked merges over REAL clients
         r = cfg.n_requests
-        ct = policy_core.resolve_client_tile(c, cfg.client_tile)
+        ct = eff_ct          # the resolved association width (see above)
         cvalid = jnp.any(run_works.valid, axis=-1)           # (T, C)
         chosen = res.chosen.reshape(t, c * per)[:, :r]
         redirected = res.redirected.reshape(t, c * per)[:, :r]
@@ -713,12 +747,20 @@ def _run_batched(keys: jax.Array, cfg: SimConfig, policy: PolicyConfig,
     `_post_trials` (the TrialResult bookkeeping stack).  Each stage is
     independently jittable with ``cfg``/``policy``/``log_cfg`` static,
     which is how `benchmarks/sched_perf.py` times the prep/sched/post
-    phase breakdown."""
-    prep = _prep_trials(keys, cfg, log_cfg)
+    phase breakdown.
+
+    The `repro.tune.profile.stage` wrappers are inert unless a
+    ``profile.collect()`` block is active (an eager profiling run);
+    under normal jitted dispatch they cost nothing and record nothing
+    (timing a traced stage would measure tracing, DESIGN.md §16)."""
+    with tune_profile.stage("prep"):
+        prep = _prep_trials(keys, cfg, log_cfg)
     init, strag_mask, works, states, traces, k_sched = prep
-    sched = _sched_trials(cfg, policy, log_cfg, works, states, k_sched,
-                          traces)
-    return _post_trials(cfg, init, strag_mask, works, traces, *sched)
+    with tune_profile.stage("sched"):
+        sched = _sched_trials(cfg, policy, log_cfg, works, states, k_sched,
+                              traces)
+    with tune_profile.stage("post"):
+        return _post_trials(cfg, init, strag_mask, works, traces, *sched)
 
 
 @functools.partial(jax.jit, static_argnames=("cfg", "policy", "log_cfg"))

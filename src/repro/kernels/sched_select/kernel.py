@@ -136,8 +136,19 @@ def _sched_stream_kernel(objs_ref, lens_ref, valid_ref, table_ref, seed_ref,
                          alpha: float, window_dt: float, policy: str,
                          observe: bool, renorm: bool, nltr_n: int,
                          probe_choices: int, client_tile: int = 0,
-                         n_client_blocks: int = 1, merge_mean: bool = True):
+                         n_client_blocks: int = 1, merge_mean: bool = True,
+                         ablate: int = 0):
     """One program instance of the stream kernel.
+
+    ``ablate`` (trial-grid form only) drops whole window phases for
+    DIFFERENTIAL per-phase profiling (DESIGN.md §16): 0 = the full
+    kernel; 1 = skip the fused metrics reduction; 2 = also skip the
+    per-request step loop; 3 = also skip the window-start sort/plan.
+    Levels are cumulative so every retained phase still sees the inputs
+    it would normally see.  Ablated outputs are NOT contract-bearing
+    (choices/latencies/metrics are zeros past the dropped phase) — the
+    levels exist only so `benchmarks/sched_perf.py` can attribute the
+    kernel's wall time phase by phase via timing differences.
 
     Trial-grid form (``client_tile == 0``): refs carry a leading
     ``t_tile`` stream axis; ``rest`` is the ``(N_ROWS, t_tile, m_pad)``
@@ -157,6 +168,12 @@ def _sched_stream_kernel(objs_ref, lens_ref, valid_ref, table_ref, seed_ref,
     the 1-D form."""
     m = n_servers
     grid_2d = client_tile > 0
+    if grid_2d and ablate:
+        raise ValueError("ablate profiling levels support the trial-grid "
+                         "(1-D) form only")
+    do_metrics = ablate < 1
+    do_steps = ablate < 2
+    do_plan = ablate < 3
     if grid_2d:
         cm_wloads_ref, cm_metrics_ref, cm_lats_ref, cm_lval_ref, tbl = rest
         s_tile = t_tile * client_tile
@@ -234,7 +251,7 @@ def _sched_stream_kernel(objs_ref, lens_ref, valid_ref, table_ref, seed_ref,
         cur_rates = jnp.where(lv, trial_row(rates_ref, w), 1.0)
         sort_policy = policy in ("mlml", "nltr")
 
-        if policy in ("trh", "mlml", "nltr"):
+        if policy in ("trh", "mlml", "nltr") and do_plan:
             # Window-start plan (DESIGN.md §13): rank servers by
             # probability desc with ONE all-pairs comparison, then land
             # the server ids in rank order with a single permutation
@@ -253,7 +270,7 @@ def _sched_stream_kernel(objs_ref, lens_ref, valid_ref, table_ref, seed_ref,
             return jnp.sum(jnp.where(srt_lane == p, order_srv, 0), axis=-1,
                            keepdims=True).astype(jnp.int32)
 
-        if sort_policy:
+        if sort_policy and do_plan:
             # MLML/nLTR process the window's requests in length-desc
             # order (DESIGN.md §13): rank the request block with one
             # all-pairs comparison, land obj/len/valid in sorted order
@@ -399,7 +416,12 @@ def _sched_stream_kernel(objs_ref, lens_ref, valid_ref, table_ref, seed_ref,
 
         wopen = w.astype(jnp.float32) * jnp.float32(window_dt)
 
-        if sort_policy:
+        if not do_steps:
+            # ablate >= 2: the window keeps its renorm/drain bookkeeping
+            # but schedules nothing — the timing delta vs level 1 is the
+            # step loop's cost.
+            carry = (rng, mk, lsum, lmax, nval)
+        elif sort_policy:
             def sorted_req_body(j, carry):
                 rng, ch_acc, lat_acc = carry
                 sel = ws_lane == j              # PROCESSING position j
@@ -502,28 +524,31 @@ def _sched_stream_kernel(objs_ref, lens_ref, valid_ref, table_ref, seed_ref,
     # host twins — keep the float ops in lockstep with them.)
     lats_all = all_req(lats_ref)                             # (s, N)
     val_all = all_req(valid_ref) != 0
-    k = jnp.ceil(jnp.float32(P99_Q) * nval)
-    lo = jnp.full((s_tile, 1), -1.0, jnp.float32)
-    hi = lmax
-
-    def bisect(_, lo_hi):
-        lo, hi = lo_hi
-        mid = jnp.float32(0.5) * (lo + hi)
-        cnt = jnp.sum(jnp.where(val_all & (lats_all <= mid), 1.0, 0.0),
-                      axis=-1, keepdims=True)
-        go_hi = cnt >= k
-        return jnp.where(go_hi, lo, mid), jnp.where(go_hi, mid, hi)
-
-    lo, _ = jax.lax.fori_loop(0, P99_BISECT_ITERS, bisect, (lo, hi))
-    p99 = jnp.min(jnp.where(val_all & (lats_all > lo), lats_all, _BIG),
-                  axis=-1, keepdims=True)
-    p99 = jnp.where(nval > 0, p99, 0.0)
     mlane = jax.lax.broadcasted_iota(jnp.int32, (1, MET_PAD), 1)
-    met_row = (jnp.where(mlane == MET_MAKESPAN, mk, 0.0)
-               + jnp.where(mlane == MET_P99, p99, 0.0)
-               + jnp.where(mlane == MET_LAT_SUM, lsum, 0.0)
-               + jnp.where(mlane == MET_LAT_MAX, lmax, 0.0)
-               + jnp.where(mlane == MET_N_VALID, nval, 0.0))
+    if do_metrics:
+        k = jnp.ceil(jnp.float32(P99_Q) * nval)
+        lo = jnp.full((s_tile, 1), -1.0, jnp.float32)
+        hi = lmax
+
+        def bisect(_, lo_hi):
+            lo, hi = lo_hi
+            mid = jnp.float32(0.5) * (lo + hi)
+            cnt = jnp.sum(jnp.where(val_all & (lats_all <= mid), 1.0, 0.0),
+                          axis=-1, keepdims=True)
+            go_hi = cnt >= k
+            return jnp.where(go_hi, lo, mid), jnp.where(go_hi, mid, hi)
+
+        lo, _ = jax.lax.fori_loop(0, P99_BISECT_ITERS, bisect, (lo, hi))
+        p99 = jnp.min(jnp.where(val_all & (lats_all > lo), lats_all, _BIG),
+                      axis=-1, keepdims=True)
+        p99 = jnp.where(nval > 0, p99, 0.0)
+        met_row = (jnp.where(mlane == MET_MAKESPAN, mk, 0.0)
+                   + jnp.where(mlane == MET_P99, p99, 0.0)
+                   + jnp.where(mlane == MET_LAT_SUM, lsum, 0.0)
+                   + jnp.where(mlane == MET_LAT_MAX, lmax, 0.0)
+                   + jnp.where(mlane == MET_N_VALID, nval, 0.0))
+    else:
+        met_row = jnp.zeros((s_tile, MET_PAD), jnp.float32)
     if not grid_2d:
         metrics_ref[...] = met_row
         return
@@ -659,8 +684,12 @@ def sched_stream_call(object_ids: jax.Array, lengths: jax.Array,
                       alpha: float, window_dt: float, policy: str,
                       observe: bool, renorm: bool, trial_tile: int = 1,
                       nltr_n: int = 2, probe_choices: int = 2,
-                      interpret: bool = False):
+                      ablate: int = 0, interpret: bool = False):
     """Temporal stream kernel over T independent streams (clients/trials).
+
+    ``ablate`` drops trailing window phases for differential profiling
+    (see `_sched_stream_kernel`); outputs past the dropped phase are
+    zeros, so nonzero levels are for timing only.
 
     object_ids/lengths/valid: (T, N) with N = W * window_size;
     tables: (T, 4, M_pad) packed log tensors; seeds: (T, 1) uint32;
@@ -685,7 +714,7 @@ def sched_stream_call(object_ids: jax.Array, lengths: jax.Array,
         n_servers=n_servers, m_pad=m_pad, t_tile=tt, threshold=threshold,
         lam=lam, alpha=alpha, window_dt=window_dt, policy=policy,
         observe=observe, renorm=renorm, nltr_n=nltr_n,
-        probe_choices=probe_choices)
+        probe_choices=probe_choices, ablate=ablate)
     return pl.pallas_call(
         kernel,
         grid=(t // tt,),

@@ -159,7 +159,8 @@ def sched_stream(object_ids: jax.Array, lengths: jax.Array,
                                              "window_dt", "policy",
                                              "observe", "renorm",
                                              "trial_tile", "nltr_n",
-                                             "probe_choices", "interpret"))
+                                             "probe_choices", "ablate",
+                                             "interpret"))
 def sched_stream_batch(object_ids: jax.Array, lengths: jax.Array,
                        valid: jax.Array, tables: jax.Array, seeds: jax.Array,
                        win_rates: jax.Array, *, n_servers: int,
@@ -169,6 +170,7 @@ def sched_stream_batch(object_ids: jax.Array, lengths: jax.Array,
                        observe: bool = True, renorm: bool = True,
                        trial_tile: Optional[int] = None,
                        nltr_n: int = 2, probe_choices: int = 2,
+                       ablate: int = 0,
                        interpret: Optional[bool] = None
                        ) -> Tuple[jax.Array, jax.Array, jax.Array,
                                   jax.Array, jax.Array]:
@@ -187,6 +189,11 @@ def sched_stream_batch(object_ids: jax.Array, lengths: jax.Array,
     Returns (choices (T, N) int32, latencies (T, N) f32, final_tables
     (T, 4, M) f32, window_loads (T, W, M) f32, metrics (T, N_METRICS)
     f32 in `policy_core.MET_*` order — the fused in-VMEM reduction).
+
+    ``ablate`` > 0 drops trailing kernel phases (1 = fused metrics, 2 =
+    + step loop, 3 = + window-start plan) for DIFFERENTIAL per-phase
+    profiling (DESIGN.md §16); ablated outputs are zeros past the
+    dropped phase, so nonzero levels are for timing only.
     """
     _check_policy(policy, n_servers, nltr_n)
     interpret = _auto_interpret(interpret)
@@ -220,7 +227,7 @@ def sched_stream_batch(object_ids: jax.Array, lengths: jax.Array,
         n_servers=n_servers, window_size=window_size, threshold=threshold,
         lam=lam, alpha=alpha, window_dt=window_dt, policy=policy,
         observe=observe, renorm=renorm, trial_tile=tile, nltr_n=nltr_n,
-        probe_choices=probe_choices, interpret=interpret)
+        probe_choices=probe_choices, ablate=ablate, interpret=interpret)
     return (choices[:t], lats[:t], ftab[:t, :, :m], wloads[:t, :, :m],
             metrics[:t, :N_METRICS])
 

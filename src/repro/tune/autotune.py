@@ -1,0 +1,105 @@
+"""The lowering autotuner: sweep tile candidates, cache the winner.
+
+For one simulation configuration the tuner prepares the trial batch
+once (`simulate._prep_trials`), then times the jitted scheduling stage
+(`simulate._sched_trials`) for every candidate (trial_tile,
+client_tile) shape and stores the fastest under the configuration's
+`repro.tune.table.config_key` in the versioned on-disk table.  Only the
+SCHEDULING stage is timed — prep/post are tile-invariant, so including
+them would just dilute the signal.
+
+Tiles stay association parameters throughout: a candidate run resolves
+its pair through the same `simulate` dispatch as production, and the
+cached winner is replayed through `repro.tune.table.resolve_sim_tiles`
+— so a tuned run is one of the bit-exact results the contract already
+pins, just the fastest-lowered one (DESIGN.md §16).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, List, Optional, Tuple
+
+from repro.core.policy_core import (DEFAULT_TRIAL_TILE, resolve_client_tile,
+                                    resolve_trial_tile)
+from repro.tune import profile, table
+
+# Candidate depths for each tile axis; every value is clamped to the
+# instance (dedup keeps the sweep small).  The stream-sublane product
+# tt * ct of a 2-D candidate is capped so the per-program VMEM working
+# set stays well under the ~16 MB budget at paper scale.
+TRIAL_TILE_CANDIDATES = (DEFAULT_TRIAL_TILE, 16, 32, 64, 128)
+CLIENT_TILE_CANDIDATES = (8, 16, 32, 64)
+MAX_STREAM_SUBLANES = 512
+
+
+def candidate_tiles(n_trials: int, n_clients: int = 1,
+                    form: str = "batch") -> List[Tuple[int, int]]:
+    """Deduplicated, clamped (trial_tile, client_tile) candidates."""
+    tts = sorted({resolve_trial_tile(n_trials, tt)
+                  for tt in TRIAL_TILE_CANDIDATES + (n_trials,)})
+    if form == "batch":
+        return [(tt, 1) for tt in tts]
+    cts = sorted({resolve_client_tile(n_clients, ct)
+                  for ct in CLIENT_TILE_CANDIDATES + (n_clients,)})
+    return [(tt, ct) for tt in tts for ct in cts
+            if tt * ct <= MAX_STREAM_SUBLANES]
+
+
+def _device_count(cfg) -> int:
+    if cfg.mesh_shape is None:
+        return 1
+    n = 1
+    for s in cfg.mesh_shape:
+        n *= int(s)
+    return n
+
+
+def tune_config(cfg, policy, log_cfg=None, *, reps: int = 3, seed: int = 0,
+                path: Optional[str] = None,
+                timer: Optional[Callable[[Callable[[], object]], float]]
+                = None) -> Tuple[str, dict]:
+    """Time every candidate tile shape for ``(cfg, policy)`` and cache
+    the winner; returns ``(key, entry)``.
+
+    ``timer`` (tests) overrides the wall-clock measurement: it receives
+    an argless runnable for one candidate and returns its cost in
+    seconds — with a deterministic timer the sweep, the winner and the
+    written table bytes are all reproducible.
+    """
+    import jax
+
+    from repro.core import simulate
+
+    if log_cfg is None:
+        log_cfg = simulate.default_log_cfg(cfg)
+    timer = timer or (lambda run: profile.median_time(run, reps=reps))
+    form = "grid" if cfg.client_model == "per_client" else "batch"
+
+    keys = jax.random.split(jax.random.key(seed), cfg.n_trials)
+    prep_jit = jax.jit(simulate._prep_trials, static_argnums=(1, 2))
+    _, _, works, states, traces, k_sched = jax.block_until_ready(
+        prep_jit(keys, cfg, log_cfg))
+    sched_jit = jax.jit(simulate._sched_trials, static_argnums=(0, 1, 2))
+
+    results = []
+    for tt, ct in candidate_tiles(cfg.n_trials, cfg.n_clients, form):
+        cand = dataclasses.replace(cfg, trial_tile=tt, client_tile=ct,
+                                   tiles="default")
+        secs = timer(lambda: sched_jit(cand, policy, log_cfg, works,
+                                       states, k_sched, traces))
+        results.append((float(secs), tt, ct))
+    # ties break toward the shallower (least-memory) shape: sort on
+    # (time, tt, ct) and take the head
+    secs, tt, ct = sorted(results)[0]
+    total_req = cfg.n_trials * cfg.n_requests
+    entry = {"trial_tile": tt, "client_tile": ct,
+             "sched_s": secs, "req_s": total_req / max(secs, 1e-12)}
+    key = table.config_key(
+        policy=policy.name, backend=cfg.backend, n_servers=cfg.n_servers,
+        n_requests=cfg.n_requests,
+        n_clients=(cfg.n_clients if form == "grid" else 1),
+        n_trials=cfg.n_trials, window_size=cfg.window_size,
+        device_count=_device_count(cfg), form=form)
+    table.store(key, entry, path)
+    return key, entry

@@ -1,0 +1,155 @@
+"""Wall-clock profiling hooks + the differential kernel phase profiler.
+
+Two layers (DESIGN.md §16):
+
+* STAGE HOOKS — `simulate._run_batched` and `engine.run_stream_batch`
+  wrap their pipeline stages in :func:`stage`.  The hooks are inert (a
+  no-op context) unless a :func:`collect` block is active, so they cost
+  nothing on the hot path and nothing under tracing; a profiler that
+  wants real wall numbers runs the pipeline eagerly (or stage-jitted,
+  see :func:`pipeline_stage_profile`) inside ``collect()``.  Timing
+  lives HERE, not in the engine files — the scheduling surface is under
+  the `contractcheck` CC-TIME rule (no clocks near the contract code).
+
+* KERNEL PHASE PROFILER — :func:`kernel_phase_profile` attributes the
+  trial-grid kernel's wall time to its window phases by DIFFERENTIAL
+  timing over the kernel's cumulative ``ablate`` levels (0 = full, 1 =
+  no fused metrics, 2 = also no step loop, 3 = also no sort/plan):
+  ``metrics_s = t0 - t1``, ``steps_s = t1 - t2``, ``plan_s = t2 - t3``
+  and ``dispatch_s = t3`` (grid dispatch + per-window renorm/drain
+  bookkeeping — the interpret-mode floor).  A clock inside the fused
+  kernel body is impossible (and banned by CC-TIME), so ablation is the
+  only honest per-phase attribution.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import time
+from typing import Callable, Dict, Iterator, Optional
+
+_ACTIVE: Optional[Dict[str, float]] = None
+
+
+@contextlib.contextmanager
+def collect() -> Iterator[Dict[str, float]]:
+    """Activate the stage hooks; yields the {stage: seconds} dict they
+    accumulate into (re-entrant: nested collects see their own dict)."""
+    global _ACTIVE
+    prev, _ACTIVE = _ACTIVE, {}
+    try:
+        yield _ACTIVE
+    finally:
+        _ACTIVE = prev
+
+
+@contextlib.contextmanager
+def stage(name: str) -> Iterator[None]:
+    """Accumulate the block's wall time under ``name`` when a collect()
+    is active; otherwise a zero-cost no-op."""
+    if _ACTIVE is None:
+        yield
+        return
+    t0 = time.perf_counter()
+    try:
+        yield
+    finally:
+        _ACTIVE[name] = _ACTIVE.get(name, 0.0) + time.perf_counter() - t0
+
+
+def median_time(run: Callable[[], object], reps: int = 3) -> float:
+    """Median wall seconds of ``run()`` over ``reps`` timed calls after
+    one untimed warmup (compile + cache)."""
+    import jax
+
+    jax.block_until_ready(run())
+    times = []
+    for _ in range(max(reps, 1)):
+        t0 = time.perf_counter()
+        jax.block_until_ready(run())
+        times.append(time.perf_counter() - t0)
+    times.sort()
+    return times[len(times) // 2]
+
+
+def kernel_phase_profile(*, n_servers: int = 100, n_requests: int = 2000,
+                         window_size: int = 100, n_trials: int = 100,
+                         policy: str = "ect", threshold: float = 0.05,
+                         trial_tile: Optional[int] = None, reps: int = 3,
+                         seed: int = 0) -> Dict[str, float]:
+    """Per-window-phase wall-time attribution of the trial-grid kernel
+    (differential over ``ablate`` levels; see module docstring).
+
+    Returns ``{"total_s", "metrics_s", "steps_s", "plan_s",
+    "dispatch_s"}`` — the last four are clamped nonnegative and the
+    deltas are taken on one shared prep, so engine-side dispatch costs
+    cancel out of every phase except the ``dispatch_s`` floor."""
+    import jax
+
+    from repro.core import simulate
+    from repro.core.policies import PolicyConfig
+    from repro.core.statlog import LogConfig
+
+    cfg = simulate.SimConfig(n_servers=n_servers, n_requests=n_requests,
+                             window_size=window_size, n_trials=n_trials,
+                             backend="kernel", trial_tile=trial_tile)
+    pol = PolicyConfig(name=policy, threshold=threshold, rng="lcg")
+    log_cfg = LogConfig(n_servers=n_servers,
+                        lam=simulate.default_log_cfg(cfg).lam)
+    keys = jax.random.split(jax.random.key(seed), n_trials)
+    prep_jit = jax.jit(simulate._prep_trials, static_argnums=(1, 2))
+    _, _, works, states, traces, k_sched = jax.block_until_ready(
+        prep_jit(keys, cfg, log_cfg))
+
+    from repro.core import engine
+
+    def runner(level: int) -> Callable[[], object]:
+        fn = jax.jit(lambda st, w, k: engine.run_stream_batch(
+            st, w, k, policy=pol, log_cfg=log_cfg,
+            window_size=cfg.window_size, group_steps=True, traces=traces,
+            window_dt=0.0, observe=False, trial_tile=cfg.trial_tile,
+            ablate=level))
+        return lambda: fn(states, works, k_sched)
+
+    t = [median_time(runner(level), reps=reps) for level in range(4)]
+    return {
+        "total_s": t[0],
+        "metrics_s": max(t[0] - t[1], 0.0),
+        "steps_s": max(t[1] - t[2], 0.0),
+        "plan_s": max(t[2] - t[3], 0.0),
+        "dispatch_s": t[3],
+    }
+
+
+def pipeline_stage_profile(cfg, policy, log_cfg, *, reps: int = 3,
+                           seed: int = 0) -> Dict[str, float]:
+    """Per-stage wall times of the `simulate._run_batched` pipeline —
+    each stage jitted independently (cfg/policy/log_cfg static, the
+    DESIGN.md §14 property) and timed end to end."""
+    import jax
+
+    from repro.core import simulate
+
+    keys = jax.random.split(jax.random.key(seed), cfg.n_trials)
+    prep_jit = jax.jit(simulate._prep_trials, static_argnums=(1, 2))
+    sched_jit = jax.jit(simulate._sched_trials, static_argnums=(0, 1, 2))
+    post_jit = jax.jit(simulate._post_trials, static_argnums=(0,))
+
+    out: Dict[str, float] = {}
+    with collect() as stages:
+        with stage("prep"):
+            prep = jax.block_until_ready(prep_jit(keys, cfg, log_cfg))
+        init, strag_mask, works, states, traces, k_sched = prep
+        with stage("sched"):
+            sched = jax.block_until_ready(sched_jit(
+                cfg, policy, log_cfg, works, states, k_sched, traces))
+        with stage("post"):
+            jax.block_until_ready(post_jit(
+                cfg, init, strag_mask, works, traces, *sched))
+    # first pass included compilation; re-time the dominant sched stage
+    out["prep_s"] = stages["prep"]
+    out["post_s"] = stages["post"]
+    out["sched_s"] = median_time(
+        lambda: sched_jit(cfg, policy, log_cfg, works, states, k_sched,
+                          traces), reps=reps)
+    return out

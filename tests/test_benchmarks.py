@@ -74,3 +74,108 @@ def test_trajectory_empty_list_renders_without_error(tmp_path, capsys):
     path.write_text("[]")
     assert sched_perf.trajectory(str(path), str(tmp_path / "f.png")) == []
     assert "is empty" in capsys.readouterr().out
+
+
+# ----------------------------------------------- git-dirty stamping (§16)
+
+def test_stamp_git_warns_loudly_on_dirty_tree(monkeypatch, capsys):
+    monkeypatch.setattr(sched_perf, "_git_sha", lambda: "f" * 40)
+    monkeypatch.setattr(sched_perf, "_git_dirty", lambda: True)
+    point = sched_perf._stamp_git({})
+    assert point["git_dirty"] is True
+    assert point["git_sha"] == "f" * 40
+    err = capsys.readouterr().err
+    assert "DIRTY" in err and "regression baseline" in err
+
+
+def test_stamp_git_silent_on_clean_tree(monkeypatch, capsys):
+    monkeypatch.setattr(sched_perf, "_git_sha", lambda: "a" * 40)
+    monkeypatch.setattr(sched_perf, "_git_dirty", lambda: False)
+    point = sched_perf._stamp_git({})
+    assert point["git_dirty"] is False
+    assert capsys.readouterr().err == ""
+
+
+def test_trajectory_renders_dirty_marker_column(tmp_path, capsys):
+    """Points stamped git_dirty render a D in the dirty column; clean
+    points a ·; pre-stamp points a ?."""
+    history = [
+        {"ts": 1700000000.0, "phase_s_rr": 5.0},                 # pre-stamp
+        {"ts": 1700000100.0, "phase_s_rr": 5.0, "git_dirty": True},
+        {"ts": 1700000200.0, "phase_s_rr": 5.0, "git_dirty": False},
+    ]
+    path = tmp_path / "BENCH_sched.json"
+    path.write_text(json.dumps(history))
+    sched_perf.trajectory(str(path), str(tmp_path / "f.png"))
+    out = capsys.readouterr().out
+    lines = [ln for ln in out.splitlines() if ln.strip()]
+    header = next(ln for ln in lines if "dirty" in ln)
+    col = header.index("dirty") + len("dirty") - 1
+    rows = lines[lines.index(header) + 1:lines.index(header) + 4]
+    assert [row[col] for row in rows] == ["?", "D", "·"]
+
+
+def test_latest_bench_point_carries_dirty_stamp():
+    """The shipped BENCH_sched.json's newest point must carry the
+    git_dirty stamp — the marker the regression gate and the trajectory
+    column both key on."""
+    import os
+    if not os.path.exists(sched_perf.BENCH_PATH):
+        pytest.skip("no BENCH_sched.json in this checkout")
+    with open(sched_perf.BENCH_PATH) as f:
+        history = json.load(f)
+    assert isinstance(history, list) and history
+    latest = history[-1]
+    assert isinstance(latest.get("git_dirty"), bool)
+    assert isinstance(latest.get("git_sha"), str)
+
+
+# ------------------------------------------- regression gate (run.py)
+
+run_mod = pytest.importorskip("benchmarks.run")
+
+CLEAN_BASE = {"ts": 1.0, "git_sha": "b" * 40, "git_dirty": False,
+              "kernel_req_s": 100000.0, "kernel_batch_req_s": 400000.0,
+              "sharded_req_s_8d": 300000.0}
+
+
+def test_check_regression_passes_within_tolerance(tmp_path, capsys):
+    latest = {"ts": 2.0, "git_sha": "c" * 40, "git_dirty": False,
+              "kernel_req_s": 90000.0, "kernel_batch_req_s": 395000.0,
+              "sharded_req_s_8d": 290000.0}
+    p = tmp_path / "BENCH.json"
+    p.write_text(json.dumps([CLEAN_BASE, latest]))
+    assert run_mod.check_regression(str(p)) == 0
+    assert "ok (3 series)" in capsys.readouterr().out
+
+
+def test_check_regression_fails_past_tolerance(tmp_path, capsys):
+    latest = {"ts": 2.0, "git_sha": "c" * 40,
+              "kernel_req_s": 100000.0,
+              "kernel_batch_req_s": 100000.0}       # -75%: regressed
+    p = tmp_path / "BENCH.json"
+    p.write_text(json.dumps([CLEAN_BASE, latest]))
+    assert run_mod.check_regression(str(p)) == 1
+    out = capsys.readouterr().out
+    assert "REGRESSED" in out and "kernel_batch_req_s" in out
+
+
+def test_check_regression_skips_dirty_baselines(tmp_path, capsys):
+    dirty = dict(CLEAN_BASE, git_dirty=True,
+                 kernel_batch_req_s=9999999.0)      # tempting but dirty
+    latest = {"ts": 3.0, "kernel_batch_req_s": 390000.0}
+    p = tmp_path / "BENCH.json"
+    p.write_text(json.dumps([CLEAN_BASE, dirty, latest]))
+    assert run_mod.check_regression(str(p)) == 0    # vs CLEAN_BASE, not dirty
+    assert "ok" in capsys.readouterr().out
+
+
+def test_check_regression_trivial_passes(tmp_path, capsys):
+    p = tmp_path / "BENCH.json"
+    assert run_mod.check_regression(str(p)) == 0            # missing
+    p.write_text(json.dumps([CLEAN_BASE]))
+    assert run_mod.check_regression(str(p)) == 0            # one point
+    p.write_text(json.dumps([{"ts": 1.0, "git_dirty": True},
+                             {"ts": 2.0}]))
+    assert run_mod.check_regression(str(p)) == 0            # no clean base
+    capsys.readouterr()

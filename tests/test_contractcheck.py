@@ -136,6 +136,29 @@ def dispatch(t, trial_tile=None):
     return resolve_trial_tile(t, trial_tile)
 """
 
+BAD_TILE = """
+def dispatch(cfg):
+    return kernel(tile=cfg.trial_tile)
+"""
+
+GOOD_TILE = """
+from repro.tune.table import resolve_sim_tiles
+def dispatch(cfg):
+    tt, ct = resolve_sim_tiles(mode=cfg.tiles, trial_tile=cfg.trial_tile,
+                               client_tile=cfg.client_tile)
+    return tt, ct
+
+def resolve_grid_tiles(n_trials, cfg):
+    return cfg.trial_tile                 # resolver bodies are blessed
+"""
+
+SIMCONFIG_TILE = """
+class SimConfig:
+    def __post_init__(self):
+        if self.trial_tile is not None and self.trial_tile < 1:
+            raise ValueError("bad tile")
+"""
+
 BAD_TWIN = """
 import numpy as np
 import jax.numpy as jnp
@@ -216,6 +239,20 @@ def test_cc_assoc():
     assert ids(lint(BAD_ASSOC_DEFAULT, DISPATCH)) == {"CC-ASSOC"}
     # resolution inside the registered resolver is the one blessed home
     assert ids(lint(GOOD_ASSOC, DISPATCH)) == set()
+
+
+def test_cc_tile():
+    """§16: raw attribute reads of tile fields are flagged; feeding them
+    TO a resolver (or reading them inside one) is the blessed shape."""
+    assert ids(lint(BAD_TILE, DISPATCH)) == {"CC-TILE"}
+    assert ids(lint(GOOD_TILE, DISPATCH)) == set()
+
+
+def test_cc_tile_simconfig_allowance():
+    # SimConfig.__post_init__ validates its own tile fields before any
+    # resolver sees them — allowlisted in the shipped config
+    assert ids(lint(SIMCONFIG_TILE, "src/repro/core/simulate.py")) == set()
+    assert ids(lint(SIMCONFIG_TILE, DISPATCH)) == {"CC-TILE"}
 
 
 def test_cc_twin():
