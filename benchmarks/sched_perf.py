@@ -432,14 +432,26 @@ def tuned_kernel_throughput(n_servers: int = 100, n_requests: int = 2000,
     out: Dict[str, float] = {
         "n_servers": n_servers, "n_requests": n_requests,
         "n_trials": n_trials, "reps": reps, "policy": policy}
-    warm = {}
-    for mode in ("default", "tuned"):
-        mcfg = dataclasses.replace(cfg, tiles=mode)
-        dt, w = _median_time(
-            lambda: simulate.run_trials(key, mcfg, pol, log_cfg), reps)
-        warm[mode] = w
-        out[f"{mode}_s"] = dt
-        out[f"{mode}_req_s"] = n_trials * n_requests / dt
+    # interleaved best-of-reps: the two lowerings run the same
+    # deterministic work, so alternating reps and keeping each mode's
+    # minimum decorrelates machine drift over the long bench run —
+    # a median of back-to-back blocks recorded phantom 0.97x/1.25x
+    # "speedups" that a quiet-process A/B could not reproduce
+    modes = {m: dataclasses.replace(cfg, tiles=m)
+             for m in ("default", "tuned")}
+    warm, best = {}, {m: float("inf") for m in modes}
+    for m, mcfg in modes.items():
+        warm[m] = jax.block_until_ready(
+            simulate.run_trials(key, mcfg, pol, log_cfg))
+    for _ in range(max(reps, 1)):
+        for m, mcfg in modes.items():
+            t0 = time.time()
+            jax.block_until_ready(simulate.run_trials(key, mcfg, pol,
+                                                      log_cfg))
+            best[m] = min(best[m], time.time() - t0)
+    for m in modes:
+        out[f"{m}_s"] = best[m]
+        out[f"{m}_req_s"] = n_trials * n_requests / best[m]
     out["speedup"] = out["default_s"] / out["tuned_s"]
     out["tuned_bit_exact"] = bool(all(
         (np.asarray(getattr(warm["tuned"], f))
@@ -449,7 +461,7 @@ def tuned_kernel_throughput(n_servers: int = 100, n_requests: int = 2000,
             else "trial grid")
     print(f"\n== tuned-lowering sweep throughput ({n_servers} OSS x "
           f"{n_requests} reqs x {n_trials} trials, {form}, "
-          f"policy={policy}, median of {reps}) ==")
+          f"policy={policy}, interleaved best of {reps}) ==")
     for mode in ("default", "tuned"):
         print(f"  {mode:>8s} tiles: {out[f'{mode}_s']:8.3f}s  "
               f"{out[f'{mode}_req_s']:10.0f} req/s aggregate")

@@ -73,7 +73,7 @@ def tune_config(cfg, policy, log_cfg=None, *, reps: int = 3, seed: int = 0,
 
     if log_cfg is None:
         log_cfg = simulate.default_log_cfg(cfg)
-    timer = timer or (lambda run: profile.median_time(run, reps=reps))
+    timer = timer or (lambda run: profile.best_time(run, reps=reps))
     form = "grid" if cfg.client_model == "per_client" else "batch"
 
     keys = jax.random.split(jax.random.key(seed), cfg.n_trials)

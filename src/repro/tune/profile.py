@@ -72,6 +72,24 @@ def median_time(run: Callable[[], object], reps: int = 3) -> float:
     return times[len(times) // 2]
 
 
+def best_time(run: Callable[[], object], reps: int = 3) -> float:
+    """Best (minimum) wall seconds of ``run()`` over ``reps`` timed
+    calls after one untimed warmup.  The workload is deterministic, so
+    every rep above the minimum is measurement noise (scheduler
+    preemption, cache pollution from a neighbouring stage); on a busy
+    single-core container one such spike under a median flips candidate
+    winners between tuning runs, while the minimum stays stable."""
+    import jax
+
+    jax.block_until_ready(run())
+    best = float("inf")
+    for _ in range(max(reps, 1)):
+        t0 = time.perf_counter()
+        jax.block_until_ready(run())
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
 def kernel_phase_profile(*, n_servers: int = 100, n_requests: int = 2000,
                          window_size: int = 100, n_trials: int = 100,
                          policy: str = "ect", threshold: float = 0.05,

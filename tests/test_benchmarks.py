@@ -109,7 +109,9 @@ def test_trajectory_renders_dirty_marker_column(tmp_path, capsys):
     sched_perf.trajectory(str(path), str(tmp_path / "f.png"))
     out = capsys.readouterr().out
     lines = [ln for ln in out.splitlines() if ln.strip()]
-    header = next(ln for ln in lines if "dirty" in ln)
+    # tmp_path embeds this test's name, so the banner line (which prints
+    # the json path) also contains "dirty" — key on the header shape
+    header = next(ln for ln in lines if "when" in ln and "dirty" in ln)
     col = header.index("dirty") + len("dirty") - 1
     rows = lines[lines.index(header) + 1:lines.index(header) + 4]
     assert [row[col] for row in rows] == ["?", "D", "·"]
